@@ -1,0 +1,94 @@
+"""Kernel micro-benchmarks: CPU wall time of the Pallas kernels (interpret
+mode) vs the pure-jnp references.  These validate plumbing and give an
+apples-to-apples CPU baseline; TPU timings require real hardware (the
+roofline analysis covers the TPU story)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels():
+    rows = []
+
+    # pulse_chase: btree descent, 64 lanes
+    from repro.core.structures import btree
+    from repro.kernels.pulse_chase import ops as chase_ops
+
+    keys = RNG.choice(np.arange(10**6), size=4096, replace=False).astype(np.int32)
+    values = RNG.integers(0, 10**6, 4096).astype(np.int32)
+    ar, root, height = btree.build(keys, values)
+    it = btree.find_iterator()
+    ptr0, scr0 = it.init(jnp.asarray(keys[:64]), root)
+    st0 = jnp.zeros(64, jnp.int32)
+    logic = chase_ops.iterator_logic(it)
+    for mode, use_pallas in (("interp", True), ("ref", False)):
+        us = _time(
+            lambda: chase_ops.pulse_chase(
+                ar.data, ptr0, scr0, st0, logic_fn=logic, num_steps=height,
+                use_pallas=use_pallas, interpret=True,
+            )
+        )
+        rows.append(dict(name=f"kernel/pulse_chase/{mode}", us_per_call=round(us, 1),
+                         derived=f"lanes=64 steps={height}"))
+
+    # flash attention
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import mha_reference
+
+    q = jnp.asarray(RNG.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), jnp.float32)
+    rows.append(dict(name="kernel/flash_attention/interp",
+                     us_per_call=round(_time(lambda: flash_attention(q, k, v, True, 128, 128, True, True)), 1),
+                     derived="B1 H4 L256 D64"))
+    rows.append(dict(name="kernel/flash_attention/ref",
+                     us_per_call=round(_time(lambda: mha_reference(q, k, v, causal=True)), 1),
+                     derived="B1 H4 L256 D64"))
+
+    # paged attention
+    from repro.kernels.paged_attention.ops import paged_attention
+
+    qd = jnp.asarray(RNG.standard_normal((4, 8, 64)), jnp.float32)
+    kp = jnp.asarray(RNG.standard_normal((64, 16, 4, 64)), jnp.float32)
+    vp = jnp.asarray(RNG.standard_normal((64, 16, 4, 64)), jnp.float32)
+    pt = jnp.asarray(RNG.integers(0, 64, (4, 8)), jnp.int32)
+    ln = jnp.asarray([100, 80, 128, 60], jnp.int32)
+    for mode, use_pallas in (("interp", True), ("ref", False)):
+        rows.append(dict(
+            name=f"kernel/paged_attention/{mode}",
+            us_per_call=round(_time(lambda: paged_attention(qd, kp, vp, pt, ln, interpret=True, use_pallas=use_pallas)), 1),
+            derived="B4 H8 P8x16",
+        ))
+
+    # ssd scan
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    x = jnp.asarray(RNG.standard_normal((2, 512, 4, 64)) * 0.5, jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (2, 512, 4)), jnp.float32)
+    A = jnp.asarray(RNG.uniform(-1, -0.1, (4,)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((2, 512, 64)) * 0.5, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((2, 512, 64)) * 0.5, jnp.float32)
+    for mode, use_pallas in (("interp", True), ("ref", False)):
+        rows.append(dict(
+            name=f"kernel/ssd_scan/{mode}",
+            us_per_call=round(_time(lambda: ssd_scan(x, dt, A, B, C, chunk=128, interpret=True, use_pallas=use_pallas)), 1),
+            derived="B2 L512 H4 N64",
+        ))
+    return rows

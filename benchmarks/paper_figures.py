@@ -1,0 +1,294 @@
+"""One benchmark function per paper table/figure (assignment d).
+
+Engine-side quantities (iterations, crossings, cache hit rates, t_c/t_d,
+pipeline schedules) are REAL measurements; hardware quantities (FPGA
+latency, power) come from the calibrated models in hw_model.py and are
+labeled ``modeled``.  Each function returns CSV-ish rows.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import pulse_paper
+from repro.core.dispatch import AcceleratorSpec
+from repro.core.scheduler import area_coupled, area_pulse, simulate, PowerModel
+from benchmarks import hw_model as hw
+from benchmarks.profiles import ALL_PROFILES
+
+ACCEL = AcceleratorSpec()
+
+
+def table3_workloads():
+    """Table 3: t_c/t_d ratio + iterations per application."""
+    rows = []
+    for name, make in ALL_PROFILES.items():
+        p = make()
+        exp = pulse_paper.WORKLOADS[name]
+        rows.append(
+            dict(
+                name=f"table3/{name}",
+                tc_td=round(p.t_c_ns / p.t_d_ns, 3),
+                paper_tc_td=exp.expected_tc_td,
+                iters=round(p.iters_mean, 1),
+                paper_iters=str(exp.expected_iters),
+                offloaded=p.t_c_ns <= 0.75 * p.t_d_ns,
+            )
+        )
+    return rows
+
+
+def fig7_latency_throughput():
+    """Fig. 7: latency + throughput per system x app x node count."""
+    rows = []
+    for name, make in ALL_PROFILES.items():
+        p = make()
+        for nodes in (1, 2, 4):
+            lat = {
+                "pulse": hw.pulse_latency_ns(p, ACCEL, nodes),
+                "rpc": hw.rpc_latency_ns(p, ACCEL, nodes),
+                "rpc_arm": hw.rpc_latency_ns(p, ACCEL, nodes, clock_ratio=hw.ARM_CLOCK_RATIO, handling_ns=hw.ARM_HANDLING_NS),
+                "cache": hw.cache_latency_ns(p, 0.0625),
+            }
+            thr_pulse, _ = hw.pulse_throughput_mops(p, num_nodes=nodes)
+            thr = {
+                "pulse": thr_pulse,
+                "rpc": hw.rpc_throughput_mops(p, nodes),
+                "rpc_arm": hw.rpc_throughput_mops(
+                    p, nodes, cores=hw.ARM_CORES_PER_NODE,
+                    clock_ratio=hw.ARM_CLOCK_RATIO, handling_ns=hw.ARM_HANDLING_NS,
+                ),
+                "cache": hw.cache_throughput_mops(p, 0.0625),
+            }
+            for sys_ in ("pulse", "rpc", "rpc_arm", "cache"):
+                rows.append(
+                    dict(
+                        name=f"fig7/{name}/{sys_}/n{nodes}",
+                        latency_us=round(lat[sys_] / 1e3, 2),
+                        throughput_mops=round(thr[sys_], 4),
+                    )
+                )
+            rows.append(
+                dict(
+                    name=f"fig7/{name}/speedup_vs_cache/n{nodes}",
+                    latency_x=round(lat["cache"] / lat["pulse"], 1),
+                    throughput_x=round(thr["pulse"] / max(thr["cache"], 1e-9), 1),
+                    paper_range="9-34x lat, 28-171x thr",
+                )
+            )
+    return rows
+
+
+def fig8_energy():
+    """Fig. 8: energy per op (modeled power / measured-profile throughput)."""
+    rows = []
+    for name, make in ALL_PROFILES.items():
+        p = make()
+        e = {s: hw.energy_per_op_uj(p, s) for s in ("pulse", "pulse_asic", "rpc", "rpc_arm")}
+        rows.append(
+            dict(
+                name=f"fig8/{name}",
+                pulse_uj=round(e["pulse"], 3),
+                pulse_asic_uj=round(e["pulse_asic"], 3),
+                rpc_uj=round(e["rpc"], 3),
+                rpc_arm_uj=round(e["rpc_arm"], 3),
+                rpc_over_pulse=round(e["rpc"] / e["pulse"], 2),
+                paper="4.5-5x",
+            )
+        )
+    return rows
+
+
+def fig9_pulse_acc():
+    """Fig. 9: in-network routing vs return-to-CPU, from REAL crossing
+    counts (the distributed-routing subprocess test validates the identical
+    results + ~2x crossings; here the latency impact)."""
+    rows = []
+    for name, make in ALL_PROFILES.items():
+        p = make()
+        for nodes in (2, 4):
+            a = hw.pulse_latency_ns(p, ACCEL, nodes)
+            b = hw.pulse_acc_latency_ns(p, ACCEL, nodes)
+            rows.append(
+                dict(
+                    name=f"fig9/{name}/n{nodes}",
+                    pulse_us=round(a / 1e3, 2),
+                    pulse_acc_us=round(b / 1e3, 2),
+                    acc_over_pulse=round(b / a, 3),
+                    paper="1.02-1.15x",
+                    crossings=round(p.crossings_mean.get(nodes, 0.0), 2),
+                )
+            )
+    return rows
+
+
+def fig10_breakdown():
+    """Fig. 10: accelerator latency components (prototype constants)."""
+    comps = dict(
+        network_stack_ns=ACCEL.network_ns, scheduler_ns=ACCEL.scheduler_ns,
+        tcam_ns=22.0, memory_controller_ns=110.0,
+        interconnect_ns=ACCEL.interconnect_ns, logic_ns=ACCEL.logic_ns,
+    )
+    return [dict(name="fig10/breakdown", **comps)]
+
+
+def table4_pipelines():
+    """Table 4: coupled vs disaggregated area/throughput/latency across
+    (m, n).  Throughput/latency from the event-driven pipeline simulator on
+    the WebService profile; area from the documented FPGA fits."""
+    p = ALL_PROFILES["webservice"]()
+    rows = []
+    base_thr = None
+    net = ACCEL.network_ns * 2 + hw.WIRE_RTT_NS
+    for cores in (1, 2, 3, 4):
+        ss = hw.coupled_steady_state(p, cores)
+        lut, bram = area_coupled(cores)
+        if cores == 1:
+            base_thr = ss.throughput_mops
+        lat = net + p.iters_mean * (p.t_d_ns + p.t_c_ns)
+        rows.append(
+            dict(name=f"table4/coupled/{cores}x{cores}", lut_pct=round(lut, 2),
+                 bram_pct=round(bram, 2), thr_mops=round(ss.throughput_mops, 3),
+                 vs_1x1=f"{(ss.throughput_mops / base_thr - 1) * 100:+.0f}%",
+                 lat_us=round(lat / 1e3, 2), bound=ss.bound)
+        )
+    base_thr_d = None
+    for m in (1, 2, 3, 4):
+        for n in (1, 2, 3, 4):
+            ss = hw.pulse_steady_state(p, m, n)
+            lut, bram = area_pulse(m, n)
+            if m == 1 and n == 1:
+                base_thr_d = ss.throughput_mops
+            lat = net + p.iters_mean * (
+                p.t_d_ns + p.t_c_ns + ACCEL.scheduler_ns + ACCEL.interconnect_ns
+            )
+            rows.append(
+                dict(name=f"table4/pulse/{m}x{n}", lut_pct=round(lut, 2),
+                     bram_pct=round(bram, 2), thr_mops=round(ss.throughput_mops, 3),
+                     vs_1x1=f"{(ss.throughput_mops / base_thr_d - 1) * 100:+.0f}%",
+                     lat_us=round(lat / 1e3, 2), bound=ss.bound)
+            )
+    # the paper's headline: PULSE 1x4 ~ coupled 4x4 throughput at ~40% less area
+    c44 = next(r for r in rows if r["name"] == "table4/coupled/4x4")
+    p14 = next(r for r in rows if r["name"] == "table4/pulse/1x4")
+    rows.append(
+        dict(
+            name="table4/headline",
+            pulse_1x4_vs_coupled_4x4_thr=round(p14["thr_mops"] / c44["thr_mops"], 3),
+            area_saving_pct=round((1 - p14["lut_pct"] / c44["lut_pct"]) * 100, 1),
+            paper="~equal thr, 38% area saving",
+        )
+    )
+    return rows
+
+
+def fig11_eta():
+    """Fig. 11: performance-per-watt vs eta (m=1, n varies)."""
+    p = ALL_PROFILES["webservice"]()
+    pm = PowerModel()
+    rows = []
+    base = None
+    for n in (1, 2, 4, 8, 16):
+        eta = 1.0 / n
+        ss = hw.pulse_steady_state(p, 1, n)
+        watts = pm.pulse_power_w(1, n, ss.logic_util, ss.mem_util)
+        ppw = ss.throughput_mops / watts
+        if n == 1:
+            base = ppw
+        rows.append(
+            dict(name=f"fig11/eta_{eta:.4f}", n_mem_pipes=n,
+                 thr_mops=round(ss.throughput_mops, 3),
+                 watts=round(watts, 2), perf_per_watt_norm=round(ppw / base, 3),
+                 logic_util=round(ss.logic_util, 3), mem_util=round(ss.mem_util, 3),
+                 workload_tc_td=round(p.t_c_ns / p.t_d_ns, 3))
+        )
+    return rows
+
+
+def fig5_allocation():
+    """Appendix Fig. 5: partitioned vs uniform (interleaved) allocation --
+    REAL crossing counts on two memory nodes, modeled latency ratio."""
+    import jax.numpy as jnp
+    from repro.core.structures import btree as bt
+    from benchmarks.profiles import RNG, _trace_paths, _crossings
+
+    n = 20_000
+    keys = np.sort(RNG.choice(np.arange(10**6), size=n, replace=False).astype(np.int32))
+    values = RNG.integers(0, 1000, n).astype(np.int32)
+    rows = []
+    lat = {}
+    for policy in ("sequential", "interleaved"):
+        ar, root, _ = bt.build(keys, values, num_shards=2, policy=policy)
+        it = bt.find_iterator()
+        q = RNG.choice(keys, 256)
+        ptr0, scr0 = it.init(jnp.asarray(q), root)
+        paths = _trace_paths(it, ar, ptr0, scr0)
+        cross = _crossings(ar, lambda *a: paths, (it, ar, ptr0, scr0), (2,))[2]
+        iters = np.mean([len(pp) for pp in paths])
+        p = ALL_PROFILES["wiredtiger"]()
+        lat[policy] = hw.pulse_latency_ns(
+            type(p)(**{**p.__dict__, "iters_mean": iters, "crossings_mean": {2: cross}}),
+            ACCEL, 2,
+        )
+        rows.append(
+            dict(name=f"fig5/{policy}", crossings=round(cross, 2),
+                 latency_us=round(lat[policy] / 1e3, 2))
+        )
+    rows.append(
+        dict(name="fig5/ratio", interleaved_over_partitioned=round(
+            lat["interleaved"] / lat["sequential"], 2), paper="3.7-10.8x")
+    )
+    return rows
+
+
+def appendix_traversal_length():
+    """Appendix: latency scales linearly with traversal length -- REAL
+    engine wall time (CPU JAX) + modeled accelerator latency."""
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.core.structures import linked_list as ll
+    from repro.core.iterator import execute_batched
+
+    rows = []
+    for n in (64, 256, 1024, 4096):
+        keys = np.arange(n, dtype=np.int32)
+        values = np.ones(n, np.int32)
+        ar, head = ll.build(keys, values)
+        it = ll.sum_iterator()
+        ptr0, scr0 = it.init(jnp.asarray([head] * 64, jnp.int32))
+        run = jax.jit(lambda p, s: execute_batched(it, ar, p, s, max_iters=n + 2))
+        run(ptr0, scr0)[0].block_until_ready()
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            run(ptr0, scr0)[0].block_until_ready()
+        wall_us = (time.perf_counter() - t0) / reps * 1e6
+        model_ns = n * (ACCEL.scheduler_ns + ACCEL.mem_latency_ns + 16 / 25 + ACCEL.logic_ns)
+        rows.append(
+            dict(name=f"traversal_len/{n}", nodes=n,
+                 engine_wall_us_cpu=round(wall_us, 1),
+                 modeled_accel_us=round(model_ns / 1e3, 2))
+        )
+    return rows
+
+
+def appendix_bandwidth():
+    """Appendix Fig. 2: memory-bandwidth utilization per system (modeled
+    from measured bytes/request)."""
+    rows = []
+    for name, make in ALL_PROFILES.items():
+        p = make()
+        thr_pulse, _ = hw.pulse_throughput_mops(p)
+        bytes_per_req = p.iters_mean * p.node_bytes
+        for sys_, thr in (
+            ("pulse", thr_pulse),
+            ("rpc", hw.rpc_throughput_mops(p)),
+            ("cache", hw.cache_throughput_mops(p, 0.0625)),
+        ):
+            util = thr * 1e6 * bytes_per_req / (hw.MEM_BW_GBPS * 1e9)
+            rows.append(
+                dict(name=f"bandwidth/{name}/{sys_}",
+                     mem_bw_util=round(min(util, 1.0), 3))
+            )
+    return rows

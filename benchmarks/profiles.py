@@ -1,0 +1,184 @@
+"""Workload profiles: REAL engine measurements for the paper's applications.
+
+Builds the three S6 applications' data structures at benchmark scale, runs
+real traversals through the PULSE engine / iterator executor, and extracts:
+iterations per request, node-boundary crossings (per node count), CPU-cache
+hit rates (LRU sim), and the dispatch model's t_c/t_d.  These feed the
+Fig. 7/8/9/11 latency/energy models in hw_model.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dispatch as dispatch_mod
+from repro.core import translation
+from repro.core.engine import cpu_node_execute
+from repro.core.iterator import execute_batched
+from repro.core.structures import btree, hash_table
+from benchmarks.hw_model import WorkloadProfile
+
+RNG = np.random.default_rng(0)
+
+
+def zipf_keys(keys: np.ndarray, n: int, s: float = 0.99) -> np.ndarray:
+    ranks = np.arange(1, len(keys) + 1, dtype=np.float64)
+    p = ranks ** (-s)
+    p /= p.sum()
+    return RNG.choice(keys, size=n, p=p)
+
+
+def _crossings(arena, visit_fn, queries_ptr0_scr0, node_counts):
+    """Mean owner-boundary crossings per request for several node counts.
+
+    Host-walks each traversal recording the pointer path (the engine's
+    cpu_node path gives identical semantics), then counts owner changes
+    under a range partition into ``n`` nodes.
+    """
+    it, arena_obj, ptr0, scr0 = queries_ptr0_scr0
+    paths = visit_fn(it, arena_obj, ptr0, scr0)
+    out = {}
+    cap = arena_obj.capacity
+    for n in node_counts:
+        bounds = np.linspace(0, cap, n + 1).astype(np.int64)
+        total = 0
+        for path in paths:
+            owners = np.searchsorted(bounds, np.asarray(path), side="right") - 1
+            total += int((np.diff(owners) != 0).sum())
+        out[n] = total / max(len(paths), 1)
+    return out
+
+
+def _trace_paths(it, arena, ptr0, scr0, max_iters=4096):
+    """Pointer path per request (host walk, numpy)."""
+    import jax
+
+    data = np.asarray(arena.data)
+    B = ptr0.shape[0]
+    ptr = np.asarray(ptr0, np.int64).copy()
+    scratch = np.asarray(scr0, np.int32).copy()
+    done = np.zeros(B, bool)
+    paths = [[] for _ in range(B)]
+
+    def fused(node, p, s):
+        if it.step_fn is not None:
+            return it.step_fn(node, p, s)
+        d, ss = it.end_fn(node, p, s)
+        np_, ns = it.next_fn(node, p, ss)
+        return d, jnp.where(d, p, np_), jnp.where(d, ss, ns)
+
+    step = jax.jit(jax.vmap(fused))
+    for _ in range(max_iters):
+        live = ~done & (ptr >= 0)
+        if not live.any():
+            break
+        for b in np.nonzero(live)[0]:
+            paths[b].append(int(ptr[b]))
+        node = data[np.clip(ptr, 0, data.shape[0] - 1)]
+        d, np_, ns = step(jnp.asarray(node), jnp.asarray(ptr, jnp.int32), jnp.asarray(scratch))
+        d, np_, ns = np.asarray(d), np.asarray(np_), np.asarray(ns)
+        scratch[live] = ns[live]
+        newly = live & (d | (np_ < 0))
+        ptr[live & ~newly] = np_[live & ~newly]
+        done |= newly
+    return paths
+
+
+def _hit_rates(it, arena, ptr0, scr0, fracs, working_set_nodes):
+    out = {}
+    for f in fracs:
+        cache_nodes = int(working_set_nodes * f)
+        _, _, _, trace = cpu_node_execute(
+            it, arena, ptr0, scr0, cache_nodes=cache_nodes
+        )
+        out[f] = trace.cache_hits / max(trace.total_fetches, 1)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def webservice_profile(n_keys=50_000, n_buckets=1024, n_queries=512) -> WorkloadProfile:
+    """Hash-table lookups, YCSB-C style zipfian reads (paper: ~48 iters)."""
+    keys = RNG.choice(np.arange(10**7), size=n_keys, replace=False).astype(np.int32)
+    values = RNG.integers(0, 10**6, n_keys).astype(np.int32)
+    ar, heads = hash_table.build(keys, values, n_buckets)
+    it = hash_table.find_iterator(n_buckets)
+    q = zipf_keys(keys, n_queries)
+    ptr0, scr0 = it.init(jnp.asarray(q), jnp.asarray(heads))
+    _, _, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=4096)
+    d = dispatch_mod.offload_decision(it, hash_table.NODE_WORDS)
+    paths = _trace_paths(it, ar, ptr0, scr0)
+    cross = _crossings(ar, lambda *a: paths, (it, ar, ptr0, scr0), (1, 2, 3, 4))
+    hits = _hit_rates(it, ar, ptr0, scr0, (0.0625, 0.25, 1.0), n_keys)
+    return WorkloadProfile(
+        name="webservice",
+        iters_mean=float(np.asarray(iters).mean()),
+        node_bytes=hash_table.NODE_WORDS * 4,
+        response_bytes=8192,  # 8 KB objects (S6)
+        crossings_mean=cross,
+        cache_hit_rate=hits,
+        t_c_ns=d.t_c_ns,
+        t_d_ns=d.t_d_ns,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def wiredtiger_profile(n_keys=200_000, n_queries=512) -> WorkloadProfile:
+    """B+tree point lookups (YCSB-E-ish on 8 B keys)."""
+    keys = RNG.choice(np.arange(10**7), size=n_keys, replace=False).astype(np.int32)
+    values = RNG.integers(0, 10**6, n_keys).astype(np.int32)
+    ar, root, height = btree.build(keys, values)
+    it = btree.find_iterator()
+    q = zipf_keys(np.sort(keys), n_queries)
+    ptr0, scr0 = it.init(jnp.asarray(q), root)
+    _, _, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=64)
+    d = dispatch_mod.offload_decision(it, btree.NODE_WORDS)
+    paths = _trace_paths(it, ar, ptr0, scr0)
+    cross = _crossings(ar, lambda *a: paths, (it, ar, ptr0, scr0), (1, 2, 3, 4))
+    hits = _hit_rates(it, ar, ptr0, scr0, (0.0625, 0.25, 1.0), n_keys // btree.FANOUT)
+    return WorkloadProfile(
+        name="wiredtiger",
+        iters_mean=float(np.asarray(iters).mean()),
+        node_bytes=btree.NODE_WORDS * 4,
+        response_bytes=248,  # 8 B key + 240 B value
+        crossings_mean=cross,
+        cache_hit_rate=hits,
+        t_c_ns=d.t_c_ns,
+        t_d_ns=d.t_d_ns,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def btrdb_profile(n_keys=200_000, n_queries=128, window=1024) -> WorkloadProfile:
+    """Time-series range aggregation over chronologically ordered keys."""
+    keys = np.arange(n_keys, dtype=np.int32)  # time-ordered
+    values = RNG.integers(0, 1000, n_keys).astype(np.int32)
+    ar, root, height = btree.build(keys, values)
+    it = btree.range_aggregate_iterator()
+    lo = RNG.integers(0, n_keys - window, n_queries).astype(np.int32)
+    hi = (lo + window).astype(np.int32)
+    ptr0, scr0 = it.init(jnp.asarray(lo), jnp.asarray(hi), root)
+    _, _, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=8192)
+    d = dispatch_mod.offload_decision(it, btree.NODE_WORDS)
+    paths = _trace_paths(it, ar, ptr0, scr0, max_iters=8192)
+    cross = _crossings(ar, lambda *a: paths, (it, ar, ptr0, scr0), (1, 2, 3, 4))
+    hits = _hit_rates(it, ar, ptr0, scr0, (0.0625, 0.25, 1.0), n_keys // btree.FANOUT)
+    return WorkloadProfile(
+        name="btrdb",
+        iters_mean=float(np.asarray(iters).mean()),
+        node_bytes=btree.NODE_WORDS * 4,
+        response_bytes=32,
+        crossings_mean=cross,
+        cache_hit_rate=hits,
+        t_c_ns=d.t_c_ns,
+        t_d_ns=d.t_d_ns,
+    )
+
+
+ALL_PROFILES = {
+    "webservice": webservice_profile,
+    "wiredtiger": wiredtiger_profile,
+    "btrdb": btrdb_profile,
+}

@@ -1,0 +1,42 @@
+"""Hillclimb runner: re-measures the three chosen cells after each change.
+
+Writes results/hillclimb.json keyed by iteration label.  Run AFTER the
+baseline sweep:
+    PYTHONPATH=src python results/hillclimb_script.py <label> [cell ...]
+cells: whisper | kimi | qwen_decode (default: all three)
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+CELLS = {
+    "whisper": ("whisper_large_v3", "prefill_32k", False),
+    "kimi": ("kimi_k2_1t_a32b", "train_4k", True),
+    "qwen_decode": ("qwen3_4b", "decode_32k", False),
+}
+
+
+def main():
+    label = sys.argv[1]
+    names = sys.argv[2:] or list(CELLS)
+    out_path = Path("results/hillclimb.json")
+    data = json.loads(out_path.read_text()) if out_path.exists() else {}
+    for name in names:
+        arch, shape, mp = CELLS[name]
+        report, dt = run_cell(arch, shape, multi_pod=mp)
+        data[f"{label}|{name}"] = {"compile_s": dt, **report.to_json()}
+        out_path.write_text(json.dumps(data, indent=1))
+    print(f"recorded {label} for {names}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Merges the sweep result files and regenerates the roofline table into
+EXPERIMENTS.md (between the ROOFLINE_TABLE marker and the next section)."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+files = ["results/dryrun.json", "results/dryrun_fast.json", "results/dryrun_complete.json"]
+merged = {}
+for f in files:
+    p = Path(f)
+    if p.exists():
+        for k, v in json.loads(p.read_text()).items():
+            if v.get("ok") or k not in merged:
+                merged[k] = v
+# hillclimb after-rows for reference
+hc = Path("results/hillclimb.json")
+if hc.exists():
+    for k, v in json.loads(hc.read_text()).items():
+        if k.startswith(("after_h2v2", "after_h3")):
+            label, cell = k.split("|")
+            arch = v["arch"]; shape = v["shape"]; mesh = v["mesh"]
+            merged[f"{arch}|{shape}|{mesh}+OPT"] = {"ok": True, **v}
+
+Path("results/dryrun_merged.json").write_text(json.dumps(merged, indent=1))
+
+from repro.launch.report import render  # noqa: E402
+
+table = render("results/dryrun_merged.json")
+md = Path("EXPERIMENTS.md").read_text()
+marker = "<!-- ROOFLINE_TABLE -->"
+head, rest = md.split(marker)
+# keep everything after the next section header
+tail = rest[rest.index("\n## "):]
+Path("EXPERIMENTS.md").write_text(head + marker + "\n\n" + table + "\n" + tail)
+n_ok = sum(1 for v in merged.values() if v.get("ok"))
+print(f"merged {n_ok} ok entries; table inserted")

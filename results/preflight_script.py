@@ -1,0 +1,21 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, traceback
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+
+cells = [
+    ("granite_moe_1b_a400m", "train_4k", False),
+    ("mamba2_780m", "long_500k", False),
+    ("zamba2_7b", "decode_32k", False),
+    ("whisper_large_v3", "prefill_32k", False),
+    ("internvl2_2b", "train_4k", True),
+    ("kimi_k2_1t_a32b", "train_4k", True),
+]
+for arch, shape, mp in cells:
+    try:
+        run_cell(arch, shape, multi_pod=mp)
+    except Exception:
+        print(f"FAILED {arch} x {shape}")
+        traceback.print_exc()
+print("PREFLIGHT DONE")

@@ -1,0 +1,65 @@
+"""Completion pass: remaining cells. Decode/long cells run the full probe
+pipeline; the slow-compiling SSM train/prefill cells run compile-only
+(memory analysis + reported cost, flagged probeless=True) to fit the wall
+clock -- lower+compile success is the hard deliverable."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, time, traceback
+from pathlib import Path
+sys.path.insert(0, "src")
+import jax
+from repro.configs import SHAPES
+from repro.launch.dryrun import run_cell, _dryrun_cfg, _compile, _cost_of
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+
+FULL = [  # fast cells: full probe pipeline
+    ("zamba2_7b", "decode_32k"), ("zamba2_7b", "long_500k"),
+    ("mamba2_780m", "decode_32k"), ("mamba2_780m", "long_500k"),
+]
+PROBELESS = [  # slow SSD-backward compiles: compile-only
+    ("zamba2_7b", "prefill_32k"),
+    ("mamba2_780m", "train_4k"), ("mamba2_780m", "prefill_32k"),
+]
+out = Path("results/dryrun_complete.json")
+results = json.loads(out.read_text()) if out.exists() else {}
+
+for arch, shape_name in FULL + PROBELESS:
+    probeless = (arch, shape_name) in PROBELESS
+    for mp in (False, True):
+        key = f"{arch}|{shape_name}|{'2x16x16' if mp else '16x16'}"
+        if results.get(key, {}).get("ok"):
+            continue
+        t0 = time.time()
+        try:
+            if not probeless:
+                report, dt = run_cell(arch, shape_name, multi_pod=mp)
+                results[key] = {"ok": True, "compile_s": dt, **report.to_json()}
+            else:
+                cfg = _dryrun_cfg(arch)
+                shape = SHAPES[shape_name]
+                mesh = make_production_mesh(multi_pod=mp)
+                compiled = _compile(cfg, shape, mesh)
+                mem = compiled.memory_analysis()
+                rep = _cost_of(compiled)
+                dt = time.time() - t0
+                print(f"=== {key} compile-only OK ({dt:.1f}s)")
+                print(f"memory_analysis: {mem}")
+                r = rl.analyze(
+                    arch=arch, shape_name=shape_name,
+                    mesh_name="2x16x16" if mp else "16x16",
+                    chips=512 if mp else 256,
+                    cost={"flops": rep["flops"], "bytes accessed": rep["bytes"]},
+                    hlo_text="", memory_stats=mem,
+                    model_flops=rl.model_flops_for(cfg, shape),
+                    note="probeless: scan-body costs counted once (undercounted)",
+                )
+                r.collective_bytes = rep["coll"]
+                r.collective_s = rep["coll"] / rl.ICI_BW
+                results[key] = {"ok": True, "compile_s": dt, "probeless": True,
+                                **r.to_json()}
+        except Exception as e:
+            traceback.print_exc()
+            results[key] = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        out.write_text(json.dumps(results, indent=1))
+print("COMPLETE-SWEEP DONE", sum(1 for v in results.values() if v.get("ok")), "/", len(results))

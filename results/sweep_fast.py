@@ -1,0 +1,28 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, traceback
+from pathlib import Path
+sys.path.insert(0, "src")
+from repro.configs import SHAPES, all_cells
+from repro.launch.dryrun import run_cell
+
+ARCHS = ["qwen3_0_6b", "qwen1_5_4b", "qwen3_4b", "olmo_1b", "mamba2_780m",
+         "internvl2_2b"]  # internvl2: retry the fixed prefill cells
+out = Path("results/dryrun_fast.json")
+results = json.loads(out.read_text()) if out.exists() else {}
+done = json.loads(Path("results/dryrun.json").read_text())
+for arch, shape in all_cells():
+    if arch not in ARCHS:
+        continue
+    for mp in (False, True):
+        key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+        if results.get(key, {}).get("ok") or done.get(key, {}).get("ok"):
+            continue
+        try:
+            report, dt = run_cell(arch, shape, multi_pod=mp)
+            results[key] = {"ok": True, "compile_s": dt, **report.to_json()}
+        except Exception as e:
+            traceback.print_exc()
+            results[key] = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        out.write_text(json.dumps(results, indent=1))
+print("FAST SWEEP DONE", sum(1 for v in results.values() if v.get("ok")), "/", len(results))

@@ -1,0 +1,174 @@
+"""Architecture configs: the 10 assigned archs + the paper's own workloads.
+
+Each ``<arch>.py`` exports ``CONFIG`` (exact published dims) and the registry
+maps ``--arch <id>`` to it.  ``reduced()`` gives the CPU-smoke-test variant
+(same family, tiny dims).  Input shape sets are defined here too
+(train_4k / prefill_32k / decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention variants
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    nonparametric_norm: bool = False  # OLMo: LN without learned params
+    rope_theta: float = 10000.0
+    attn_chunk: int = 1024  # kv-chunk for the XLA blockwise attention
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_renormalize: bool = True
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    hybrid_attn_every: int = 0  # zamba: shared attn block every k mamba blocks
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    n_audio_frames: int = 1500
+    # vlm
+    n_patches: int = 0
+    # numerics / execution
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    remat: str = "none"  # none | dots | full
+    optimizer: str = "adamw"  # adamw | adafactor
+    attn_backend: str = "xla"  # xla | pallas | pallas_interpret
+    ssm_backend: str = "xla"
+    scan_layers: bool = True  # False: Python-unrolled stack (cost probes)
+    ce_chunk: int = 512  # sequence chunk for the fused cross-entropy
+    ssm_unroll: bool = False  # unroll the SSD chunk scan (cost probes)
+    decode_kv_f32: bool = True  # False: bf16 cache reads w/ f32 MXU accum (H3)
+    # citation per the assignment table
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        hd = self.hd
+        attn = D * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * D
+        if self.family in ("ssm",):
+            d_in = self.ssm_expand * D
+            per = D * (2 * d_in + 2 * self.ssm_state + d_in // self.ssm_head_dim) + d_in * D
+            return self.n_layers * per + 2 * V * D
+        if self.family == "hybrid":
+            d_in = self.ssm_expand * D
+            per = D * (2 * d_in + 2 * self.ssm_state + d_in // self.ssm_head_dim) + d_in * D
+            n_attn = self.n_layers // max(self.hybrid_attn_every, 1)
+            return self.n_layers * per + n_attn * 0 + attn + 3 * D * F + 2 * V * D
+        mlp = 3 * D * F
+        if self.family == "moe":
+            mlp = self.n_experts * 3 * D * self.moe_d_ff + D * self.n_experts
+            mlp += self.n_shared_experts * 3 * D * self.moe_d_ff
+        layers = self.n_layers
+        if self.family == "encdec":
+            # enc: self-attn; dec: self + cross; 2-matrix GELU MLP; tied embed
+            mlp = 2 * D * F
+            return (
+                self.n_enc_layers * (attn + mlp)
+                + self.n_dec_layers * (2 * attn + mlp)
+                + V * D
+            )
+        return layers * (attn + mlp) + 2 * V * D
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        D = self.d_model
+        attn = D * self.hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * self.hd * D
+        mlp = (self.moe_top_k + self.n_shared_experts) * 3 * D * self.moe_d_ff
+        mlp += D * self.n_experts  # router
+        return self.n_layers * (attn + mlp) + 2 * self.vocab * D
+
+
+# ---------------------------- input shapes ----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "internvl2_2b",
+    "granite_moe_1b_a400m",
+    "kimi_k2_1t_a32b",
+    "whisper_large_v3",
+    "zamba2_7b",
+    "qwen3_0_6b",
+    "qwen1_5_4b",
+    "qwen3_4b",
+    "olmo_1b",
+    "mamba2_780m",
+    "pulse_paper",  # the paper's own traversal workloads (non-LM)
+]
+
+# cells skipped with justification (DESIGN.md S6)
+SKIPPED_CELLS = {("whisper_large_v3", "long_500k"): "enc-dec decoder: 30s audio source; no meaningful 500k self-attn KV"}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_")
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_reduced_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_')}")
+    return mod.reduced()
+
+
+def all_cells(include_skipped: bool = False):
+    """Every (arch, shape) dry-run cell, skips filtered per DESIGN.md."""
+    cells = []
+    for a in ARCH_IDS:
+        if a == "pulse_paper":
+            continue
+        for s in SHAPES:
+            if not include_skipped and (a, s) in SKIPPED_CELLS:
+                continue
+            cells.append((a, s))
+    return cells

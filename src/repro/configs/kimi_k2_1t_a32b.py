@@ -1,0 +1,40 @@
+"""Kimi-K2 [moe]: trillion-param MoE, 384 experts top-8 + 1 shared.
+[arXiv:2501.kimi2; unverified (paper-table)]
+
+Trillion-scale execution notes: bf16 params + Adafactor (factored second
+moment) + full remat; FSDP over (pod, data) x TP/EP over model is required to
+fit v5e HBM (see EXPERIMENTS.md dry-run memory analysis)."""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="kimi_k2_1t_a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=163840,
+    head_dim=112,
+    n_experts=384,
+    moe_top_k=8,
+    moe_d_ff=2048,
+    n_shared_experts=1,
+    param_dtype=jnp.bfloat16,
+    compute_dtype=jnp.bfloat16,
+    optimizer="adafactor",
+    remat="full",
+    source="arXiv:2501.kimi2; unverified",
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=64, vocab=512,
+        head_dim=16, n_experts=8, moe_top_k=2, moe_d_ff=64, n_shared_experts=1,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32, remat="none",
+        optimizer="adamw",
+    )

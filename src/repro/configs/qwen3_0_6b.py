@@ -1,0 +1,25 @@
+"""Qwen3-0.6B [dense]: qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
+
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen3_0_6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=3072,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+    source="hf:Qwen/Qwen3-8B; hf",
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+        head_dim=16,
+    )

@@ -1,0 +1,34 @@
+"""PULSE core: the paper's contribution as a composable JAX library.
+
+Layers (paper section in parens):
+  arena        flat disaggregated heap + allocation policies (S2, App. Fig 5)
+  translation  hierarchical address translation / protection (S5, Fig. 6)
+  iterator     init/next/end + scratch_pad programming model (S3)
+  isa          restricted RISC ISA + VM + verifier (S4.1, Table 2)
+  dispatch     offload cost model t_c <= eta * t_d (S4.1)
+  scheduler    disaggregated m:n pipeline model, Alg. 1 (S4.2)
+  routing      in-network switch routing via all_to_all supersteps (S5)
+  engine       PulseEngine front door + compared-system baselines (S6)
+  structures   ported data structures (S3, Table 5, Appendix B)
+"""
+
+from repro.core.arena import (  # noqa: F401
+    NULL,
+    Arena,
+    ArenaBuilder,
+    f2i,
+    i2f,
+    load_node,
+    make_arena,
+)
+from repro.core.dispatch import AcceleratorSpec, offload_decision  # noqa: F401
+from repro.core.engine import PulseEngine, cpu_node_execute  # noqa: F401
+from repro.core.iterator import (  # noqa: F401
+    STATUS_ACTIVE,
+    STATUS_DONE,
+    STATUS_FAULT,
+    STATUS_MAXED,
+    PulseIterator,
+    execute_batched,
+)
+from repro.core.routing import distributed_execute  # noqa: F401

@@ -1,0 +1,195 @@
+"""Arena: the disaggregated-memory heap PULSE traverses.
+
+The paper's memory nodes export flat DRAM regions; pointers are physical
+addresses into them.  We model the rack's pooled memory as a single flat
+*arena* of fixed-width node records:
+
+  * ``data``    -- ``(capacity, node_words)`` int32.  One row == one node
+                   record.  ``node_words <= MAX_NODE_WORDS`` (64) so a whole
+                   record fits the paper's single aggregated <=256 B LOAD
+                   (S4.1: the dispatch engine fuses every access relative to
+                   ``cur_ptr`` into one load at the top of each iteration).
+  * pointer     -- int32 row index (a *global address*).  ``NULL == -1``.
+  * partition   -- the address space is **range partitioned** across memory
+                   nodes (mesh shards): shard ``s`` owns rows
+                   ``[bounds[s], bounds[s+1])``.  ``bounds`` is the switch's
+                   hierarchical-translation base table (S5).
+
+Values are int32 words; floats are carried bitcast (``f2i``/``i2f``) exactly
+like raw bytes in the paper's scratch pad.
+
+Host-side construction uses numpy (``ArenaBuilder``) so tests/benchmarks can
+build multi-million-node structures quickly, then ``device_put`` once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL = -1
+MAX_NODE_WORDS = 64  # 256 B of int32 words: the paper's max aggregated LOAD.
+
+# Protection bits (per shard / translation range).
+PERM_READ = 1
+PERM_WRITE = 2
+
+
+def f2i(x):
+    """Bitcast float32 -> int32 (store a float in an int32 arena/scratch word)."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.int32)
+
+
+def i2f(x):
+    """Bitcast int32 -> float32 (read a float out of an int32 word)."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int32), jnp.float32)
+
+
+def nf2i(x) -> np.ndarray:
+    return np.asarray(x, np.float32).view(np.int32)
+
+
+def ni2f(x) -> np.ndarray:
+    return np.asarray(x, np.int32).view(np.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Arena:
+    """A (possibly sharded) flat heap of fixed-width int32 node records."""
+
+    data: jax.Array  # (capacity, node_words) int32
+    bounds: jax.Array  # (num_shards + 1,) int32, sorted; switch base table
+    perms: jax.Array  # (num_shards,) int32 permission bitmask
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def node_words(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def num_shards(self) -> int:
+        return self.bounds.shape[0] - 1
+
+
+def make_arena(
+    data: jax.Array | np.ndarray,
+    num_shards: int = 1,
+    bounds: Sequence[int] | None = None,
+    perms: Sequence[int] | None = None,
+) -> Arena:
+    data = jnp.asarray(data, jnp.int32)
+    if data.ndim != 2:
+        raise ValueError(f"arena data must be (capacity, node_words), got {data.shape}")
+    if data.shape[1] > MAX_NODE_WORDS:
+        raise ValueError(
+            f"node_words={data.shape[1]} exceeds the {MAX_NODE_WORDS}-word "
+            f"(256 B) single-LOAD limit (PULSE S4.1)"
+        )
+    cap = data.shape[0]
+    if bounds is None:
+        if cap % num_shards != 0:
+            raise ValueError(f"capacity {cap} not divisible by num_shards {num_shards}")
+        per = cap // num_shards
+        bounds = [i * per for i in range(num_shards)] + [cap]
+    if perms is None:
+        perms = [PERM_READ | PERM_WRITE] * (len(bounds) - 1)
+    return Arena(
+        data=data,
+        bounds=jnp.asarray(bounds, jnp.int32),
+        perms=jnp.asarray(perms, jnp.int32),
+    )
+
+
+def load_node(arena_data: jax.Array, ptr: jax.Array) -> jax.Array:
+    """The single aggregated LOAD of one iteration (PULSE S4.1).
+
+    ``ptr`` may be NULL/out-of-range (a request that already terminated or
+    faulted); we clamp the row index so the gather stays in bounds and leave
+    fault detection to the translation layer.  Works for scalar or batched
+    ``ptr`` (leading batch dims broadcast).
+    """
+    cap = arena_data.shape[0]
+    safe = jnp.clip(ptr, 0, cap - 1)
+    return jnp.take(arena_data, safe, axis=0)
+
+
+def store_node(arena_data: jax.Array, ptr: jax.Array, record: jax.Array) -> jax.Array:
+    """STORE counterpart (used by modification iterators; S4.1 footnote 4)."""
+    cap = arena_data.shape[0]
+    safe = jnp.clip(ptr, 0, cap - 1)
+    return arena_data.at[safe].set(record)
+
+
+class ArenaBuilder:
+    """Host-side numpy allocator for building linked structures fast.
+
+    Allocation policies (Appendix Fig. 5):
+      * ``sequential``  -- bump allocator; range partitioning then gives the
+        paper's *partitioned* allocation (subtrees land on one node).
+      * ``interleaved`` -- round-robins consecutive allocations across shards
+        (glibc-style *uniform* allocation; maximizes cross-node traversals).
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        node_words: int,
+        num_shards: int = 1,
+        policy: str = "sequential",
+    ):
+        if node_words > MAX_NODE_WORDS:
+            raise ValueError(f"node_words > {MAX_NODE_WORDS}")
+        if capacity % num_shards != 0:
+            raise ValueError("capacity must divide evenly across shards")
+        self.capacity = capacity
+        self.node_words = node_words
+        self.num_shards = num_shards
+        self.policy = policy
+        self.data = np.zeros((capacity, node_words), np.int32)
+        self.per_shard = capacity // num_shards
+        if policy == "sequential":
+            self._next = 0
+        elif policy == "interleaved":
+            self._cursor = np.array(
+                [s * self.per_shard for s in range(num_shards)], np.int64
+            )
+            self._rr = 0
+        else:
+            raise ValueError(f"unknown allocation policy {policy!r}")
+
+    def alloc(self, n: int = 1) -> np.ndarray:
+        """Returns the global addresses of ``n`` new nodes."""
+        if self.policy == "sequential":
+            if self._next + n > self.capacity:
+                raise MemoryError("arena exhausted")
+            out = np.arange(self._next, self._next + n, dtype=np.int32)
+            self._next += n
+            return out
+        # interleaved: one address per round-robin'd shard
+        out = np.empty(n, np.int32)
+        for i in range(n):
+            s = self._rr
+            tried = 0
+            while self._cursor[s] >= (s + 1) * self.per_shard:
+                s = (s + 1) % self.num_shards
+                tried += 1
+                if tried > self.num_shards:
+                    raise MemoryError("arena exhausted")
+            out[i] = self._cursor[s]
+            self._cursor[s] += 1
+            self._rr = (s + 1) % self.num_shards
+        return out
+
+    def write(self, ptrs: np.ndarray, records: np.ndarray) -> None:
+        self.data[np.asarray(ptrs)] = np.asarray(records, np.int32)
+
+    def finish(self, perms: Sequence[int] | None = None) -> Arena:
+        return make_arena(self.data, num_shards=self.num_shards, perms=perms)

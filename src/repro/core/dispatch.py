@@ -1,0 +1,190 @@
+"""PULSE dispatch engine: the offload cost model (paper S4.1).
+
+The CPU node offloads an iterator iff its per-iteration compute time fits
+under the accelerator's memory time: ``t_c <= eta * t_d`` with
+``t_c = t_i * N`` (N instructions, t_i per-instruction time at the logic
+pipeline clock) and ``t_d`` the single aggregated LOAD's latency + transfer.
+``eta = m/n`` mirrors the provisioned logic:memory pipeline ratio (S4.2).
+
+Two N estimators:
+  * ISA programs: exact upper bound = program length (forward-only jumps).
+  * traced JAX iterators: jaxpr equation count of next+end on abstract
+    values -- the static-analysis stand-in.
+
+Defaults mirror the paper's prototype: 250 MHz pipelines (t_i = 4 ns),
+132 ns memory pipeline latency (TCAM 22 + controller 110, Fig. 10), 25 GB/s
+per-node bandwidth, eta = 0.75 (m=3, n=4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.iterator import PulseIterator
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorSpec:
+    t_i_ns: float = 4.0  # per-instruction time (250 MHz logic pipeline)
+    mem_latency_ns: float = 132.0  # TCAM + memory controller (Fig. 10)
+    mem_bw_gbps: float = 25.0  # per-node bandwidth cap (S6 setup)
+    eta: float = 0.75  # m/n = 3/4 in the prototype (S4.2)
+    network_ns: float = 426.3  # network stack traversal (Fig. 10)
+    scheduler_ns: float = 5.1
+    interconnect_ns: float = 47.0
+    logic_ns: float = 10.0  # per-iteration logic latency (Fig. 10)
+
+    def t_d_ns(self, node_bytes: int) -> float:
+        return self.mem_latency_ns + node_bytes / self.mem_bw_gbps
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadDecision:
+    offload: bool
+    t_c_ns: float
+    t_d_ns: float
+    ratio: float  # t_c / t_d  (Table 3's column)
+    n_instructions: int
+    reason: str
+
+
+# Per-primitive issue cost on the logic pipeline.  The FPGA pipeline operates
+# on whole registers/words per cycle: data movement and layout ops are wires
+# (cost 0); scalar/elementwise ALU ops cost one issue slot; reductions over
+# the <=64-word node record are a pipelined compare tree (cost 2).
+_ALU = {
+    "add", "sub", "mul", "div", "rem", "neg", "sign", "abs", "and", "or",
+    "xor", "not", "min", "max", "eq", "ne", "lt", "le", "gt", "ge",
+    "select_n", "clamp", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "integer_pow", "nextafter",
+}
+_REDUCE = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_and", "reduce_or",
+    "argmax", "argmin", "reduce_prod", "cumsum", "cummax", "cummin",
+}
+_MEMLIKE = {"gather", "scatter", "dynamic_slice", "dynamic_update_slice",
+            "scatter-add", "scatter_add", "sort"}
+
+
+def _op_cost(prim_name: str) -> int:
+    if prim_name in _ALU:
+        return 1
+    if prim_name in _REDUCE:
+        return 2
+    if prim_name in _MEMLIKE:
+        return 1
+    return 0  # broadcast/reshape/convert/slice/concat/iota/...: wires
+
+
+def count_instructions(it: PulseIterator, node_words: int) -> int:
+    """Static instruction-count analysis for the t_c model.
+
+    ISA programs: longest path through the forward-jump-only CFG (exact
+    worst-case issue count -- forward edges make this a DAG).
+    Traced iterators: weighted jaxpr op count (see _op_cost).
+    """
+    # ISA path: exact DAG longest path.
+    if getattr(it, "step_fn", None) is not None and hasattr(it.step_fn, "__wrapped_program__"):
+        return isa_longest_path(it.step_fn.__wrapped_program__)
+
+    node = jax.ShapeDtypeStruct((node_words,), jnp.int32)
+    ptr = jax.ShapeDtypeStruct((), jnp.int32)
+    scratch = jax.ShapeDtypeStruct((it.scratch_words,), jnp.int32)
+
+    def depth(fn) -> int:
+        jaxpr = jax.make_jaxpr(fn)(node, ptr, scratch)
+        return _critical_path(jaxpr.jaxpr)
+
+    # end() and next() share the fetched node: the circuit evaluates them
+    # side by side; latency adds only along the dependency chain.  We charge
+    # the max depth plus a 2-op epilogue (done-mux + pointer-mux).
+    return max(depth(it.end_fn), depth(it.next_fn)) + 2
+
+
+def isa_longest_path(prog) -> int:
+    """Worst-case instructions per iteration: longest path in the forward CFG."""
+    from repro.core import isa as isa_mod
+
+    code = prog.code
+    T = code.shape[0]
+    cost = [0] * (T + 1)
+    for i in range(T - 1, -1, -1):
+        op, a, b, imm = (int(x) for x in code[i])
+        if op in (isa_mod.RETURN, isa_mod.NEXT_ITER, isa_mod.HALT):
+            cost[i] = 1
+        elif op == isa_mod.JMP:
+            cost[i] = 1 + cost[imm]
+        elif op in (isa_mod.JEQ, isa_mod.JNE, isa_mod.JLT, isa_mod.JLE,
+                    isa_mod.JGT, isa_mod.JGE):
+            cost[i] = 1 + max(cost[i + 1], cost[imm])
+        else:
+            cost[i] = 1 + cost[i + 1]
+    return cost[0]
+
+
+def _critical_path(jaxpr) -> int:
+    """Weighted critical-path depth of the dataflow graph: the logic pipeline
+    is a pipelined circuit, so per-iteration latency follows the longest
+    dependency chain, not the op count."""
+    depth: dict = {}
+
+    def d_of(v) -> int:
+        return depth.get(id(v), 0)
+
+    worst = 0
+    for eqn in jaxpr.eqns:
+        base = max((d_of(v) for v in eqn.invars), default=0)
+        inner = 0
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):  # cond/scan bodies add their own depth
+                inner = max(inner, _critical_path(v.jaxpr))
+            elif isinstance(v, (list, tuple)):
+                for u in v:
+                    if hasattr(u, "jaxpr"):
+                        inner = max(inner, _critical_path(u.jaxpr))
+        d = base + _op_cost(eqn.primitive.name) + inner
+        for o in eqn.outvars:
+            depth[id(o)] = d
+        worst = max(worst, d)
+    return worst
+
+
+def offload_decision(
+    it: PulseIterator,
+    node_words: int,
+    accel: AcceleratorSpec | None = None,
+    *,
+    eta: float | None = None,
+) -> OffloadDecision:
+    accel = accel or AcceleratorSpec()
+    eta = accel.eta if eta is None else eta
+    n = count_instructions(it, node_words)
+    t_c = accel.t_i_ns * n
+    t_d = accel.t_d_ns(node_words * 4)
+    ratio = t_c / t_d
+    ok = t_c <= eta * t_d
+    reason = (
+        f"t_c={t_c:.1f}ns (N={n}) {'<=' if ok else '>'} eta*t_d="
+        f"{eta * t_d:.1f}ns -> {'offload' if ok else 'run at CPU node'}"
+    )
+    return OffloadDecision(ok, t_c, t_d, ratio, n, reason)
+
+
+def workload_table(entries):
+    """Reproduce the shape of paper Table 3: name, t_c/t_d, iterations.
+
+    ``entries`` is a list of (name, iterator, node_words, iters).
+    """
+    rows = []
+    accel = AcceleratorSpec()
+    for name, it, node_words, iters in entries:
+        d = offload_decision(it, node_words, accel)
+        rows.append(
+            dict(name=name, tc_td=round(d.ratio, 3), iterations=iters,
+                 offload=d.offload, n_instructions=d.n_instructions)
+        )
+    return rows

@@ -1,0 +1,190 @@
+"""PulseEngine: the user-facing traversal engine (dispatch + execute).
+
+Execution paths (the compared systems of S6):
+  * ``local``        -- single memory node, PULSE accelerator semantics
+                        (``iterator.execute_batched``).
+  * ``distributed``  -- multi-node with in-network switch routing (S5).
+  * ``distributed`` + ``return_to_cpu=True`` -- the PULSE-ACC ablation
+                        (Fig. 9): crossings bounce through the home node.
+  * ``cpu_node``     -- the Cache-based baseline: the traversal runs at the
+                        CPU node; every node fetch is a remote access unless
+                        it hits the CPU-side cache (LRU, S2.1).  Functionally
+                        identical results + an access trace for the latency /
+                        energy models.
+
+The dispatch engine's offload decision (t_c <= eta * t_d, S4.1) lives in
+``core.dispatch``; ``PulseEngine.execute`` consults it and falls back to the
+``cpu_node`` path for non-offloadable iterators, exactly like the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch as dispatch_mod
+from repro.core import routing
+from repro.core.arena import NULL, Arena
+from repro.core.iterator import (
+    STATUS_ACTIVE,
+    STATUS_DONE,
+    PulseIterator,
+    execute_batched,
+)
+
+
+@dataclasses.dataclass
+class CpuNodeTrace:
+    """Access trace from the cpu_node path (feeds Fig. 7 latency models)."""
+
+    total_fetches: int
+    cache_hits: int
+    per_request_iters: np.ndarray
+
+    @property
+    def misses(self) -> int:
+        return self.total_fetches - self.cache_hits
+
+
+def cpu_node_execute(
+    it: PulseIterator,
+    arena: Arena,
+    ptr0,
+    scratch0,
+    *,
+    max_iters: int = 1 << 20,
+    cache_nodes: int = 0,
+):
+    """Cache-based baseline: traverse at the CPU node over remote memory.
+
+    Functionally equivalent to the accelerator path; additionally simulates a
+    CPU-side LRU cache of ``cache_nodes`` node records and reports the trace.
+    Runs hop-by-hop on host (numpy) -- it *is* the slow path being modeled.
+    """
+    data = np.asarray(arena.data)
+    ptr = np.asarray(ptr0, np.int64).copy()
+    B = ptr.shape[0]
+    scratch = np.asarray(scratch0, np.int32).reshape(B, it.scratch_words).copy()
+    done = np.zeros(B, bool)
+    iters = np.zeros(B, np.int64)
+    lru: OrderedDict[int, None] = OrderedDict()
+    hits = fetches = 0
+
+    step = jax.jit(jax.vmap(lambda n, p, s: _fused_step(it, n, p, s)))
+    while not done.all() and (iters[~done].min(initial=0) < max_iters):
+        live = ~done & (ptr != NULL)
+        if not live.any():
+            break
+        # CPU-node cache simulation, per node fetch
+        for a in ptr[live]:
+            fetches += 1
+            a = int(a)
+            if a in lru:
+                hits += 1
+                lru.move_to_end(a)
+            elif cache_nodes > 0:
+                lru[a] = None
+                if len(lru) > cache_nodes:
+                    lru.popitem(last=False)
+        node = data[np.clip(ptr, 0, data.shape[0] - 1)]
+        d, np_, ns = step(jnp.asarray(node), jnp.asarray(ptr, jnp.int32), jnp.asarray(scratch))
+        d, np_, ns = np.asarray(d), np.asarray(np_), np.asarray(ns)
+        scratch[live] = ns[live]
+        iters[live] += 1
+        newly_done = live & (d | (np_ == NULL) | (iters >= max_iters))
+        ptr[live & ~newly_done] = np_[live & ~newly_done]
+        done |= newly_done
+    trace = CpuNodeTrace(fetches, hits, iters.copy())
+    return ptr.astype(np.int32), scratch, iters, trace
+
+
+def _fused_step(it: PulseIterator, node, ptr, scratch):
+    if it.step_fn is not None:
+        return it.step_fn(node, ptr, scratch)
+    done, scr = it.end_fn(node, ptr, scratch)
+    nptr, nscr = it.next_fn(node, ptr, scr)
+    return done, jnp.where(done, ptr, nptr), jnp.where(done, scr, nscr)
+
+
+@dataclasses.dataclass
+class ExecResult:
+    ptr: np.ndarray
+    scratch: np.ndarray
+    status: np.ndarray
+    iters: np.ndarray
+    stats: object | None = None
+    offloaded: bool = True
+
+
+class PulseEngine:
+    """Front door: dispatch decision + the right execution path."""
+
+    def __init__(
+        self,
+        arena: Arena,
+        *,
+        mesh=None,
+        axis_name: str = "mem",
+        accel: dispatch_mod.AcceleratorSpec | None = None,
+        eta: float | None = None,
+    ):
+        self.arena = arena
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.accel = accel or dispatch_mod.AcceleratorSpec()
+        self.eta = self.accel.eta if eta is None else eta
+
+    def dispatch(self, it: PulseIterator) -> dispatch_mod.OffloadDecision:
+        return dispatch_mod.offload_decision(
+            it, self.arena.node_words, self.accel, eta=self.eta
+        )
+
+    def execute(
+        self,
+        it: PulseIterator,
+        ptr0,
+        scratch0,
+        *,
+        max_iters: int = 1 << 20,
+        force_offload: bool | None = None,
+        return_to_cpu: bool = False,
+        k_local: int = 4,
+        cache_nodes: int = 0,
+    ) -> ExecResult:
+        decision = self.dispatch(it)
+        offload = decision.offload if force_offload is None else force_offload
+        if not offload:
+            ptr, scratch, iters, trace = cpu_node_execute(
+                it, self.arena, ptr0, scratch0,
+                max_iters=max_iters, cache_nodes=cache_nodes,
+            )
+            status = np.where(iters >= max_iters, 2, STATUS_DONE).astype(np.int32)
+            return ExecResult(ptr, scratch, status, np.asarray(iters), trace, False)
+
+        if self.mesh is not None and self.arena.num_shards > 1:
+            rec, stats = routing.distributed_execute(
+                it, self.arena, ptr0, scratch0,
+                mesh=self.mesh, axis_name=self.axis_name,
+                max_iters=max_iters, k_local=k_local,
+                return_to_cpu=return_to_cpu,
+            )
+            return ExecResult(
+                ptr=rec[:, routing.F_PTR],
+                scratch=rec[:, routing.F_SCRATCH:],
+                status=rec[:, routing.F_STATUS],
+                iters=rec[:, routing.F_ITERS],
+                stats=stats,
+            )
+
+        ptr, scratch, status, iters = execute_batched(
+            it, self.arena, jnp.asarray(ptr0), jnp.asarray(scratch0),
+            max_iters=max_iters,
+        )
+        return ExecResult(
+            np.asarray(ptr), np.asarray(scratch), np.asarray(status),
+            np.asarray(iters),
+        )

@@ -1,0 +1,196 @@
+"""PULSE iterator programming model (paper S3) in JAX.
+
+A traversal is ``init() / next() / end()`` plus a fixed-size int32
+``scratch_pad``; *all* mutable state lives in ``(cur_ptr, scratch_pad)`` so a
+traversal can be suspended, shipped across the network, and resumed anywhere
+(S5 "continuing stateful iterator execution").
+
+Per-iteration semantics (Listing 1 + S4.1):
+
+    node = LOAD(cur_ptr)                 # ONE aggregated <=256 B load
+    done, scratch = end(node, cur_ptr, scratch)
+    if not done:
+        cur_ptr, scratch = next(node, cur_ptr, scratch)
+
+``execute_batched`` runs a *batch* of traversals with ``jax.lax.while_loop``
+(the accelerator multiplexes m+n concurrent iterators; a SIMD batch is the
+TPU-native analogue of that multiplexing).  Bounded computation is enforced
+structurally: ``next``/``end`` are traced, loop-free-at-trace-time functions
+(unbounded data-dependent loops cannot be expressed), and ``max_iters`` caps
+the iteration count — on overrun the request returns STATUS_MAXED with its
+scratch pad, and the caller may resume it (continuation semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import translation
+from repro.core.arena import NULL, PERM_READ, Arena, load_node
+
+# Request status codes (wire format field; identical for request & response).
+STATUS_ACTIVE = 0  # still traversing
+STATUS_DONE = 1  # end() returned true; scratch_pad is the result
+STATUS_MAXED = 2  # hit max_iters; resumable continuation
+STATUS_FAULT = 3  # translation/protection failure
+STATUS_EMPTY = 4  # free slot (routing pools only)
+
+
+@dataclasses.dataclass(frozen=True)
+class PulseIterator:
+    """A traversal program: the developer supplies next()/end() (+ optional
+    host-side init()); the framework supplies execute().
+
+    Attributes:
+      scratch_words: fixed scratch_pad width (int32 words).
+      next_fn:  (node (W,), ptr (), scratch (S,)) -> (new_ptr (), scratch (S,))
+      end_fn:   (node (W,), ptr (), scratch (S,)) -> (done (), scratch (S,))
+      init_fn:  optional host-side (query pytree) -> (ptr (B,), scratch (B,S))
+      step_fn:  optional fused (node, ptr, scratch) -> (done, new_ptr, scratch)
+                (used by the ISA VM, whose single pass yields both answers).
+      name:     for dispatch-engine reports.
+    """
+
+    scratch_words: int
+    next_fn: Callable
+    end_fn: Callable
+    init_fn: Callable | None = None
+    step_fn: Callable | None = None
+    name: str = "iterator"
+
+    def init(self, *args, **kwargs):
+        if self.init_fn is None:
+            raise ValueError(f"iterator {self.name} has no init()")
+        return self.init_fn(*args, **kwargs)
+
+
+def _step_one(it: PulseIterator, node, ptr, scratch):
+    """One iteration for ONE request (after the node has been fetched)."""
+    if it.step_fn is not None:
+        done, new_ptr, new_scratch = it.step_fn(node, ptr, scratch)
+        new_ptr = jnp.where(done, ptr, new_ptr).astype(jnp.int32)
+        return done, new_ptr, jnp.asarray(new_scratch, jnp.int32)
+    done, scratch = it.end_fn(node, ptr, scratch)
+    nptr, nscratch = it.next_fn(node, ptr, scratch)
+    new_ptr = jnp.where(done, ptr, nptr).astype(jnp.int32)
+    new_scratch = jnp.where(done, scratch, nscratch).astype(jnp.int32)
+    return done, new_ptr, new_scratch
+
+
+def step_batch(
+    it: PulseIterator,
+    arena_data: jax.Array,
+    ptr: jax.Array,  # (B,) int32 global (or pre-translated local) addresses
+    scratch: jax.Array,  # (B, S) int32
+    status: jax.Array,  # (B,) int32
+    iters: jax.Array,  # (B,) int32
+    *,
+    max_iters: int,
+    local_lo: jax.Array | int = 0,
+    local_hi: jax.Array | int | None = None,
+    perm_ok: jax.Array | bool = True,
+):
+    """Advance every ACTIVE request by one iteration (vectorized).
+
+    ``local_lo/local_hi`` bound the addresses this executor can serve (the
+    memory node's translation range); an ACTIVE request pointing elsewhere is
+    left untouched (the router will move it).  ``perm_ok`` is the node-level
+    protection check result for this shard.
+    """
+    if local_hi is None:
+        local_hi = arena_data.shape[0]
+    local = (ptr >= local_lo) & (ptr < local_hi)
+    null = ptr == NULL
+    active = status == STATUS_ACTIVE
+
+    # Faults: NULL or non-translatable-anywhere pointers are the router's
+    # business; here a *local* request with a protection failure faults.
+    fault = active & local & ~jnp.asarray(perm_ok) & ~null
+    runnable = active & local & ~fault & ~null
+
+    offset = jnp.asarray(ptr, jnp.int32) - jnp.asarray(local_lo, jnp.int32)
+    node = load_node(arena_data, jnp.where(runnable, offset, 0))
+    done, new_ptr_off, new_scratch = jax.vmap(partial(_step_one, it))(
+        node, ptr, scratch
+    )
+    # next_fn operates on *global* pointers stored in the records; nothing to
+    # rebase (records in the arena hold global addresses).
+    new_ptr = new_ptr_off
+
+    ptr = jnp.where(runnable, new_ptr, ptr)
+    scratch = jnp.where(runnable[:, None], new_scratch, scratch)
+    iters = jnp.where(runnable, iters + 1, iters)
+    status = jnp.where(runnable & done, STATUS_DONE, status)
+    status = jnp.where(fault, STATUS_FAULT, status)
+    status = jnp.where(
+        (status == STATUS_ACTIVE) & (iters >= max_iters), STATUS_MAXED, status
+    )
+    # A finished-by-NULL-dereference is a fault too (walked off the structure).
+    status = jnp.where(active & null, STATUS_FAULT, status)
+    return ptr, scratch, status, iters
+
+
+def execute_batched(
+    it: PulseIterator,
+    arena: Arena,
+    ptr0: jax.Array,  # (B,)
+    scratch0: jax.Array,  # (B, S)
+    *,
+    max_iters: int,
+    unroll: int = 1,
+):
+    """Run a batch of traversals to completion on a single (unsharded) arena.
+
+    This is the single-memory-node executor and the pure-JAX oracle the
+    distributed engine (core.routing) is tested against.
+
+    Returns ``(ptr, scratch, status, iters)``.
+    """
+    B = ptr0.shape[0]
+    ptr = jnp.asarray(ptr0, jnp.int32)
+    scratch = jnp.asarray(scratch0, jnp.int32).reshape(B, it.scratch_words)
+    status = jnp.full((B,), STATUS_ACTIVE, jnp.int32)
+    iters = jnp.zeros((B,), jnp.int32)
+
+    perm_ok = translation.check_access(
+        arena.perms, translation.owner_of(arena.bounds, ptr), PERM_READ
+    )
+
+    def cond(state):
+        _, _, status, _ = state
+        return jnp.any(status == STATUS_ACTIVE)
+
+    def body(state):
+        ptr, scratch, status, iters = state
+        for _ in range(unroll):
+            perm = translation.check_access(
+                arena.perms, translation.owner_of(arena.bounds, ptr), PERM_READ
+            )
+            ptr, scratch, status, iters = step_batch(
+                it,
+                arena.data,
+                ptr,
+                scratch,
+                status,
+                iters,
+                max_iters=max_iters,
+                perm_ok=perm,
+            )
+        return ptr, scratch, status, iters
+
+    del perm_ok
+    ptr, scratch, status, iters = jax.lax.while_loop(
+        cond, body, (ptr, scratch, status, iters)
+    )
+    return ptr, scratch, status, iters
+
+
+def resume(status: jax.Array) -> jax.Array:
+    """Continuation restart: MAXED requests become ACTIVE again (the CPU node
+    re-issues the request from the returned (cur_ptr, scratch_pad))."""
+    return jnp.where(status == STATUS_MAXED, STATUS_ACTIVE, status)

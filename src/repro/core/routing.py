@@ -1,0 +1,321 @@
+"""Distributed pointer traversals: the in-network switch as supersteps (S5).
+
+The paper routes in-flight traversal requests between memory nodes with a
+programmable switch that holds only the range-partition base table.  On a TPU
+mesh the ICI collectives *are* the programmable fabric, so we route **batches**
+of fixed-size request records with ``all_to_all`` in bulk-synchronous
+supersteps.  The paper's key properties are preserved exactly:
+
+  * a cross-node hop never bounces through the CPU node (compare
+    ``return_to_cpu=True``, the paper's PULSE-ACC ablation, Fig. 9);
+  * the request and the response share one wire format, so any shard can
+    continue any traversal it receives (S5 "continuing stateful iterator
+    execution");
+  * the switch knows only ``bounds`` (hierarchical translation, Fig. 6);
+    per-shard translation/protection happens at the owning shard.
+
+Record wire format (R = 6 + S int32 words):
+  [id, home_shard, cur_ptr, status, iters, hops, scratch_pad...]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import translation
+from repro.core.arena import NULL, PERM_READ, Arena
+from repro.core.iterator import (
+    STATUS_ACTIVE,
+    STATUS_DONE,
+    STATUS_EMPTY,
+    PulseIterator,
+    step_batch,
+)
+
+F_ID, F_HOME, F_PTR, F_STATUS, F_ITERS, F_HOPS, F_SCRATCH = 0, 1, 2, 3, 4, 5, 6
+
+
+def record_width(scratch_words: int) -> int:
+    return F_SCRATCH + scratch_words
+
+
+def pack_requests(ids, home, ptr, scratch) -> jnp.ndarray:
+    B, S = scratch.shape
+    rec = jnp.zeros((B, record_width(S)), jnp.int32)
+    rec = rec.at[:, F_ID].set(ids)
+    rec = rec.at[:, F_HOME].set(home)
+    rec = rec.at[:, F_PTR].set(ptr)
+    rec = rec.at[:, F_STATUS].set(STATUS_ACTIVE)
+    rec = rec.at[:, F_SCRATCH:].set(scratch)
+    return rec
+
+
+def empty_records(n: int, scratch_words: int) -> jnp.ndarray:
+    rec = jnp.zeros((n, record_width(scratch_words)), jnp.int32)
+    return rec.at[:, F_STATUS].set(STATUS_EMPTY)
+
+
+@dataclasses.dataclass
+class RoutingStats:
+    supersteps: int
+    crossings: np.ndarray  # (B,) network crossings per request (Fig. 2c/9)
+    routed_per_step: list  # records exchanged per superstep
+
+
+def _local_superstep(
+    it: PulseIterator,
+    pool: jnp.ndarray,  # (L, R) local request pool
+    arena_rows: jnp.ndarray,  # (rows_per_shard, W) this shard's arena rows
+    bounds: jnp.ndarray,  # (P+1,) switch base table (replicated)
+    perms: jnp.ndarray,  # (P,)   protection bits (replicated)
+    my_shard: jnp.ndarray,  # () int32
+    *,
+    k_local: int,
+    max_iters: int,
+):
+    """Run up to ``k_local`` iterations for locally-owned ACTIVE requests."""
+    S = it.scratch_words
+    lo = bounds[my_shard]
+    hi = bounds[my_shard + 1]
+    perm_ok = translation.check_access(perms, my_shard, PERM_READ)
+
+    def body(_, st):
+        ptr, scratch, status, iters = st
+        return step_batch(
+            it,
+            arena_rows,
+            ptr,
+            scratch,
+            status,
+            iters,
+            max_iters=max_iters,
+            local_lo=lo,
+            local_hi=hi,
+            perm_ok=perm_ok,
+        )
+
+    ptr = pool[:, F_PTR]
+    scratch = pool[:, F_SCRATCH:]
+    status = pool[:, F_STATUS]
+    iters = pool[:, F_ITERS]
+    ptr, scratch, status, iters = jax.lax.fori_loop(
+        0, k_local, body, (ptr, scratch, status, iters)
+    )
+    pool = pool.at[:, F_PTR].set(ptr)
+    pool = pool.at[:, F_SCRATCH:].set(scratch)
+    pool = pool.at[:, F_STATUS].set(status)
+    pool = pool.at[:, F_ITERS].set(iters)
+    return pool
+
+
+def _route(
+    pool: jnp.ndarray,  # (L, R)
+    bounds: jnp.ndarray,
+    my_shard: jnp.ndarray,
+    num_shards: int,
+    axis_name: str,
+    *,
+    return_to_cpu: bool,
+):
+    """Switch routing: deliver records to their next shard via all_to_all."""
+    L, R = pool.shape
+    C = L // num_shards  # per-destination link capacity
+    status = pool[:, F_STATUS]
+    valid = status != STATUS_EMPTY
+    active = status == STATUS_ACTIVE
+
+    owner = translation.owner_of(bounds, pool[:, F_PTR])
+    # invalid pointer (owner == NULL) on an active request -> the switch
+    # notifies the CPU node (Fig. 6 step 6): mark FAULT, send home.
+    bad = active & (owner == NULL)
+    status = jnp.where(bad, jnp.int32(3), status)  # STATUS_FAULT
+    pool = pool.at[:, F_STATUS].set(status)
+    active = status == STATUS_ACTIVE
+
+    if return_to_cpu:
+        # PULSE-ACC (Fig. 9): a traversal leaving this node must return to its
+        # home (CPU) node, which re-issues it -- route non-local actives home.
+        stay = active & (owner == my_shard)
+        dest = jnp.where(stay, my_shard, pool[:, F_HOME])
+        dest = jnp.where(active & (owner != my_shard), pool[:, F_HOME], dest)
+        # once home, re-issue toward the owner
+        at_home = active & (pool[:, F_HOME] == my_shard) & (owner != my_shard)
+        dest = jnp.where(at_home, owner, dest)
+    else:
+        dest = jnp.where(active, owner, pool[:, F_HOME])
+    dest = jnp.where(valid, dest, my_shard).astype(jnp.int32)
+
+    moves = valid & (dest != my_shard)
+    pool = pool.at[:, F_HOPS].set(pool[:, F_HOPS] + moves.astype(jnp.int32))
+
+    # pack into (P, C+1, R): overflow beyond per-link capacity parks in the
+    # trash row (C) and stays local for the next superstep.
+    onehot = (dest[:, None] == jnp.arange(num_shards, dtype=jnp.int32)[None, :]) & (
+        moves[:, None]
+    )
+    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - onehot.astype(jnp.int32)
+    pos = jnp.take_along_axis(pos, jnp.clip(dest, 0, num_shards - 1)[:, None], axis=1)[
+        :, 0
+    ]
+    fits = moves & (pos < C)
+    d_idx = jnp.where(fits, dest, 0)
+    p_idx = jnp.where(fits, pos, C)
+    send = jnp.broadcast_to(
+        empty_records(1, R - F_SCRATCH)[0], (num_shards, C + 1, R)
+    ).astype(jnp.int32)
+    send = send.at[d_idx, p_idx].set(jnp.where(fits[:, None], pool, send[d_idx, p_idx]))
+    send = send[:, :C]
+
+    # what leaves this shard is removed from the local pool
+    kept = pool.at[:, F_STATUS].set(
+        jnp.where(fits, jnp.int32(STATUS_EMPTY), pool[:, F_STATUS])
+    )
+
+    arrivals = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    arrivals = arrivals.reshape(num_shards * C, R)
+
+    # merge: valid records first, then empties; keep L slots (conservation:
+    # total valid records across the mesh is constant == B <= sum of pools).
+    both = jnp.concatenate([kept, arrivals], axis=0)
+    is_empty = both[:, F_STATUS] == STATUS_EMPTY
+    order = jnp.argsort(is_empty, stable=True)
+    merged = both[order][:L]
+    n_dropped_valid = (~is_empty).sum() - (merged[:, F_STATUS] != STATUS_EMPTY).sum()
+    n_routed = fits.sum()
+    return merged, n_routed, n_dropped_valid
+
+
+def make_superstep(
+    it: PulseIterator,
+    num_shards: int,
+    axis_name: str,
+    *,
+    k_local: int,
+    max_iters: int,
+    return_to_cpu: bool = False,
+):
+    """Builds the jittable per-shard superstep: local run -> switch route."""
+
+    def superstep(pool, arena_rows, bounds, perms):
+        my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        pool = _local_superstep(
+            it, pool, arena_rows, bounds, perms, my_shard,
+            k_local=k_local, max_iters=max_iters,
+        )
+        pool, n_routed, n_drop = _route(
+            pool, bounds, my_shard, num_shards, axis_name,
+            return_to_cpu=return_to_cpu,
+        )
+        n_active = (pool[:, F_STATUS] == STATUS_ACTIVE).sum()
+        n_active = jax.lax.psum(n_active, axis_name)
+        n_routed = jax.lax.psum(n_routed, axis_name)
+        n_drop = jax.lax.psum(n_drop, axis_name)
+        return pool, n_active, n_routed, n_drop
+
+    return superstep
+
+
+def distributed_execute(
+    it: PulseIterator,
+    arena: Arena,
+    ptr0: jax.Array,
+    scratch0: jax.Array,
+    *,
+    mesh: Mesh,
+    axis_name: str = "mem",
+    max_iters: int = 1 << 30,
+    k_local: int = 4,
+    max_supersteps: int = 4096,
+    return_to_cpu: bool = False,
+):
+    """Run a batch of traversals over a range-partitioned arena on a mesh.
+
+    Returns (records (B, R) ordered by request id, RoutingStats).
+    """
+    num_shards = arena.num_shards
+    P_axis = mesh.shape[axis_name]
+    if P_axis != num_shards:
+        raise ValueError(f"arena has {num_shards} shards but mesh axis has {P_axis}")
+    rows = arena.capacity
+    if rows % num_shards:
+        raise ValueError("distributed arena must have uniform shard sizes")
+
+    B = ptr0.shape[0]
+    Bp = ((B + num_shards - 1) // num_shards) * num_shards
+    S = it.scratch_words
+    ids = jnp.arange(B, dtype=jnp.int32)
+    home = ids % num_shards
+    rec = pack_requests(ids, home, jnp.asarray(ptr0, jnp.int32), jnp.asarray(scratch0, jnp.int32))
+    if Bp != B:
+        rec = jnp.concatenate([rec, empty_records(Bp - B, S)], axis=0)
+        home_p = jnp.concatenate([home, jnp.arange(Bp - B, dtype=jnp.int32) % num_shards])
+    else:
+        home_p = home
+    # place each request at its home shard; pool size L = Bp per shard is the
+    # safe upper bound (all requests could, transiently, sit on one shard)
+    L = Bp
+    order = jnp.argsort(home_p, stable=True)
+    rec_sorted = rec[order]
+    counts = np.bincount(np.asarray(home_p), minlength=num_shards)
+    pools = []
+    off = 0
+    for s in range(num_shards):
+        c = int(counts[s])
+        pools.append(
+            jnp.concatenate(
+                [rec_sorted[off : off + c], empty_records(L - c, S)], axis=0
+            )
+        )
+        off += c
+    pool_global = jnp.stack(pools)  # (P, L, R)
+
+    sharding = NamedSharding(mesh, P(axis_name))
+    pool_global = jax.device_put(pool_global.reshape(num_shards * L, -1), sharding)
+    arena_data = jax.device_put(arena.data, NamedSharding(mesh, P(axis_name, None)))
+    bounds = jax.device_put(arena.bounds, NamedSharding(mesh, P()))
+    perms = jax.device_put(arena.perms, NamedSharding(mesh, P()))
+
+    superstep = make_superstep(
+        it, num_shards, axis_name,
+        k_local=k_local, max_iters=max_iters, return_to_cpu=return_to_cpu,
+    )
+    step = jax.jit(
+        jax.shard_map(
+            superstep,
+            mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name), P(), P()),
+            out_specs=(P(axis_name), P(), P(), P()),
+        )
+    )
+
+    routed_per_step = []
+    steps = 0
+    for _ in range(max_supersteps):
+        pool_global, n_active, n_routed, n_drop = step(
+            pool_global, arena_data, bounds, perms
+        )
+        steps += 1
+        routed_per_step.append(int(n_routed))
+        assert int(n_drop) == 0, "request records lost in routing (pool overflow)"
+        if int(n_active) == 0:
+            break
+
+    # gather and order results by id
+    all_rec = np.asarray(pool_global).reshape(-1, record_width(S))
+    valid = all_rec[:, F_STATUS] != STATUS_EMPTY
+    all_rec = all_rec[valid]
+    all_rec = all_rec[all_rec[:, F_ID] < B]
+    order = np.argsort(all_rec[:, F_ID], kind="stable")
+    all_rec = all_rec[order]
+    stats = RoutingStats(
+        supersteps=steps,
+        crossings=all_rec[:, F_HOPS].copy(),
+        routed_per_step=routed_per_step,
+    )
+    return all_rec, stats

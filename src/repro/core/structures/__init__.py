@@ -1,0 +1,19 @@
+"""Linked data structures ported to the PULSE iterator interface (paper S3,
+Table 5 / Appendix B).
+
+Families covered (matching the paper's categories):
+  * list:  ``linked_list`` (STL list/forward_list ``std::find``),
+           ``hash_table`` (Boost bimap/unordered_{map,set} bucket chains)
+  * tree:  ``btree``      (Google BTree ``internal_locate_plain_compare``
+                           + B+tree leaf-chain range aggregation, the BTrDB
+                           workload),
+           ``bst``        (STL map/set ``_M_lower_bound``; the same traversal
+                           shape covers Boost AVL/splay/scapegoat
+                           ``lower_bound_loop`` per Appendix B.5)
+  * probabilistic: ``skiplist`` (beyond-paper extra family)
+
+Each module provides a host-side numpy builder, PULSE iterators (traced
+next/end), and pure-Python references used as test oracles.
+"""
+
+from repro.core.structures import bst, btree, hash_table, linked_list, skiplist  # noqa: F401

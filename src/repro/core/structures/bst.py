@@ -1,0 +1,127 @@
+"""STL ``map::find`` via ``_M_lower_bound`` (paper Listings 10-11).
+
+The identical traversal shape covers Boost AVL / splay / scapegoat trees
+(``lower_bound_loop``, Listings 12-13) -- only the balancing differs, which
+is invisible to the read path.  Node layout (W=4): [key, value, left, right].
+The lower-bound candidate ``y`` lives in the scratch pad (a pointer carried
+as traversal state -- the paper's continuation argument).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.arena import NULL, ArenaBuilder
+from repro.core.iterator import PulseIterator
+
+NODE_WORDS = 4
+KEY, VALUE, LEFT, RIGHT = 0, 1, 2, 3
+KEY_NOT_FOUND = -(2**31) + 1
+
+# scratch: [search_key, y_ptr, y_key, y_value]
+S_KEY, S_Y, S_YKEY, S_YVAL = 0, 1, 2, 3
+SCRATCH_WORDS = 4
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Builds a balanced BST (median split). Returns (arena, root_ptr, height)."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    order = np.argsort(keys, kind="stable")
+    keys, values = keys[order], values[order]
+    n = len(keys)
+    cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    ptrs = b.alloc(n)
+    rec = np.zeros((n, NODE_WORDS), np.int32)
+
+    # level-order balanced build so 'sequential' allocation keeps top levels
+    # together (partitioned-allocation experiments rely on this)
+    slot = [0]
+    height = [0]
+
+    def place(lo, hi, depth):  # returns ptr of subtree root over keys[lo:hi)
+        if lo >= hi:
+            return NULL
+        height[0] = max(height[0], depth + 1)
+        mid = (lo + hi) // 2
+        my = slot[0]
+        slot[0] += 1
+        rec[my, KEY] = keys[mid]
+        rec[my, VALUE] = values[mid]
+        rec[my, LEFT] = place(lo, mid, depth + 1)
+        rec[my, RIGHT] = place(mid + 1, hi, depth + 1)
+        return int(ptrs[my])
+
+    import sys
+
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old, 4 * (n.bit_length() + 2) * 64 + 10_000))
+    root = place(0, n, 0)
+    sys.setrecursionlimit(old)
+    b.write(ptrs, rec)
+    return b.finish(), root, height[0]
+
+
+def find_iterator() -> PulseIterator:
+    """``map::find`` as lower-bound descent (Listing 11): walk to NULL while
+    tracking the smallest node with key >= search key, then compare."""
+
+    def init(search_keys, root_ptr):
+        sk = jnp.asarray(search_keys, jnp.int32)
+        B = sk.shape[0]
+        scratch = jnp.zeros((B, SCRATCH_WORDS), jnp.int32)
+        scratch = scratch.at[:, S_KEY].set(sk)
+        scratch = scratch.at[:, S_Y].set(NULL)
+        scratch = scratch.at[:, S_YVAL].set(KEY_NOT_FOUND)
+        return jnp.full((B,), root_ptr, jnp.int32), scratch
+
+    def next_fn(node, ptr, scratch):
+        # Listing 11: if key <= node.key -> remember y, go left; else right.
+        goes_left = scratch[S_KEY] <= node[KEY]
+        scratch = scratch.at[S_Y].set(jnp.where(goes_left, ptr, scratch[S_Y]))
+        scratch = scratch.at[S_YKEY].set(
+            jnp.where(goes_left, node[KEY], scratch[S_YKEY])
+        )
+        scratch = scratch.at[S_YVAL].set(
+            jnp.where(goes_left, node[VALUE], scratch[S_YVAL])
+        )
+        nxt = jnp.where(goes_left, node[LEFT], node[RIGHT])
+        return nxt, scratch
+
+    def end_fn(node, ptr, scratch):
+        # Terminate when the *next* hop would be NULL.  (The executor treats a
+        # NULL cur_ptr as a fault, so we stop one step early, mirroring
+        # ``while (x != 0)``.)
+        goes_left = scratch[S_KEY] <= node[KEY]
+        nxt = jnp.where(goes_left, node[LEFT], node[RIGHT])
+        upd = scratch
+        upd = upd.at[S_Y].set(jnp.where(goes_left, ptr, scratch[S_Y]))
+        upd = upd.at[S_YKEY].set(jnp.where(goes_left, node[KEY], scratch[S_YKEY]))
+        upd = upd.at[S_YVAL].set(jnp.where(goes_left, node[VALUE], scratch[S_YVAL]))
+        done = nxt == NULL
+        return done, jnp.where(done, upd, scratch)
+
+    return PulseIterator(SCRATCH_WORDS, next_fn, end_fn, init, name="bst_find")
+
+
+def result(scratch: jnp.ndarray):
+    """CPU-node finalize: found iff lower-bound key equals the search key."""
+    found = (scratch[..., S_Y] != NULL) & (scratch[..., S_YKEY] == scratch[..., S_KEY])
+    value = jnp.where(found, scratch[..., S_YVAL], KEY_NOT_FOUND)
+    return value, found
+
+
+# ------------------------------- references --------------------------------
+
+
+def ref_find(keys, values, search_keys):
+    d = {int(k): int(v) for k, v in zip(keys, values)}
+    return [(d.get(int(k), KEY_NOT_FOUND), int(int(k) in d)) for k in search_keys]

@@ -1,0 +1,212 @@
+"""Google-BTree descent (paper Listings 8-9) + B+tree leaf-chain range
+aggregation (the WiredTiger / BTrDB workload shape, paper S6).
+
+Node layout (W=20, one 80 B record -> single aggregated LOAD):
+  word 0      is_leaf
+  word 1      num_keys (<= FANOUT)
+  words 2..9  keys[FANOUT]
+  internal:   words 10..18 children[FANOUT+1]
+  leaf:       words 10..17 values[FANOUT], word 18 next_leaf
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.arena import NULL, ArenaBuilder
+from repro.core.iterator import PulseIterator
+
+FANOUT = 8  # kNodeValues in Listing 8
+NODE_WORDS = 20
+IS_LEAF, NUM_KEYS, KEYS0, CHILD0, VAL0, NEXT_LEAF = 0, 1, 2, 10, 10, 18
+KEY_NOT_FOUND = -(2**31) + 1
+INT_MIN = -(2**31)
+INT_MAX = 2**31 - 1
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Bulk-loads a B+tree from sorted keys. Returns (arena, root_ptr, height)."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    order = np.argsort(keys, kind="stable")
+    keys, values = keys[order], values[order]
+    n = len(keys)
+    # Upper bound on node count: leaves + internals (geometric series).
+    n_leaves = max(1, (n + FANOUT - 1) // FANOUT)
+    est = n_leaves
+    total, level = n_leaves, n_leaves
+    while level > 1:
+        level = (level + FANOUT) // (FANOUT + 1)
+        total += level
+    cap = capacity or max(
+        num_shards, ((total + num_shards - 1) // num_shards) * num_shards
+    )
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+
+    # --- leaves ---
+    leaf_ptrs = b.alloc(n_leaves)
+    recs = np.zeros((n_leaves, NODE_WORDS), np.int32)
+    maxkeys = np.empty(n_leaves, np.int32)
+    for i in range(n_leaves):
+        lo, hi = i * FANOUT, min(n, (i + 1) * FANOUT)
+        k = hi - lo
+        recs[i, IS_LEAF] = 1
+        recs[i, NUM_KEYS] = k
+        recs[i, KEYS0 : KEYS0 + k] = keys[lo:hi]
+        recs[i, KEYS0 + k : KEYS0 + FANOUT] = INT_MAX  # pad keys high
+        recs[i, VAL0 : VAL0 + k] = values[lo:hi]
+        recs[i, NEXT_LEAF] = leaf_ptrs[i + 1] if i + 1 < n_leaves else NULL
+        maxkeys[i] = keys[hi - 1] if k else INT_MAX
+    b.write(leaf_ptrs, recs)
+
+    # --- internal levels ---
+    height = 1
+    child_ptrs, child_max = leaf_ptrs, maxkeys
+    while len(child_ptrs) > 1:
+        height += 1
+        n_nodes = (len(child_ptrs) + FANOUT) // (FANOUT + 1)
+        ptrs = b.alloc(n_nodes)
+        recs = np.zeros((n_nodes, NODE_WORDS), np.int32)
+        new_max = np.empty(n_nodes, np.int32)
+        for i in range(n_nodes):
+            lo = i * (FANOUT + 1)
+            hi = min(len(child_ptrs), lo + FANOUT + 1)
+            c = hi - lo
+            recs[i, IS_LEAF] = 0
+            recs[i, NUM_KEYS] = c - 1
+            # separator keys = max key of each child subtree except the last
+            recs[i, KEYS0 : KEYS0 + c - 1] = child_max[lo : hi - 1]
+            recs[i, KEYS0 + c - 1 : KEYS0 + FANOUT] = INT_MAX
+            recs[i, CHILD0 : CHILD0 + c] = child_ptrs[lo:hi]
+            new_max[i] = child_max[hi - 1]
+        b.write(ptrs, recs)
+        child_ptrs, child_max = ptrs, new_max
+    root = int(child_ptrs[0])
+    return b.finish(), root, height
+
+
+def _descend_index(node, key):
+    """First i with key <= keys[i] (Listing 8's inner loop), else num_keys."""
+    nk = node[NUM_KEYS]
+    keys = jnp.asarray(node[KEYS0 : KEYS0 + FANOUT])
+    idx = jnp.arange(FANOUT, dtype=jnp.int32)
+    ok = (idx < nk) & (key <= keys)
+    return jnp.where(ok.any(), jnp.argmax(ok).astype(jnp.int32), nk)
+
+
+def find_iterator() -> PulseIterator:
+    """``btree::internal_locate_plain_compare`` (Listing 9) + leaf probe."""
+    S = 3  # [search_key, result_value, found]
+
+    def init(search_keys, root_ptr):
+        sk = jnp.asarray(search_keys, jnp.int32)
+        B = sk.shape[0]
+        scratch = jnp.zeros((B, S), jnp.int32).at[:, 0].set(sk)
+        return jnp.full((B,), root_ptr, jnp.int32), scratch
+
+    def next_fn(node, ptr, scratch):
+        i = _descend_index(node, scratch[0])
+        child = jnp.asarray(node[CHILD0 : CHILD0 + FANOUT + 1])[i]
+        return child, scratch
+
+    def end_fn(node, ptr, scratch):
+        key = scratch[0]
+        leaf = node[IS_LEAF] == 1
+        keys = jnp.asarray(node[KEYS0 : KEYS0 + FANOUT])
+        vals = jnp.asarray(node[VAL0 : VAL0 + FANOUT])
+        nk = node[NUM_KEYS]
+        idx = jnp.arange(FANOUT, dtype=jnp.int32)
+        hitvec = (idx < nk) & (keys == key)
+        hit = hitvec.any() & leaf
+        val = jnp.where(hit, vals[jnp.argmax(hitvec)], jnp.int32(KEY_NOT_FOUND))
+        scratch = scratch.at[1].set(jnp.where(leaf, val, scratch[1]))
+        scratch = scratch.at[2].set(jnp.where(leaf, hit.astype(jnp.int32), scratch[2]))
+        return leaf, scratch
+
+    return PulseIterator(S, next_fn, end_fn, init, name="btree_find")
+
+
+# scratch layout for range aggregation (the BTrDB workload: stateful
+# sum/min/max/count over a key window, paper S6 "stateful aggregations").
+RA_LO, RA_HI, RA_SUM, RA_MIN, RA_MAX, RA_COUNT = 0, 1, 2, 3, 4, 5
+RA_WORDS = 6
+
+
+def range_aggregate_iterator() -> PulseIterator:
+    """Descend to the first leaf >= lo, then walk the leaf chain accumulating
+    sum/min/max/count of values with key in [lo, hi]."""
+
+    def init(lo, hi, root_ptr):
+        lo = jnp.asarray(lo, jnp.int32)
+        hi = jnp.asarray(hi, jnp.int32)
+        B = lo.shape[0]
+        scratch = jnp.zeros((B, RA_WORDS), jnp.int32)
+        scratch = scratch.at[:, RA_LO].set(lo)
+        scratch = scratch.at[:, RA_HI].set(hi)
+        scratch = scratch.at[:, RA_MIN].set(INT_MAX)
+        scratch = scratch.at[:, RA_MAX].set(INT_MIN)
+        return jnp.full((B,), root_ptr, jnp.int32), scratch
+
+    def next_fn(node, ptr, scratch):
+        leaf = node[IS_LEAF] == 1
+        i = _descend_index(node, scratch[RA_LO])
+        child = jnp.asarray(node[CHILD0 : CHILD0 + FANOUT + 1])[i]
+        nxt = jnp.where(leaf, node[NEXT_LEAF], child)
+        return nxt, scratch
+
+    def end_fn(node, ptr, scratch):
+        leaf = node[IS_LEAF] == 1
+        nk = node[NUM_KEYS]
+        keys = jnp.asarray(node[KEYS0 : KEYS0 + FANOUT])
+        vals = jnp.asarray(node[VAL0 : VAL0 + FANOUT])
+        idx = jnp.arange(FANOUT, dtype=jnp.int32)
+        in_rng = (idx < nk) & (keys >= scratch[RA_LO]) & (keys <= scratch[RA_HI]) & leaf
+        s = jnp.where(in_rng, vals, 0).sum()
+        mn = jnp.where(in_rng, vals, INT_MAX).min()
+        mx = jnp.where(in_rng, vals, INT_MIN).max()
+        c = in_rng.sum().astype(jnp.int32)
+        scratch = scratch.at[RA_SUM].add(s)
+        scratch = scratch.at[RA_MIN].min(mn)
+        scratch = scratch.at[RA_MAX].max(mx)
+        scratch = scratch.at[RA_COUNT].add(c)
+        # done: last key in this leaf already past hi, or end of chain
+        lastkey = jnp.where(nk > 0, keys[jnp.maximum(nk - 1, 0)], INT_MAX)
+        done = leaf & ((lastkey > scratch[RA_HI]) | (node[NEXT_LEAF] == NULL))
+        return done, scratch
+
+    return PulseIterator(RA_WORDS, next_fn, end_fn, init, name="btree_range_agg")
+
+
+# ------------------------------- references --------------------------------
+
+
+def ref_find(keys, values, search_keys):
+    d = {int(k): int(v) for k, v in zip(keys, values)}
+    return [(d.get(int(k), KEY_NOT_FOUND), int(int(k) in d)) for k in search_keys]
+
+
+def ref_range_aggregate(keys, values, los, his):
+    keys = np.asarray(keys, np.int64)
+    values = np.asarray(values, np.int64)
+    order = np.argsort(keys)
+    keys, values = keys[order], values[order]
+    out = []
+    for lo, hi in zip(los, his):
+        m = (keys >= lo) & (keys <= hi)
+        v = values[m]
+        out.append(
+            (
+                int(v.sum() % (2**32) if len(v) else 0),
+                int(v.min()) if len(v) else INT_MAX,
+                int(v.max()) if len(v) else INT_MIN,
+                int(len(v)),
+            )
+        )
+    return out

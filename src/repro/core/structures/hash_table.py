@@ -1,0 +1,128 @@
+"""Bucket-chained hash table: ``unordered_map::find`` (paper Listings 2-3).
+
+``init()`` runs on the CPU node: it hashes the key and resolves the bucket
+head pointer (the paper computes ``bucket_ptr(hash(key))`` in ``init``).  The
+chain walk is the offloaded traversal.  Node layout (W=4):
+``[key, value, next, pad]``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.arena import NULL, ArenaBuilder
+from repro.core.iterator import PulseIterator
+
+NODE_WORDS = 4
+KEY, VALUE, NEXT = 0, 1, 2
+SCRATCH_WORDS = 3  # [search_key, result_value, found]
+KEY_NOT_FOUND = -(2**31) + 1
+
+_MULT = np.int64(2654435761)  # Knuth multiplicative hash
+
+
+def hash_fn(key, n_buckets: int):
+    """32-bit multiplicative hash; identical in numpy and jnp."""
+    if isinstance(key, (int, np.integer)) or isinstance(key, np.ndarray):
+        h = (np.int64(key) * _MULT) & np.int64(0x7FFFFFFF)
+        return (h % n_buckets).astype(np.int32) if isinstance(h, np.ndarray) else np.int32(h % n_buckets)
+    h = (jnp.asarray(key, jnp.uint32) * jnp.uint32(2654435761)) & jnp.uint32(0x7FFFFFFF)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def _np_hash(keys: np.ndarray, n_buckets: int) -> np.ndarray:
+    h = (keys.astype(np.uint32) * np.uint32(2654435761)) & np.uint32(0x7FFFFFFF)
+    return (h % np.uint32(n_buckets)).astype(np.int32)
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    n_buckets: int,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Returns (arena, bucket_heads (n_buckets,) int32 np array)."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    n = len(keys)
+    cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    ptrs = b.alloc(n)
+    heads = np.full(n_buckets, NULL, np.int32)
+    rec = np.zeros((n, NODE_WORDS), np.int32)
+    rec[:, KEY] = keys
+    rec[:, VALUE] = values
+    buckets = _np_hash(keys, n_buckets)
+    # push-front insertion per bucket
+    for i in range(n):
+        rec[i, NEXT] = heads[buckets[i]]
+        heads[buckets[i]] = ptrs[i]
+    b.write(ptrs, rec)
+    return b.finish(), heads
+
+
+def find_iterator(n_buckets: int) -> PulseIterator:
+    """``unordered_map::find`` (Listing 3)."""
+
+    def init(search_keys, bucket_heads):
+        sk = jnp.asarray(search_keys, jnp.int32)
+        buckets = hash_fn(sk, n_buckets)
+        ptr0 = jnp.take(jnp.asarray(bucket_heads, jnp.int32), buckets, axis=0)
+        B = sk.shape[0]
+        scratch0 = jnp.zeros((B, SCRATCH_WORDS), jnp.int32)
+        scratch0 = scratch0.at[:, 0].set(sk)
+        # Empty bucket: ptr0 == NULL -> the executor faults it immediately;
+        # mark result up-front so the CPU node can interpret the fault.
+        scratch0 = scratch0.at[:, 1].set(KEY_NOT_FOUND)
+        return ptr0, scratch0
+
+    def next_fn(node, ptr, scratch):
+        return node[NEXT], scratch
+
+    def end_fn(node, ptr, scratch):
+        key = scratch[0]
+        hit = node[KEY] == key
+        tail = node[NEXT] == NULL
+        scratch = scratch.at[1].set(
+            jnp.where(hit, node[VALUE], jnp.int32(KEY_NOT_FOUND))
+        )
+        scratch = scratch.at[2].set(hit.astype(jnp.int32))
+        return hit | tail, scratch
+
+    return PulseIterator(
+        scratch_words=SCRATCH_WORDS,
+        next_fn=next_fn,
+        end_fn=end_fn,
+        init_fn=init,
+        name="hash_find",
+    )
+
+
+# ------------------------------- references --------------------------------
+
+
+def ref_find(keys, values, n_buckets, search_keys):
+    """Oracle: (value, found, hops) per query, matching chain order."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    buckets = _np_hash(keys, n_buckets)
+    chains: dict[int, list[int]] = {}
+    for i in range(len(keys)):
+        chains.setdefault(int(buckets[i]), []).insert(0, i)  # push-front
+    out = []
+    for sk in np.asarray(search_keys, np.int32):
+        b = int(_np_hash(np.asarray([sk], np.int32), n_buckets)[0])
+        chain = chains.get(b, [])
+        val, found, hops = KEY_NOT_FOUND, 0, 0
+        for idx in chain:
+            hops += 1
+            if int(keys[idx]) == int(sk):
+                val, found = int(values[idx]), 1
+                break
+        else:
+            hops = len(chain)
+        out.append((val, found, hops))
+    return out

@@ -1,0 +1,116 @@
+"""STL ``std::find`` over list/forward_list (paper Listings 4-5).
+
+Node layout (W=4): ``[key, value, next, pad]``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.arena import NULL, ArenaBuilder
+from repro.core.iterator import PulseIterator
+
+NODE_WORDS = 4
+KEY, VALUE, NEXT = 0, 1, 2
+
+# scratch layout for find: [search_key, result_value, found_flag]
+SCRATCH_WORDS = 3
+KEY_NOT_FOUND = -(2**31) + 1
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Builds a singly linked list in list order; returns (arena, head_ptr)."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    n = len(keys)
+    cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    ptrs = b.alloc(n)
+    rec = np.zeros((n, NODE_WORDS), np.int32)
+    rec[:, KEY] = keys
+    rec[:, VALUE] = values
+    rec[:-1, NEXT] = ptrs[1:]
+    rec[-1, NEXT] = NULL
+    b.write(ptrs, rec)
+    return b.finish(), int(ptrs[0])
+
+
+def find_iterator() -> PulseIterator:
+    """``std::find(first, last, value)`` -> PULSE (Listing 5)."""
+
+    def init(search_keys, head_ptr):
+        B = search_keys.shape[0]
+        ptr0 = jnp.full((B,), head_ptr, jnp.int32)
+        scratch0 = jnp.zeros((B, SCRATCH_WORDS), jnp.int32)
+        scratch0 = scratch0.at[:, 0].set(jnp.asarray(search_keys, jnp.int32))
+        return ptr0, scratch0
+
+    def next_fn(node, ptr, scratch):
+        return node[NEXT], scratch
+
+    def end_fn(node, ptr, scratch):
+        key = scratch[0]
+        hit = node[KEY] == key
+        tail = node[NEXT] == NULL
+        done = hit | tail
+        scratch = scratch.at[1].set(
+            jnp.where(hit, node[VALUE], jnp.int32(KEY_NOT_FOUND))
+        )
+        scratch = scratch.at[2].set(hit.astype(jnp.int32))
+        return done, scratch
+
+    return PulseIterator(
+        scratch_words=SCRATCH_WORDS,
+        next_fn=next_fn,
+        end_fn=end_fn,
+        init_fn=init,
+        name="list_find",
+    )
+
+
+def sum_iterator() -> PulseIterator:
+    """Stateful aggregation: sum all values along the chain (scratch carries
+    the running sum -- the paper's 'continuation' use of the scratch pad)."""
+    S = 2  # [running_sum, count]
+
+    def init(head_ptrs):
+        B = head_ptrs.shape[0]
+        return jnp.asarray(head_ptrs, jnp.int32), jnp.zeros((B, S), jnp.int32)
+
+    def next_fn(node, ptr, scratch):
+        return node[NEXT], scratch
+
+    def end_fn(node, ptr, scratch):
+        scratch = scratch.at[0].add(node[VALUE])
+        scratch = scratch.at[1].add(1)
+        return node[NEXT] == NULL, scratch
+
+    return PulseIterator(S, next_fn, end_fn, init, name="list_sum")
+
+
+# ------------------------------- references --------------------------------
+
+
+def ref_find(keys, values, search_keys):
+    """Pure-python oracle for find_iterator results (value, found, hops)."""
+    keys = list(map(int, keys))
+    out = []
+    for sk in map(int, search_keys):
+        hops = 0
+        val, found = KEY_NOT_FOUND, 0
+        for i, k in enumerate(keys):
+            hops += 1
+            if k == sk:
+                val, found = int(values[i]), 1
+                break
+        else:
+            hops = len(keys)
+        out.append((val, found, hops))
+    return out

@@ -1,0 +1,118 @@
+"""Skip list with PULSE-friendly fat pointers (beyond-paper structure).
+
+A classic skip-list search compares the *successor's* key before advancing,
+which would need two loads per hop.  PULSE's single-aggregated-LOAD rule
+(S4.1) motivates a near-memory-friendly layout that caches each successor's
+key next to its pointer ("fat pointers"), the same co-design trick as the
+disaggregated-native structures the paper cites (Sherman/ROLEX, S2.2):
+
+  node (W=12): [key, value, (next_ptr[l], next_key[l]) for l in 0..3, pad, pad]
+
+One load per hop then suffices: pick the highest level whose cached successor
+key does not overshoot the target.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.arena import NULL, ArenaBuilder
+from repro.core.iterator import PulseIterator
+
+LEVELS = 4
+NODE_WORDS = 12
+KEY, VALUE = 0, 1
+NPTR0 = 2  # next ptrs at words 2,4,6,8 ; next keys at 3,5,7,9
+KEY_NOT_FOUND = -(2**31) + 1
+INT_MAX = 2**31 - 1
+SCRATCH_WORDS = 3  # [target, value, found]
+
+
+def _level_of(i: int) -> int:
+    """Deterministic geometric(1/4) level from a hashed index."""
+    h = (i * 2654435761) & 0xFFFFFFFF
+    lvl = 0
+    while lvl < LEVELS - 1 and (h & 3) == 3:
+        lvl += 1
+        h >>= 2
+    return lvl
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Builds from sorted keys; returns (arena, head_ptr)."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    order = np.argsort(keys, kind="stable")
+    keys, values = keys[order], values[order]
+    n = len(keys)
+    total = n + 1  # + head
+    cap = capacity or max(
+        num_shards, ((total + num_shards - 1) // num_shards) * num_shards
+    )
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    ptrs = b.alloc(total)  # ptrs[0] = head, ptrs[1+i] = i-th key
+    levels = np.array([LEVELS - 1] + [_level_of(i) for i in range(n)])
+    rec = np.zeros((total, NODE_WORDS), np.int32)
+    rec[0, KEY] = -(2**31)
+    rec[1:, KEY] = keys
+    rec[1:, VALUE] = values
+    # default: no successor
+    for l in range(LEVELS):
+        rec[:, NPTR0 + 2 * l] = NULL
+        rec[:, NPTR0 + 2 * l + 1] = INT_MAX
+    # link each level
+    for l in range(LEVELS):
+        chain = [0] + [i + 1 for i in range(n) if levels[i + 1] >= l]
+        for a, bnode in zip(chain[:-1], chain[1:]):
+            rec[a, NPTR0 + 2 * l] = ptrs[bnode]
+            rec[a, NPTR0 + 2 * l + 1] = rec[bnode, KEY]
+    b.write(ptrs, rec)
+    return b.finish(), int(ptrs[0])
+
+
+def find_iterator() -> PulseIterator:
+    def init(search_keys, head_ptr):
+        sk = jnp.asarray(search_keys, jnp.int32)
+        B = sk.shape[0]
+        scratch = jnp.zeros((B, SCRATCH_WORDS), jnp.int32)
+        scratch = scratch.at[:, 0].set(sk)
+        scratch = scratch.at[:, 1].set(KEY_NOT_FOUND)
+        return jnp.full((B,), head_ptr, jnp.int32), scratch
+
+    def _advance(node, target):
+        nkeys = jnp.stack([node[NPTR0 + 2 * l + 1] for l in range(LEVELS)])
+        nptrs = jnp.stack([node[NPTR0 + 2 * l] for l in range(LEVELS)])
+        ok = nkeys <= target  # safe to jump at these levels
+        # highest safe level = longest jump
+        lvl = (LEVELS - 1) - jnp.argmax(ok[::-1]).astype(jnp.int32)
+        can = ok.any()
+        return can, jnp.where(can, nptrs[lvl], NULL)
+
+    def next_fn(node, ptr, scratch):
+        _, nxt = _advance(node, scratch[0])
+        return nxt, scratch
+
+    def end_fn(node, ptr, scratch):
+        target = scratch[0]
+        hit = node[KEY] == target
+        can, _ = _advance(node, target)
+        done = hit | ~can  # found, or stuck (no successor <= target)
+        scratch = scratch.at[1].set(
+            jnp.where(hit, node[VALUE], jnp.int32(KEY_NOT_FOUND))
+        )
+        scratch = scratch.at[2].set(hit.astype(jnp.int32))
+        return done, scratch
+
+    return PulseIterator(SCRATCH_WORDS, next_fn, end_fn, init, name="skiplist_find")
+
+
+def ref_find(keys, values, search_keys):
+    d = {int(k): int(v) for k, v in zip(keys, values)}
+    return [(d.get(int(k), KEY_NOT_FOUND), int(int(k) in d)) for k in search_keys]

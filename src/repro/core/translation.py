@@ -1,0 +1,55 @@
+"""Hierarchical address translation (PULSE S5).
+
+Two levels, exactly as in the paper (Fig. 6):
+
+  1. **Switch level** -- the programmable switch stores only the
+     *base-address -> memory-node* map.  Here that is the sorted ``bounds``
+     array replicated on every shard; ``owner_of`` is the TCAM lookup,
+     realized as a branch-free ``searchsorted``.
+  2. **Node level** -- each memory node translates a global address to a
+     local offset (``local_offset``) and enforces protection
+     (``check_access``).  A translation/protection failure terminates the
+     traversal with a FAULT status that is routed back to the CPU node
+     (S4.2 scheduler step 4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.arena import NULL, PERM_READ
+
+
+def owner_of(bounds: jnp.ndarray, ptr: jnp.ndarray) -> jnp.ndarray:
+    """Switch-level lookup: which memory node owns global address ``ptr``.
+
+    Returns -1 for NULL / out-of-range addresses (invalid pointer -> the
+    switch notifies the CPU node, Fig. 6 step 6).
+    """
+    ptr = jnp.asarray(ptr, jnp.int32)
+    shard = jnp.searchsorted(bounds, ptr, side="right").astype(jnp.int32) - 1
+    num_shards = bounds.shape[0] - 1
+    valid = (ptr >= 0) & (ptr < bounds[-1]) & (shard >= 0) & (shard < num_shards)
+    return jnp.where(valid, shard, jnp.int32(NULL))
+
+
+def local_offset(bounds: jnp.ndarray, shard: jnp.ndarray, ptr: jnp.ndarray) -> jnp.ndarray:
+    """Node-level translation: global address -> row offset in the shard."""
+    base = jnp.take(bounds, jnp.clip(shard, 0, bounds.shape[0] - 2), axis=0)
+    return jnp.asarray(ptr, jnp.int32) - base
+
+
+def is_local(bounds: jnp.ndarray, shard_id, ptr) -> jnp.ndarray:
+    """True iff ``ptr`` translates locally on ``shard_id`` (no re-route)."""
+    lo = jnp.take(bounds, jnp.asarray(shard_id, jnp.int32), axis=0)
+    hi = jnp.take(bounds, jnp.asarray(shard_id, jnp.int32) + 1, axis=0)
+    ptr = jnp.asarray(ptr, jnp.int32)
+    return (ptr >= lo) & (ptr < hi)
+
+
+def check_access(perms: jnp.ndarray, shard: jnp.ndarray, want: int = PERM_READ) -> jnp.ndarray:
+    """Node-level protection check: does the range grant ``want`` access."""
+    num_shards = perms.shape[0]
+    safe = jnp.clip(shard, 0, num_shards - 1)
+    ok = (jnp.take(perms, safe, axis=0) & want) == want
+    return ok & (shard >= 0) & (shard < num_shards)

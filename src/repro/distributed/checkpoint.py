@@ -1,0 +1,167 @@
+"""Sharded, async, atomic checkpointing with exact resume.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        manifest.json          tree structure, shapes, dtypes, mesh info
+        shard_<host>.npz       this host's addressable array shards
+    <dir>/LATEST               atomic pointer (written last)
+
+Properties a 1000-node deployment needs, all implemented + tested:
+  * per-host shard files (no single-writer bottleneck; here host 0 only,
+    but the layout and the manifest carry ``num_hosts``);
+  * atomic commit: data files first, then LATEST via os.replace -- a crash
+    mid-save can never corrupt the restorable state;
+  * async save: the device->host copy happens synchronously (cheap), the
+    file write on a worker thread so the train loop keeps stepping;
+  * exact resume: params, optimizer moments, data-iterator step, RNG -- the
+    post-restore training trajectory is bitwise identical (tested);
+  * elastic restore: a checkpoint saved on one mesh restores onto another
+    (resharding happens at device_put with the new mesh's shardings).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _tree_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(_k(k) for k in path) for path, _ in flat]
+
+
+def _k(entry):
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    return str(entry)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, host_id: int = 0, num_hosts: int = 1,
+                 keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+
+    # ------------------------------ save ------------------------------------
+
+    def save(self, state, step: int, *, extra: dict | None = None, block: bool = False):
+        """state: pytree of jax arrays.  ``extra``: small json-able dict
+        (data iterator step, rng key bytes, etc.)."""
+        self.wait()  # one in-flight save at a time
+        leaves, treedef = _flatten(state)
+        paths = _tree_paths(state)
+        # device -> host copy happens NOW (state may mutate next step)
+        host_leaves = [np.asarray(x) for x in leaves]
+        manifest = {
+            "step": step,
+            "num_hosts": self.num_hosts,
+            "paths": paths,
+            "shapes": [list(x.shape) for x in host_leaves],
+            "dtypes": [str(x.dtype) for x in host_leaves],
+            "extra": extra or {},
+        }
+
+        def write():
+            final = self.dir / f"step_{step:08d}"
+            tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_save_"))
+            try:
+                np.savez(
+                    tmp / f"shard_{self.host_id}.npz",
+                    **{f"a{i}": x for i, x in enumerate(host_leaves)},
+                )
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                # atomic LATEST pointer, written last
+                ptr = self.dir / ".LATEST_tmp"
+                ptr.write_text(str(step))
+                os.replace(ptr, self.dir / "LATEST")
+                self._gc()
+            finally:
+                if tmp.exists():
+                    shutil.rmtree(tmp, ignore_errors=True)
+
+        if self.async_save and not block:
+            t = threading.Thread(target=write, daemon=True)
+            t.start()
+            self._pending = t
+        else:
+            write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ----------------------------- restore ----------------------------------
+
+    def all_steps(self):
+        return [
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if (p / "manifest.json").exists()
+        ]
+
+    def latest_step(self) -> int | None:
+        ptr = self.dir / "LATEST"
+        if ptr.exists():
+            s = int(ptr.read_text())
+            if (self.dir / f"step_{s:08d}" / "manifest.json").exists():
+                return s
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, like_state, step: int | None = None, *, shardings=None):
+        """Restore into the structure of ``like_state``; device_put with
+        ``shardings`` (pytree of NamedSharding) reshards onto the current
+        mesh -- this is the elastic-restore path."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / f"shard_{self.host_id}.npz")
+        leaves = [data[f"a{i}"] for i in range(len(manifest["paths"]))]
+        _, treedef = _flatten(like_state)
+        like_leaves = jax.tree_util.tree_leaves(like_state)
+        if len(like_leaves) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, expected {len(like_leaves)}"
+            )
+        if shardings is not None:
+            shard_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec") or x is None
+            )
+            out = [
+                jax.device_put(x, s) if s is not None else jax.device_put(x)
+                for x, s in zip(leaves, shard_leaves)
+            ]
+        else:
+            out = [jax.device_put(x) for x in leaves]
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"], step

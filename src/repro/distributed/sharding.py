@@ -1,0 +1,190 @@
+"""Logical sharding rules: param-path pattern -> PartitionSpec.
+
+Conventions (Megatron TP + FSDP hybrid):
+  * ``model`` axis: TP for attention heads / MLP hidden, EP for experts,
+    vocab-parallel for embed/unembed.
+  * ``data`` (+``pod``): FSDP shards the *other* matrix dimension, so every
+    large matrix is 2-D sharded; DP handles batch.
+  * Norm scales / biases / small vectors: replicated.
+  * Scan-stacked params carry a leading layer axis: specs get None prepended
+    automatically (detected by leaf rank vs rule rank).
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    """The data-parallel axes usable for FSDP sharding."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_hint(x, mesh, *axes):
+    """Best-effort ``with_sharding_constraint``.
+
+    ``axes`` entries: mesh axis name(s), ``None``, or the placeholder
+    ``"dp"`` (resolves to the (pod, data) axes present).  Axes that are
+    missing from the mesh or do not divide the dim are dropped; with no mesh
+    this is a no-op -- so model code can sprinkle hints freely and CPU tests
+    stay mesh-free.  These hints are what keep activations batch-sharded
+    through gathers (XLA loses the batch sharding at the embedding lookup;
+    measured 16x replicated compute without them -- EXPERIMENTS.md S Perf).
+    """
+    if mesh is None or x.ndim != len(axes):
+        return x
+    resolved = []
+    for dim, ax in zip(x.shape, axes):
+        if ax == "dp":
+            ax = fsdp_axes(mesh) or None
+        if ax is None:
+            resolved.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        if not all(a in mesh.axis_names for a in names):
+            resolved.append(None)
+            continue
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        resolved.append(ax if (dim % size == 0 and dim >= size) else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))
+
+
+def param_rules(mesh: Mesh):
+    fsdp = fsdp_axes(mesh)
+    fs = fsdp if fsdp else None
+    return [
+        # embeddings: vocab-parallel x fsdp
+        (r"embed$", P("model", fs)),
+        (r"unembed/w$", P(fs, "model")),
+        (r"patch_proj/w$", P(fs, "model")),
+        (r"frame_proj/w$", P(fs, "model")),
+        # attention
+        (r"(attn|self_attn|cross_attn)/wq/w$", P(fs, "model")),
+        (r"(attn|self_attn|cross_attn)/wk/w$", P(fs, "model")),
+        (r"(attn|self_attn|cross_attn)/wv/w$", P(fs, "model")),
+        (r"(attn|self_attn|cross_attn)/wo/w$", P("model", fs)),
+        (r"(attn|self_attn|cross_attn)/w[qkv]/b$", P("model")),
+        (r"(attn|self_attn|cross_attn)/wo/b$", P()),
+        # dense mlp
+        (r"mlp/wi/w$", P(fs, "model")),
+        (r"mlp/wg/w$", P(fs, "model")),
+        (r"mlp/wo/w$", P("model", fs)),
+        (r"mlp/wi/b$", P("model")),
+        (r"mlp/wo/b$", P()),
+        # moe: experts over model (EP), dims over fsdp
+        (r"moe/wi$", P("model", fs, None)),
+        (r"moe/wg$", P("model", fs, None)),
+        (r"moe/wo$", P("model", None, fs)),
+        (r"moe/router/w$", P(fs, None)),
+        (r"moe/shared/wi/w$", P(fs, "model")),
+        (r"moe/shared/wg/w$", P(fs, "model")),
+        (r"moe/shared/wo/w$", P("model", fs)),
+        # ssm
+        (r"ssm/in_proj/w$", P(fs, "model")),
+        (r"ssm/out_proj/w$", P("model", fs)),
+        (r"ssm/conv_w$", P(None, "model")),
+        (r"ssm/conv_b$", P("model")),
+        (r"ssm/(A_log|dt_bias|D_skip)$", P()),
+        (r"ssm/norm/scale$", P("model")),
+        # everything else (norms, small vectors): replicated
+        (r".*", P()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, leaf, rules) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path_str):
+            # scan-stacked leaves have extra leading axes: left-pad with None
+            pad = leaf.ndim - len(spec)
+            if pad < 0:
+                # leaf smaller than rule (e.g. non-parametric norm) -> replicate
+                return P()
+            flat = (None,) * pad + tuple(spec)
+            # avoid sharding tiny dims: drop axes that don't divide
+            return P(*flat)
+    return P()
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpec for a param pytree."""
+    rules = param_rules(mesh)
+
+    def one(path, leaf):
+        spec = spec_for(_path_str(path), leaf, rules)
+        # validity: every named axis must divide the dim; else drop that axis
+        fixed = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            fixed.append(ax if dim % size == 0 and dim >= size else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )
+
+
+def opt_state_specs(opt_state, param_spec_tree):
+    """Optimizer moments mirror their param's spec; scalars replicate.
+
+    Works for adamw {mu, nu, step} and adafactor {v: {v|vr,vc}, step}.
+    """
+
+    def like(sub):
+        return jax.tree.map(lambda s: s, param_spec_tree)
+
+    out = {}
+    for k, v in opt_state.items():
+        if k == "step":
+            out[k] = P()
+        elif k in ("mu", "nu"):
+            out[k] = param_spec_tree
+        elif k == "v":
+            # adafactor: factored stats drop the last (vr) or second-to-last
+            # (vc) axis of the param spec
+            def fac(path, leaf):
+                # best-effort: replicate factored stats (they are small)
+                return P()
+
+            out[k] = jax.tree_util.tree_map_with_path(fac, v)
+        else:
+            out[k] = jax.tree.map(lambda _: P(), v)
+    return out
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Batch dim over (pod, data); everything else replicated."""
+    dp = fsdp_axes(mesh)
+    dp = dp if dp else None
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, batch)

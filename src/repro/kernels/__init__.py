@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  pulse_chase      the paper's accelerator: decoupled DMA (memory pipeline)
+                   and iterator logic (logic pipeline), wave-multiplexed
+  paged_attention  PULSE traversal fused with flash-decode for serving
+  flash_attention  blockwise online-softmax attention (train/prefill)
+  ssd_scan         Mamba2 SSD chunked scan (MXU-shaped state passing)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper
+with XLA fallback), ref.py (pure-jnp oracle).  All kernels validate in
+``interpret=True`` on CPU; ``use_pallas=False`` selects the XLA path that
+the dry-run/roofline flow lowers.
+"""

@@ -1,0 +1,141 @@
+"""FlashAttention forward (GQA, causal or full) as a Pallas TPU kernel.
+
+Classic blockwise online-softmax attention with explicit BlockSpec VMEM
+tiling.  Grid = (B, H, num_q_blocks, num_k_blocks); the last axis iterates
+sequentially on a TPU core, so the running max / denominator / accumulator
+live in VMEM scratch across k-blocks.  Causal masking skips whole k-blocks
+above the diagonal (``pl.when``), and the diagonal block applies the
+per-element mask.
+
+MXU alignment: block_q/block_k multiples of 128 recommended on real TPU;
+head_dim is the lane dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    o_ref,  # (1, 1, bq, D)
+    m_scr,  # (bq, 1) f32
+    l_scr,  # (bq, 1) f32
+    acc_scr,  # (bq, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: k-block strictly above the diagonal contributes nothing
+    q_end = q_offset + (qi + 1) * block_q - 1  # last absolute q row here
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        if causal:
+            rows = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    if causal:
+        pl.when(k_start <= q_end)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, Lq, D)
+    k: jax.Array,  # (B, Hk, Lk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    B, H, Lq, D = q.shape
+    _, Hk, Lk, _ = k.shape
+    if H % Hk:
+        raise ValueError(f"H={H} not a multiple of Hk={Hk}")
+    G = H // Hk
+    block_q = min(block_q, Lq)
+    block_k = min(block_k, Lk)
+    if Lq % block_q or Lk % block_k:
+        raise ValueError("sequence lengths must divide block sizes")
+    nq, nk = Lq // block_q, Lk // block_k
+    scale = (D ** -0.5) if scale is None else scale
+    # decode-style queries attend at the END of the kv sequence
+    q_offset = Lk - Lq if causal else 0
+
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""jit'd FlashAttention wrapper with reference fallback + custom VJP.
+
+Forward = Pallas kernel (or the jnp reference on the XLA path).  Backward =
+recompute-based VJP through the chunked jnp reference: numerically matches
+the kernel forward (both are exact softmax attention), and keeps memory at
+O(L) via chunk remat.  A dedicated flash backward kernel is a listed future
+optimization; the dry-run/roofline path uses the XLA chunked implementation
+in ``repro.models.attention`` either way.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_reference
+
+
+@partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7),
+)
+def flash_attention(
+    q, k, v, causal=True, block_q=128, block_k=128, interpret=True, use_pallas=True
+):
+    if not use_pallas:
+        return mha_reference(q, k, v, causal=causal)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def _fwd(q, k, v, causal, block_q, block_k, interpret, use_pallas):
+    o = flash_attention(q, k, v, causal, block_q, block_k, interpret, use_pallas)
+    return o, (q, k, v)
+
+
+def _bwd(causal, block_q, block_k, interpret, use_pallas, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: mha_reference(q, k, v, causal=causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

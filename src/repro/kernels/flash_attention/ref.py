@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: GQA multi-head attention (causal or full)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, H, Lq, D); k, v: (B, Hk, Lk, D) with H % Hk == 0."""
+    B, H, Lq, D = q.shape
+    Hk = k.shape[1]
+    G = H // Hk
+    scale = (D ** -0.5) if scale is None else scale
+    kq = jnp.repeat(k, G, axis=1)
+    vq = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        Lk = k.shape[2]
+        mask = jnp.tril(jnp.ones((Lq, Lk), bool), k=Lk - Lq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32))
+    return o.astype(q.dtype)

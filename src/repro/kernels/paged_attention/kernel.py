@@ -1,0 +1,137 @@
+"""Paged decode attention: PULSE pointer traversal fused with flash-decode.
+
+This is ``pulse_chase`` specialized to serving: each sequence's KV cache is a
+chain of fixed-size pages (page table built by walking a PULSE linked list in
+the serving arena), and the per-iteration work is "fetch page -> partial
+softmax".  The PULSE accelerator mapping:
+
+  * memory pipeline -> the page DMA selected *by the scalar-prefetched page
+    table* via the BlockSpec index_map (Pallas prefetches the next grid
+    step's page while this one computes -- the disaggregated fetch/logic
+    overlap of S4.2, done by the hardware pipeline for us);
+  * logic pipeline  -> the online-softmax accumulation over the landed page;
+  * scratch_pad     -> (m, l, acc) carried across pages in VMEM scratch.
+
+Grid = (B, Hk, num_pages); the page axis iterates sequentially per core, so
+the accumulator persists.  All G = H/Hk query heads of a KV head are
+processed together (they share the fetched page -- one aggregated LOAD, many
+consumers, the S4.1 load-aggregation argument).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    # scalar prefetch
+    page_table_ref,  # (B, P) int32 (SMEM)
+    lengths_ref,  # (B,) int32 (SMEM)
+    # inputs
+    q_ref,  # (1, 1, G, D)  queries of this kv head's group
+    k_ref,  # (1, page, 1, D)  the page selected by index_map
+    v_ref,  # (1, page, 1, D)
+    # outputs
+    o_ref,  # (1, 1, G, D)
+    # scratch
+    m_scr,  # (G, 1) f32
+    l_scr,  # (G, 1) f32
+    acc_scr,  # (G, D) f32
+    *,
+    page: int,
+    num_pages: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    length = lengths_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid_page = p * page < length
+
+    @pl.when(valid_page)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, page)
+        pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + pexp.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        denom = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jax.Array,  # (B, H, D)
+    k_pages: jax.Array,  # (N, page, Hk, D)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, P) int32
+    lengths: jax.Array,  # (B,) int32
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+):
+    B, H, D = q.shape
+    N, page, Hk, _ = k_pages.shape
+    P = page_table.shape[1]
+    if H % Hk:
+        raise ValueError(f"H={H} not a multiple of Hk={Hk}")
+    G = H // Hk
+    scale = (D ** -0.5) if scale is None else scale
+    # (B, H, D) -> (B, Hk, G, D): group query heads by their kv head
+    qg = q.reshape(B, Hk, G, D)
+
+    kernel = functools.partial(
+        _paged_kernel, page=page, num_pages=P, scale=scale
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hk, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, ln: (b, h, 0, 0)),
+            # the pointer traversal: the page table (already chased out of the
+            # PULSE arena) selects which HBM page the pipeline DMAs next
+            pl.BlockSpec((1, page, 1, D), lambda b, h, p, pt, ln: (pt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda b, h, p, pt, ln: (pt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

@@ -1,0 +1,21 @@
+"""jit'd wrapper for paged decode attention (kernel or jnp reference)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_reference
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def paged_attention(
+    q, k_pages, v_pages, page_table, lengths, *, interpret=True, use_pallas=True
+):
+    if not use_pallas:
+        return paged_attention_reference(q, k_pages, v_pages, page_table, lengths)
+    return paged_attention_pallas(
+        q, k_pages, v_pages, page_table, lengths, interpret=interpret
+    )

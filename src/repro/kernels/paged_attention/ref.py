@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers each sequence's KV pages (page_table order), masks past ``lengths``,
+and runs exact softmax attention for the single new token per sequence.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_reference(
+    q,  # (B, H, D) one query token per sequence
+    k_pages,  # (N, page, Hk, D)
+    v_pages,  # (N, page, Hk, D)
+    page_table,  # (B, P) int32 page ids (padded with anything past lengths)
+    lengths,  # (B,) int32 valid tokens per sequence
+    *,
+    scale: float | None = None,
+):
+    B, H, D = q.shape
+    N, page, Hk, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // Hk
+    scale = (D ** -0.5) if scale is None else scale
+
+    # gather pages -> (B, P*page, Hk, D)
+    safe = jnp.clip(page_table, 0, N - 1)
+    k = jnp.take(k_pages, safe, axis=0).reshape(B, P * page, Hk, D)
+    v = jnp.take(v_pages, safe, axis=0).reshape(B, P * page, Hk, D)
+    kq = jnp.repeat(k, G, axis=2)  # (B, L, H, D)
+    vq = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32), kq.astype(jnp.float32))
+    s = s * scale
+    mask = jnp.arange(P * page)[None, :] < lengths[:, None]  # (B, L)
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhl,blhd->bhd", p, vq.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,180 @@
+"""pulse_chase: the PULSE accelerator as a Pallas TPU kernel (paper S4.2).
+
+TPU-native adaptation of the disaggregated accelerator:
+
+  * **memory pipelines**  -> async HBM->VMEM DMAs gathering one node record
+    per in-flight lane (the single aggregated <=256 B LOAD per iteration,
+    S4.1).  The arena stays in HBM (``pltpu.ANY``); only fetched records
+    enter VMEM, mirroring "only fetched data crosses to the accelerator".
+  * **logic pipelines**   -> the vectorized iterator body (next+end fused)
+    executing on the *previous* wave's records.
+  * **m:n multiplexing**  -> software pipelining across WAVES of lanes:
+    while wave ``g``'s records are in flight (DMA), wave ``g-1`` executes
+    logic.  Property 1 (fetch->logic dependence *within* a lane) is
+    respected; overlap comes only from independent lanes, exactly like the
+    paper's scheduler (Fig. 4 bottom).  The wave count per buffer plays the
+    role of n/m: more waves in flight == more memory pipelines.
+
+Layout notes: node records are int32 rows of width <= 64 (256 B).  For MXU/
+VREG alignment the record width is zero-padded to a 128-lane multiple by
+``ops.pulse_chase`` before entering the kernel; wave size should be a
+multiple of 8 (f32/i32 sublane tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NBUF = 2  # double buffering: one wave in flight per buffer slot
+
+
+def _chase_kernel(
+    # inputs (VMEM unless noted)
+    ptr_ref,  # (B,)   int32  current pointers
+    scratch_ref,  # (B, S) int32  scratch pads
+    status_ref,  # (B,)   int32  0 active / 1 done
+    arena_ref,  # (cap, Wp) int32 in ANY/HBM -- the disaggregated heap
+    # outputs
+    out_ptr_ref,  # (B,)
+    out_scratch_ref,  # (B, S)
+    out_status_ref,  # (B,)
+    # scratch
+    node_buf,  # (NBUF, G, Wp) int32 VMEM -- landed node records
+    copy_sem,  # (NBUF,) DMA semaphores
+    *,
+    logic_fn,
+    num_steps: int,
+    num_waves: int,
+    wave: int,
+):
+    """Single-program kernel; waves of G lanes software-pipeline the DMAs."""
+    B = ptr_ref.shape[0]
+    G = wave
+
+    out_ptr_ref[...] = ptr_ref[...]
+    out_scratch_ref[...] = scratch_ref[...]
+    out_status_ref[...] = status_ref[...]
+
+    def issue_wave(g, step_ptr):
+        """Memory pipeline: start DMAs for wave g's node records."""
+        slot = jax.lax.rem(g, NBUF)
+
+        def one_lane(i, _):
+            lane = g * G + i
+            p = step_ptr[lane]
+            safe = jnp.clip(p, 0, arena_ref.shape[0] - 1)
+            pltpu.make_async_copy(
+                arena_ref.at[pl.ds(safe, 1), :],
+                node_buf.at[slot, pl.ds(i, 1), :],
+                copy_sem.at[slot],
+            ).start()
+            return 0
+
+        jax.lax.fori_loop(0, G, one_lane, 0)
+
+    def wait_wave(g):
+        slot = jax.lax.rem(g, NBUF)
+
+        def one_lane(i, _):
+            pltpu.make_async_copy(
+                arena_ref.at[pl.ds(0, 1), :],
+                node_buf.at[slot, pl.ds(i, 1), :],
+                copy_sem.at[slot],
+            ).wait()
+            return 0
+
+        jax.lax.fori_loop(0, G, one_lane, 0)
+
+    def logic_wave(g):
+        """Logic pipeline: run the iterator body on wave g's landed records."""
+        slot = jax.lax.rem(g, NBUF)
+        nodes = node_buf[slot]  # (G, Wp)
+        lo = g * G
+        ptr = jax.lax.dynamic_slice_in_dim(out_ptr_ref[...], lo, G)
+        scr = jax.lax.dynamic_slice_in_dim(out_scratch_ref[...], lo, G)
+        st = jax.lax.dynamic_slice_in_dim(out_status_ref[...], lo, G)
+        active = st == 0
+        done, nptr, nscr = logic_fn(nodes, ptr, scr)
+        ptr = jnp.where(active & ~done, nptr, ptr).astype(jnp.int32)
+        scr = jnp.where(active[:, None], nscr, scr).astype(jnp.int32)
+        st = jnp.where(active & done, 1, st).astype(jnp.int32)
+        st = jnp.where((st == 0) & (ptr < 0), 1, st).astype(jnp.int32)
+        out_ptr_ref[pl.ds(lo, G)] = ptr
+        out_scratch_ref[pl.ds(lo, G), :] = scr
+        out_status_ref[pl.ds(lo, G)] = st
+
+    def step(k, _):
+        # snapshot pointers for this traversal step: every wave's fetch uses
+        # the pointers produced by step k-1 (Property 1 per lane).
+        step_ptr = out_ptr_ref[...]
+        issue_wave(0, step_ptr)
+
+        def pipelined(g, _):
+            # overlap: start wave g+1's fetch, then execute logic on wave g
+            @pl.when(g + 1 < num_waves)
+            def _():
+                issue_wave(g + 1, step_ptr)
+
+            wait_wave(g)
+            logic_wave(g)
+            return 0
+
+        jax.lax.fori_loop(0, num_waves, pipelined, 0)
+        return 0
+
+    jax.lax.fori_loop(0, num_steps, step, 0)
+
+
+def pulse_chase_pallas(
+    arena: jax.Array,  # (cap, Wp) int32, Wp lane-aligned
+    ptr: jax.Array,  # (B,) int32
+    scratch: jax.Array,  # (B, S)
+    status: jax.Array,  # (B,)
+    *,
+    logic_fn,
+    num_steps: int,
+    wave: int = 8,
+    interpret: bool = False,
+):
+    B = ptr.shape[0]
+    if B % wave:
+        raise ValueError(f"batch {B} must be a multiple of wave size {wave}")
+    num_waves = B // wave
+    Wp = arena.shape[1]
+    kernel = functools.partial(
+        _chase_kernel,
+        logic_fn=logic_fn,
+        num_steps=num_steps,
+        num_waves=num_waves,
+        wave=wave,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # handled below
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct(scratch.shape, jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((NBUF, wave, Wp), jnp.int32),
+            pltpu.SemaphoreType.DMA((NBUF,)),
+        ],
+        interpret=interpret,
+    )(ptr, scratch, status, arena)

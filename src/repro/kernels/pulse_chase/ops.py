@@ -1,0 +1,71 @@
+"""jit'd wrapper for the pulse_chase kernel + PulseIterator adapter."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.iterator import PulseIterator
+from repro.kernels.pulse_chase.kernel import pulse_chase_pallas
+from repro.kernels.pulse_chase.ref import chase_reference
+
+
+def iterator_logic(it: PulseIterator):
+    """Vectorized fused next+end body for a PulseIterator (the compiled
+    iterator the dispatch engine ships to the accelerator)."""
+
+    def one(node, ptr, scratch):
+        if it.step_fn is not None:
+            return it.step_fn(node, ptr, scratch)
+        done, scr = it.end_fn(node, ptr, scratch)
+        nptr, nscr = it.next_fn(node, ptr, scr)
+        return done, jnp.where(done, ptr, nptr), jnp.where(done, scr, nscr)
+
+    def logic(nodes, ptr, scratch):
+        done, nptr, nscr = jax.vmap(one)(nodes, ptr, scratch)
+        return done, nptr.astype(jnp.int32), nscr.astype(jnp.int32)
+
+    return logic
+
+
+@partial(
+    jax.jit,
+    static_argnames=("logic_fn", "num_steps", "wave", "interpret", "use_pallas"),
+)
+def pulse_chase(
+    arena_data: jax.Array,
+    ptr: jax.Array,
+    scratch: jax.Array,
+    status: jax.Array,
+    *,
+    logic_fn,
+    num_steps: int,
+    wave: int = 8,
+    interpret: bool = True,
+    use_pallas: bool = True,
+):
+    """Run ``num_steps`` traversal iterations for a batch of lanes.
+
+    ``use_pallas=False`` falls back to the pure-jnp reference (the XLA path
+    models use on CPU); ``interpret=True`` runs the Pallas kernel body in
+    interpret mode (CPU validation of the TPU kernel).
+    """
+    ptr = jnp.asarray(ptr, jnp.int32)
+    scratch = jnp.asarray(scratch, jnp.int32)
+    status = jnp.asarray(status, jnp.int32)
+    if not use_pallas:
+        return chase_reference(
+            arena_data, ptr, scratch, status, logic_fn, num_steps
+        )
+    return pulse_chase_pallas(
+        jnp.asarray(arena_data, jnp.int32),
+        ptr,
+        scratch,
+        status,
+        logic_fn=logic_fn,
+        num_steps=num_steps,
+        wave=wave,
+        interpret=interpret,
+    )

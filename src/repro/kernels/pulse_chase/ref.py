@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the pulse_chase kernel: K traversal steps for a batch
+of lanes over an arena, with the same masked-update semantics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chase_reference(arena, ptr, scratch, status, logic_fn, num_steps: int):
+    """``logic_fn(nodes (B,W), ptr (B,), scratch (B,S)) -> (done, new_ptr,
+    new_scratch)`` vectorized over lanes.  status: 0 active, 1 done."""
+
+    def body(_, st):
+        ptr, scratch, status = st
+        active = status == 0
+        safe = jnp.clip(ptr, 0, arena.shape[0] - 1)
+        nodes = jnp.take(arena, jnp.where(active, safe, 0), axis=0)
+        done, nptr, nscr = logic_fn(nodes, ptr, scratch)
+        ptr = jnp.where(active & ~done, nptr, ptr).astype(ptr.dtype)
+        scratch = jnp.where(active[:, None], nscr, scratch).astype(scratch.dtype)
+        status = jnp.where(active & done, 1, status).astype(status.dtype)
+        # walking off the structure (NULL) terminates too
+        status = jnp.where((status == 0) & (ptr < 0), 1, status).astype(status.dtype)
+        return ptr, scratch, status
+
+    return jax.lax.fori_loop(0, num_steps, body, (ptr, scratch, status))

@@ -1,0 +1,124 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid = (B, H, num_chunks); the chunk axis runs sequentially per core so the
+inter-chunk state (N, dh) lives in VMEM scratch, exactly like the flash
+accumulator.  Each grid step computes the intra-chunk quadratic part on the
+MXU ((Q,N)@(N,Q), (Q,Q)@(Q,dh)) and the rank-1-sum state update
+((N,Q)@(Q,dh)) -- all MXU-shaped matmuls, which is the whole point of SSD's
+chunked formulation on a systolic array.
+
+Block shapes: chunk Q x state N and Q x dh tiles; Q=128 aligns the MXU; the
+f32 state scratch is (N, dh).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, Q, 1, dh)
+    dt_ref,  # (1, Q, 1)
+    a_ref,  # (1, 1)  A for this head (SMEM-ish tiny block)
+    b_ref,  # (1, Q, N)
+    c_ref,  # (1, Q, N)
+    y_ref,  # (1, Q, 1, dh)
+    state_out_ref,  # (1, 1, N, dh) final state per (batch, head)
+    s_scr,  # (N, dh) f32 inter-chunk state
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    xq = x_ref[0, :, 0].astype(jnp.float32)  # (Q, dh)
+    dtq = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0, 0].astype(jnp.float32)  # ()
+    Bq = b_ref[0].astype(jnp.float32)  # (Q, N)
+    Cq = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    la = dtq * A
+    cs = jnp.cumsum(la)
+    diff = cs[:, None] - cs[None, :]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    Lmat = jnp.exp(jnp.where(tri, diff, -1e9))  # mask pre-exp (NaN-safe VJP)
+    scores = (
+        jax.lax.dot_general(
+            Cq, Bq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * Lmat
+    )  # (Q, Q)
+    xbar = xq * dtq[:, None]
+    y = jax.lax.dot_general(
+        scores, xbar, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y = y + jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        Cq, s_scr[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    decay_out = jnp.exp(cs[-1] - cs)
+    s_scr[...] = jnp.exp(cs[-1]) * s_scr[...] + jax.lax.dot_general(
+        Bq,
+        decay_out[:, None] * xbar,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = s_scr[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, L, H, dh)
+    dt: jax.Array,  # (B, L, H)
+    A: jax.Array,  # (H,)
+    B_in: jax.Array,  # (B, L, N)  single B/C group shared across heads
+    C_in: jax.Array,  # (B, L, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    Bt, L, H, dh = x.shape
+    N = B_in.shape[2]
+    if L % chunk:
+        raise ValueError(f"L={L} must divide chunk={chunk}")
+    nc = L // chunk
+    A2 = A.reshape(H, 1)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, dh), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, dh), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, dh), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, L, H, dh), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, N, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, dh), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A2, B_in, C_in)
+    return y, state

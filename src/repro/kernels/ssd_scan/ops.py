@@ -1,0 +1,19 @@
+"""jit'd wrapper for the SSD scan (kernel or chunked-jnp reference)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_chunked_batched
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret", "use_pallas"))
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=True, use_pallas=True):
+    """x (B,L,H,dh), dt (B,L,H), A (H,), B/C (B,L,N) -> y (B,L,H,dh),
+    final state (B,H,N,dh)."""
+    if not use_pallas:
+        return ssd_chunked_batched(x, dt, A, B, C, chunk=chunk)
+    return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)

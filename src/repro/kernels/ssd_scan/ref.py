@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+Two references:
+  * ``ssd_sequential`` -- the exact per-token recurrence
+        S_t = a_t * S_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t @ S_t
+    with a_t = exp(dt_t * A) (A < 0 per head).  Ground truth.
+  * ``ssd_chunked``    -- the SSD chunked algorithm (arXiv:2405.21060 S6):
+    intra-chunk quadratic part + inter-chunk state passing.  This is what the
+    Pallas kernel implements blockwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(x, dt, A, B, C, *, init_state=None):
+    """x: (L, dh); dt: (L,); A: scalar<0; B, C: (L, N).  Returns (y, S)."""
+    L, dh = x.shape
+    N = B.shape[1]
+    S0 = jnp.zeros((N, dh), jnp.float32) if init_state is None else init_state
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp
+        a = jnp.exp(dtt * A)
+        S = a * S + dtt * jnp.outer(Bt, xt)
+        y = Ct @ S
+        return S, y
+
+    S, y = jax.lax.scan(step, S0, (x.astype(jnp.float32), dt.astype(jnp.float32),
+                                   B.astype(jnp.float32), C.astype(jnp.float32)))
+    return y, S
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, init_state=None, unroll: bool = False):
+    """Chunked SSD, mathematically identical to ``ssd_sequential``."""
+    L, dh = x.shape
+    N = B.shape[1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    xc = x.reshape(nc, chunk, dh).astype(jnp.float32)
+    dtc = dt.reshape(nc, chunk).astype(jnp.float32)
+    Bc = B.reshape(nc, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(nc, chunk, N).astype(jnp.float32)
+    S0 = jnp.zeros((N, dh), jnp.float32) if init_state is None else init_state
+
+    def chunk_step(S, inp):
+        xq, dtq, Bq, Cq = inp  # (Q, dh), (Q,), (Q, N), (Q, N)
+        la = dtq * A  # (Q,) log-decay per step
+        cs = jnp.cumsum(la)  # (Q,)
+        # intra-chunk: Lmat[i, j] = exp(cs_i - cs_j) for j <= i.
+        # Mask BEFORE the exp: for j > i the difference is positive and can
+        # overflow to inf, which would poison the VJP (0 * inf = NaN).
+        diff = cs[:, None] - cs[None, :]
+        tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+        Lmat = jnp.exp(jnp.where(tri, diff, -1e9))
+        scores = (Cq @ Bq.T) * Lmat  # (Q, Q)
+        xbar = xq * dtq[:, None]  # (Q, dh)
+        y = scores @ xbar + jnp.exp(cs)[:, None] * (Cq @ S)
+        # state passing
+        decay_out = jnp.exp(cs[-1] - cs)  # (Q,)
+        S = jnp.exp(cs[-1]) * S + Bq.T @ (decay_out[:, None] * xbar)
+        return S, y
+
+    S, y = jax.lax.scan(chunk_step, S0, (xc, dtc, Bc, Cc), unroll=nc if unroll else 1)
+    return y.reshape(L, dh), S
+
+
+def ssd_chunked_batched(x, dt, A, B, C, *, chunk: int, unroll: bool = False):
+    """Vectorized over (batch, heads): x (Bt, L, H, dh), dt (Bt, L, H),
+    A (H,), B/C (Bt, L, N) shared across heads (single group)."""
+
+    def per_head(xh, dth, Ah, Bh, Ch):
+        # xh (L, dh), dth (L,), Ah (), Bh/Ch (L, N)
+        return ssd_chunked(xh, dth, Ah, Bh, Ch, chunk=chunk, unroll=unroll)
+
+    per_batch = jax.vmap(  # over heads: x (L,H,dh) axis 1, dt (L,H) axis 1
+        per_head, in_axes=(1, 1, 0, None, None), out_axes=(1, 0)
+    )
+    f = jax.vmap(per_batch, in_axes=(0, 0, None, 0, 0), out_axes=(0, 0))
+    y, S = f(x, dt, A, B, C)  # y (B, L, H, dh) -- heads back on axis 2
+    return y, S

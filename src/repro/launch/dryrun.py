@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment e): lower + compile every
+(architecture x input shape) cell on the production meshes, print
+memory_analysis / cost_analysis, and emit roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_4b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi_pod
+    PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+
+The XLA_FLAGS line above MUST run before any jax import: jax pins the host
+device count at first init.  This module is the only place that forces 512
+placeholder devices.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, SKIPPED_CELLS, all_cells, get_config  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+
+
+def _dryrun_cfg(arch: str):
+    """Production numerics for the dry-run: bf16 compute everywhere.
+
+    PULSE_DECODE_KV_BF16=1 flips the H3 hillclimb flag (bf16 cache reads
+    with f32 MXU accumulation) so before/after runs share one entry point.
+    """
+    cfg = get_config(arch).replace(compute_dtype=jnp.bfloat16)
+    if os.environ.get("PULSE_DECODE_KV_BF16"):
+        cfg = cfg.replace(decode_kv_f32=False)
+    return cfg
+
+
+def _probe_cfg(cfg, k: int):
+    """k repeating units with EVERY scan unrolled (layers, attention
+    kv-chunks, CE chunks, SSD chunks) so cost_analysis counts all work --
+    XLA counts while-loop bodies once, so scanned stacks undercount."""
+    cfg = cfg.replace(
+        scan_layers=False,
+        attn_chunk=1 << 20,  # single kv chunk -> length-1 scan
+        ce_chunk=1 << 20,
+        ssm_unroll=True,
+    )
+    if cfg.family == "encdec":
+        return cfg.replace(n_enc_layers=k, n_dec_layers=k, n_layers=k)
+    if cfg.family == "hybrid":
+        return cfg.replace(n_layers=cfg.hybrid_attn_every * k)
+    return cfg.replace(n_layers=k)
+
+
+def _units(cfg) -> float:
+    if cfg.family == "encdec":
+        return float(cfg.n_enc_layers)
+    if cfg.family == "hybrid":
+        return cfg.n_layers / cfg.hybrid_attn_every
+    return float(cfg.n_layers)
+
+
+def _compile(cfg, shape, mesh):
+    step, args, in_sh = build_step(cfg, shape, mesh)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_of(compiled):
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    cost = dict(cost) if cost else {}
+    coll = rl.collective_wire_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll["total"],
+        "coll_detail": coll,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = True):
+    cfg = _dryrun_cfg(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+
+    # 1) the REAL program (scanned stack): proves lower+compile+sharding and
+    #    gives the per-device memory analysis
+    compiled = _compile(cfg, shape, mesh)
+    mem = compiled.memory_analysis()
+    reported = _cost_of(compiled)
+
+    # 2) cost probes: unrolled 1-unit and 2-unit stacks -> exact marginal
+    #    per-layer cost; scale to full depth (XLA counts scan bodies once)
+    c1 = _cost_of(_compile(_probe_cfg(cfg, 1), shape, mesh))
+    c2 = _cost_of(_compile(_probe_cfg(cfg, 2), shape, mesh))
+    units = _units(cfg)
+    corrected = {
+        k: c1[k] + (units - 1.0) * (c2[k] - c1[k])
+        for k in ("flops", "bytes", "coll")
+    }
+    dt = time.time() - t0
+
+    report = rl.analyze(
+        arch=arch, shape_name=shape_name, mesh_name=mesh_name, chips=chips,
+        cost={"flops": corrected["flops"], "bytes accessed": corrected["bytes"]},
+        hlo_text="", memory_stats=mem,
+        model_flops=rl.model_flops_for(cfg, shape),
+    )
+    # overwrite collective numbers with the probe-corrected wire bytes
+    report.collective_bytes = corrected["coll"]
+    report.collective_s = corrected["coll"] / rl.ICI_BW
+    report.collective_detail = {
+        "probe1": {k: v for k, v in c1["coll_detail"].items() if k != "counts"},
+        "probe_counts": c2["coll_detail"]["counts"],
+        "reported_scanned": reported,
+    }
+    report.dominant = max(
+        [("compute", report.compute_s), ("memory", report.memory_s),
+         ("collective", report.collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    if verbose:
+        print(f"\n=== {arch} x {shape_name} @ {mesh_name} ({dt:.1f}s total) ===")
+        print(f"memory_analysis: {mem}")
+        print(
+            f"cost(corrected): flops/dev={report.hlo_flops:.3e} "
+            f"bytes/dev={report.hlo_bytes:.3e} coll_wire/dev={report.collective_bytes:.3e}"
+        )
+        print(
+            f"roofline: compute={report.compute_s*1e3:.3f}ms "
+            f"memory={report.memory_s*1e3:.3f}ms "
+            f"collective={report.collective_s*1e3:.3f}ms "
+            f"dominant={report.dominant} useful={report.useful_ratio:.3f}"
+        )
+        print(f"collectives(probe2): {c2['coll_detail']['counts']}")
+    return report, dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi_pod", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch.replace("-", "_")]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = {"single": [False], "multi_pod": [True], "both": [False, True]}[args.mesh]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            key = f"{arch}|{shape_name}|{'2x16x16' if mp else '16x16'}"
+            if key in results and results[key].get("ok"):
+                print(f"[skip cached] {key}")
+                continue
+            try:
+                report, dt = run_cell(arch, shape_name, multi_pod=mp)
+                results[key] = {"ok": True, "compile_s": dt, **report.to_json()}
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append(key)
+                results[key] = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+            out_path.write_text(json.dumps(results, indent=1))
+    for a_s, why in SKIPPED_CELLS.items():
+        results[f"{a_s[0]}|{a_s[1]}|skipped"] = {"ok": True, "skipped": why}
+    out_path.write_text(json.dumps(results, indent=1))
+
+    n_ok = sum(1 for v in results.values() if v.get("ok"))
+    print(f"\n==== dry-run complete: {n_ok}/{len(results)} ok; failures: {failures} ====")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

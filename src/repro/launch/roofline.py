@@ -1,0 +1,166 @@
+"""Roofline analysis from the compiled dry-run artifact (assignment g).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = ring wire bytes / ICI link bw    (per chip)
+
+``cost_analysis()`` provides per-device FLOPs / bytes-accessed; collective
+bytes come from parsing ``compiled.as_text()`` and summing the ring-model
+wire traffic of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (group size from replica_groups, both explicit and iota
+forms).  Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_wire_bytes(hlo_text: str) -> dict:
+    """Per-chip ring-model wire bytes by collective kind."""
+    out = {
+        "all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0,
+    }
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # count the -start (or plain) form once
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        # group size n
+        n = 0
+        ge = _GROUPS_EXPL_RE.search(line)
+        if ge:
+            n = len([x for x in ge.group(1).split(",") if x.strip() != ""])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))  # [groups, group_size]
+        n = max(n, 2)
+        ring = (n - 1) / n
+        if kind == "all-gather":
+            wire = nbytes * ring  # result bytes cross the ring once
+        elif kind == "all-reduce":
+            wire = 2 * nbytes * ring  # reduce-scatter + all-gather phases
+        elif kind == "reduce-scatter":
+            wire = nbytes * (n - 1)  # result is 1/n of the input
+        elif kind == "all-to-all":
+            wire = nbytes * ring
+        else:  # collective-permute
+            wire = nbytes
+        out[kind] += wire
+        counts[kind] += 1
+    out["counts"] = counts
+    out["total"] = sum(v for k, v in out.items() if k not in ("counts", "total"))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per chip
+    hlo_bytes: float  # per chip
+    collective_bytes: float  # per chip (ring wire)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float  # 6*N*D (global, per step)
+    useful_ratio: float  # model_flops / (hlo_flops * chips)
+    bytes_per_device: int
+    collective_detail: dict
+    note: str = ""
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    *, arch: str, shape_name: str, mesh_name: str, chips: int,
+    cost: dict, hlo_text: str, memory_stats, model_flops: float, note: str = "",
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_wire_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = coll["total"] / ICI_BW
+    dom = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", coll_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    per_dev = 0
+    if memory_stats is not None:
+        per_dev = int(getattr(memory_stats, "temp_size_in_bytes", 0)) + int(
+            getattr(memory_stats, "argument_size_in_bytes", 0)
+        ) + int(getattr(memory_stats, "output_size_in_bytes", 0)) + int(
+            getattr(memory_stats, "generated_code_size_in_bytes", 0)
+        )
+    useful = model_flops / (flops * chips) if flops else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collective_bytes=coll["total"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dom, model_flops=model_flops, useful_ratio=useful,
+        bytes_per_device=per_dev,
+        collective_detail={k: v for k, v in coll.items() if k != "counts"}
+        | {"counts": coll["counts"]},
+        note=note,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: D = batch
+    tokens per step; train adds nothing extra (the 6 covers fwd+bwd)."""
+    n = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

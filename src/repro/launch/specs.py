@@ -1,0 +1,112 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+Weak-type-correct, shardable, no device allocation: the dry-run lowers
+``train_step`` / ``prefill_step`` / ``serve_step`` against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchConfig, ShapeSpec
+from repro.distributed.sharding import fsdp_axes
+from repro.models import transformer, whisper
+from repro.models.model_zoo import build_model
+from repro.training import optimizer as opt_mod
+from repro.training.train_loop import TrainConfig
+
+
+def _valid(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that do not divide the dim (tiny dims replicate)."""
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 and dim >= size else None)
+    return P(*fixed)
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for a train/prefill batch."""
+    B, L = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, L)), "labels": sds((B, L))}
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_sharding(cfg, batch, mesh: Mesh):
+    dp = fsdp_axes(mesh)
+    dp = dp if dp else (None,)
+
+    def one(leaf):
+        spec = P(dp) if leaf.ndim == 1 else P(dp, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, _valid(spec, leaf.shape, mesh))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_struct(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for the serve_step decode cache at shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        init = lambda: whisper.whisper_cache_init(cfg, B, S)
+    else:
+        init = lambda: transformer.decode_cache_init(cfg, B, S)
+    return jax.eval_shape(init)
+
+
+def cache_sharding(cfg, cache, mesh: Mesh):
+    """KV: (L, B, S, Hk, hd) -> batch over dp, S over model (flash-decode
+    style sequence sharding).  SSM state: batch over dp, heads over model
+    when divisible."""
+    dp = fsdp_axes(mesh)
+    dp = dp if dp else (None,)
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "xk", "xv"):  # (L, B, S, Hk, hd)
+            spec = P(None, dp, "model", None, None)
+            if leaf.shape[1] == 1:  # batch 1 (long_500k): shard S harder
+                spec = P(None, None, dp + ("model",), None, None)
+        elif name == "S":  # (L, B, H, N, dh)
+            spec = P(None, dp, "model", None, None)
+        elif name == "conv":  # (L, B, K-1, C)
+            spec = P(None, dp, None, "model")
+        else:
+            spec = P()
+        return NamedSharding(mesh, _valid(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def decode_inputs(cfg, shape: ShapeSpec, mesh: Mesh):
+    """(tokens, pos) structs + shardings for serve_step."""
+    B = shape.global_batch
+    dp = fsdp_axes(mesh)
+    dp = dp if dp else (None,)
+    tok = sds((B,))
+    pos = sds((B,))
+    sh = NamedSharding(mesh, _valid(P(dp), (B,), mesh))
+    return (tok, pos), (sh, sh)
+
+
+def train_state_struct(cfg: ArchConfig, model=None):
+    """abstract {params, opt} via eval_shape (no allocation)."""
+    model = model or build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    ocfg = opt_mod.OptimizerConfig(name=cfg.optimizer)
+    opt = jax.eval_shape(lambda: opt_mod.opt_init(ocfg, params))
+    return {"params": params, "opt": opt}, ocfg

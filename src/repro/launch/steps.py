@@ -1,0 +1,118 @@
+"""Step builders for the dry-run / production launchers.
+
+``build_step(cfg, shape, mesh)`` returns (step_fn, example_args,
+in_shardings) ready for ``jax.jit(...).lower(...)``:
+  * train   -> train_step(state, batch)  (loss + grads + optimizer update)
+  * prefill -> prefill_step(params, batch)
+  * decode  -> serve_step(params, cache, tokens, pos)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.distributed.sharding import param_specs
+from repro.launch import specs as S
+from repro.models.model_zoo import build_model
+from repro.training import optimizer as opt_mod
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def _param_shardings(params_struct, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_struct, mesh)
+    )
+
+
+def _opt_shardings(opt_struct, pspecs, mesh):
+    """Optimizer state shardings mirror the param shardings.
+
+    Adafactor's factored stats drop one axis of the param: vr = mean over the
+    last axis (param spec minus its last entry), vc = mean over the
+    second-to-last.  Replicating them instead forces XLA to materialize
+    REPLICATED gradients -- measured 107 GB/dev/layer of all-reduce on
+    kimi-k2 train_4k (EXPERIMENTS.md hillclimb H2)."""
+
+    def like_params(sub):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    out = {}
+    for k, v in opt_struct.items():
+        if k == "step":
+            out[k] = NamedSharding(mesh, P())
+        elif k in ("mu", "nu"):
+            out[k] = like_params(v)
+        elif k == "v":  # adafactor
+            flat_p, treedef = jax.tree_util.tree_flatten(pspecs)
+            stats = treedef.flatten_up_to(v)
+
+            def stat_shard(spec, stat):
+                if isinstance(stat, dict) and "vr" in stat:
+                    full = tuple(spec)
+                    return {
+                        "vr": NamedSharding(mesh, P(*full[:-1])),
+                        "vc": NamedSharding(mesh, P(*(full[:-2] + full[-1:]))),
+                    }
+                return {"v": NamedSharding(mesh, spec)}
+
+            out[k] = jax.tree_util.tree_unflatten(
+                treedef, [stat_shard(s, st) for s, st in zip(flat_p, stats)]
+            )
+        else:
+            out[k] = jax.tree.map(lambda _: NamedSharding(mesh, P()), v)
+    return out
+
+
+def build_step(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    model = build_model(cfg, mesh=mesh)
+
+    if shape.kind == "train":
+        state_struct, ocfg = S.train_state_struct(cfg, model)
+        tcfg = TrainConfig(opt=ocfg)
+        step = make_train_step(model, tcfg)
+        batch = S.batch_struct(cfg, shape)
+        pspecs = param_specs(state_struct["params"], mesh)
+        in_sh = (
+            {
+                "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+                "opt": _opt_shardings(state_struct["opt"], pspecs, mesh),
+            },
+            S.batch_sharding(cfg, batch, mesh),
+        )
+        return step, (state_struct, batch), in_sh
+
+    if shape.kind == "prefill":
+        params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        batch = S.batch_struct(cfg, shape)
+
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(params, batch, shape.seq_len)
+            return logits
+
+        in_sh = (
+            _param_shardings(params_struct, mesh),
+            S.batch_sharding(cfg, batch, mesh),
+        )
+        return prefill_step, (params_struct, batch), in_sh
+
+    if shape.kind == "decode":
+        params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        cache = S.cache_struct(cfg, shape)
+        (tok, pos), (tok_sh, pos_sh) = S.decode_inputs(cfg, shape, mesh)
+
+        def serve_step(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos)
+
+        in_sh = (
+            _param_shardings(params_struct, mesh),
+            S.cache_sharding(cfg, cache, mesh),
+            tok_sh,
+            pos_sh,
+        )
+        return serve_step, (params_struct, cache, tok, pos), in_sh
+
+    raise ValueError(shape.kind)

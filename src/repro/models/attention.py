@@ -1,0 +1,218 @@
+"""GQA attention: init + train/prefill apply + decode-with-cache apply.
+
+Covers the assigned archs' variants: GQA kv grouping, qk-norm (Qwen3), QKV
+bias (Qwen1.5), bidirectional (Whisper encoder), cross-attention (Whisper
+decoder).  The train/prefill path is blockwise ("chunked") online-softmax
+attention in pure JAX -- the XLA twin of the flash kernel, O(L) memory, safe
+to lower at 32k on 512 devices.  ``backend='pallas'`` switches to the Pallas
+kernel (TPU; interpret=True for CPU validation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.common import apply_rope, dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg, *, stack=None, cross=False):
+    D, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, cfg.param_dtype, bias=cfg.qkv_bias, stack=stack),
+        "wk": dense_init(ks[1], D, Hk * hd, cfg.param_dtype, bias=cfg.qkv_bias, stack=stack),
+        "wv": dense_init(ks[2], D, Hk * hd, cfg.param_dtype, bias=cfg.qkv_bias, stack=stack),
+        "wo": dense_init(ks[3], H * hd, D, cfg.param_dtype, stack=stack),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, cfg.param_dtype, stack=stack)
+        p["k_norm"] = rmsnorm_init(hd, cfg.param_dtype, stack=stack)
+    return p
+
+
+def _project_q(p, cfg, x, positions, *, rope=True):
+    B, L, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = dense_apply(p["wq"], x, cfg.compute_dtype).reshape(B, L, H, hd)
+    if "q_norm" in p:
+        q = rmsnorm_apply(p["q_norm"], q)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(p, cfg, x, positions, *, rope=True):
+    B, L, _ = x.shape
+    Hk, hd = cfg.n_kv_heads, cfg.head_dim
+    k = dense_apply(p["wk"], x, cfg.compute_dtype).reshape(B, L, Hk, hd)
+    v = dense_apply(p["wv"], x, cfg.compute_dtype).reshape(B, L, Hk, hd)
+    if "k_norm" in p:
+        k = rmsnorm_apply(p["k_norm"], k)
+    if rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024, q_offset: int = 0):
+    """Blockwise online-softmax attention (XLA path).
+
+    q: (B, L, H, hd); k, v: (B, Lk, Hk, hd).  O(L*chunk) live memory via a
+    scan over kv chunks; mathematically exact softmax attention.
+
+    Sharding note: KV heads are expanded to the full H query heads BEFORE the
+    score einsum (Megatron's GQA-under-TP convention).  With Hk < TP, a
+    grouped (Hk, G) layout cannot shard query heads over the mesh 'model'
+    axis and XLA silently replicates the whole quadratic computation
+    (measured: ~256x per-device FLOPs on the 16x16 mesh); the H-flat layout
+    lets the head dim shard cleanly.
+    """
+    B, Lq, H, hd = q.shape
+    Lk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    chunk = min(chunk, Lk)
+    nchunk = -(-Lk // chunk)
+    pad = nchunk * chunk - Lk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if G > 1:  # expand kv heads -> H (shardable over TP)
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    kc = k.reshape(B, nchunk, chunk, H, hd)
+    vc = v.reshape(B, nchunk, chunk, H, hd)
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    rows = q_offset + jnp.arange(Lq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp  # (B, chunk, H, hd) x2, scalar chunk idx
+        s = jnp.einsum(
+            "blhd,bchd->blhc", qf, kb.astype(jnp.float32)
+        )  # (B, Lq, H, chunk)
+        cols = ci * chunk + jnp.arange(chunk)
+        valid = cols < Lk
+        if causal:
+            valid = valid[None, :] & (rows[:, None] >= cols[None, :])
+            s = jnp.where(valid[None, :, None, :], s, NEG_INF)
+        else:
+            s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "blhc,bchd->blhd", pexp, vb.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Lq, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Lq, H), jnp.float32)
+    a0 = jnp.zeros((B, Lq, H, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nchunk)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention_apply(
+    p,
+    cfg,
+    x,
+    *,
+    positions=None,
+    causal=True,
+    rope=True,
+    kv_x=None,
+    backend="xla",
+    mesh=None,
+):
+    """Train/prefill attention.  ``kv_x`` switches to cross-attention."""
+    B, L, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+    q = _project_q(p, cfg, x, positions, rope=rope)
+    src = x if kv_x is None else kv_x
+    kv_pos = positions if kv_x is None else jnp.broadcast_to(
+        jnp.arange(src.shape[1]), (B, src.shape[1])
+    )
+    k, v = _project_kv(p, cfg, src, kv_pos, rope=rope)
+    # keep heads on the TP axis and batch on DP through the quadratic part
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if cfg.n_heads % max(tp, 1) == 0:
+        q = shard_hint(q, mesh, "dp", None, "model", None)
+        k = shard_hint(k, mesh, "dp", None, "model", None)
+        v = shard_hint(v, mesh, "dp", None, "model", None)
+    else:
+        # SP fallback (e.g. whisper: 20 heads, TP=16): shard the QUERY rows
+        # over the model axis instead; KV replicates (the standard
+        # sequence-parallel attention trade -- KV all-gather instead of
+        # replicated quadratic compute).  EXPERIMENTS.md hillclimb H1.
+        q = shard_hint(q, mesh, "dp", "model", None, None)
+        k = shard_hint(k, mesh, "dp", None, None, None)
+        v = shard_hint(v, mesh, "dp", None, None, None)
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        o = flash_attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal, 128, 128, backend == "pallas_interpret", True,
+        ).swapaxes(1, 2)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    return dense_apply(p["wo"], o.reshape(B, L, -1), cfg.compute_dtype), (k, v)
+
+
+def decode_attention_apply(p, cfg, x, cache_k, cache_v, pos, *, rope=True):
+    """One-token decode vs a (B, S, Hk, hd) cache.
+
+    Writes the new token's K/V at position ``pos`` (per-sequence), attends
+    over positions <= pos, and returns (out, cache_k, cache_v).  Exact
+    softmax with a length mask; with the cache's S axis sharded over the mesh
+    'model' axis, XLA lowers this to the flash-decode partial-softmax +
+    combine pattern (see DESIGN.md).
+    """
+    B = x.shape[0]
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S = cache_k.shape[1]
+    pos = pos if pos.ndim == 1 else pos[:, 0]
+    positions = pos[:, None]  # (B, 1)
+    q = _project_q(p, cfg, x, positions, rope=rope)  # (B, 1, H, hd)
+    k_new, v_new = _project_kv(p, cfg, x, positions, rope=rope)  # (B, 1, Hk, hd)
+    cache_k = cache_k.at[jnp.arange(B), pos].set(k_new[:, 0])
+    cache_v = cache_v.at[jnp.arange(B), pos].set(v_new[:, 0])
+
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, hd)
+    if cfg.decode_kv_f32:
+        # baseline: f32 copies of the whole cache (2x HBM traffic)
+        s = jnp.einsum(
+            "bkgd,bskd->bkgs", qg.astype(jnp.float32) * (hd ** -0.5),
+            cache_k.astype(jnp.float32),
+        )
+    else:
+        # H3: read the cache in its storage dtype; MXU accumulates f32
+        s = jnp.einsum(
+            "bkgd,bskd->bkgs", qg, cache_k, preferred_element_type=jnp.float32
+        ) * (hd ** -0.5)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    pexp = jnp.exp(s - m)
+    if cfg.decode_kv_f32:
+        o = jnp.einsum("bkgs,bskd->bkgd", pexp, cache_v.astype(jnp.float32))
+    else:
+        o = jnp.einsum(
+            "bkgs,bskd->bkgd", pexp.astype(cache_v.dtype), cache_v,
+            preferred_element_type=jnp.float32,
+        )
+    o = o / pexp.sum(axis=-1)[..., None]
+    o = o.reshape(B, 1, H * hd).astype(cfg.compute_dtype)
+    return dense_apply(p["wo"], o, cfg.compute_dtype), cache_k, cache_v

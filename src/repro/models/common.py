@@ -1,0 +1,202 @@
+"""Shared model building blocks (functional, dict-param style).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks carry a leading L axis
+    and are applied with ``jax.lax.scan`` (keeps HLO size O(1) in depth --
+    essential for 512-device dry-run compiles).
+  * compute happens in ``cfg.compute_dtype`` (bf16 on TPU), master params in
+    ``cfg.param_dtype``; norms/softmax/rope always f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stack_scan(body, carry, xs, use_scan: bool = True):
+    """``jax.lax.scan`` or a Python-unrolled equivalent (``use_scan=False``).
+
+    The unrolled form exists for the dry-run cost probes: XLA's
+    ``cost_analysis`` counts a while-loop body ONCE regardless of trip count
+    (measured; see EXPERIMENTS.md), so per-layer marginal costs are measured
+    on small unrolled stacks and scaled analytically.
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def uniform_scale_init(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dim, dtype, *, bias=False, scale=1.0, stack=None):
+    shape = (in_dim, out_dim) if stack is None else (stack, in_dim, out_dim)
+    p = {"w": uniform_scale_init(key, shape, scale, dtype)}
+    if bias:
+        bshape = (out_dim,) if stack is None else (stack, out_dim)
+        p["b"] = jnp.zeros(bshape, dtype)
+    return p
+
+
+def dense_apply(p, x, compute_dtype):
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(dim, dtype, *, parametric=True, stack=None):
+    if not parametric:  # OLMo-style non-parametric norm: no learned scale
+        return {}
+    shape = (dim,) if stack is None else (stack, dim)
+    return {"scale": jnp.ones(shape, dtype)}
+
+
+def rmsnorm_apply(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if "scale" in p:
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(dim, dtype, stack=None):
+    shape = (dim,) if stack is None else (stack, dim)
+    return {"scale": jnp.ones(shape, dtype), "bias": jnp.zeros(shape, dtype)}
+
+
+def layernorm_apply(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., L, H, D); positions: broadcastable to (..., L)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def swiglu_init(key, d_model, d_ff, dtype, stack=None):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype, stack=stack),
+        "wg": dense_init(k2, d_model, d_ff, dtype, stack=stack),
+        "wo": dense_init(k3, d_ff, d_model, dtype, stack=stack),
+    }
+
+
+def swiglu_apply(p, x, compute_dtype):
+    h = jax.nn.silu(dense_apply(p["wg"], x, compute_dtype)) * dense_apply(
+        p["wi"], x, compute_dtype
+    )
+    return dense_apply(p["wo"], h, compute_dtype)
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype, stack=None):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype, bias=True, stack=stack),
+        "wo": dense_init(k2, d_ff, d_model, dtype, bias=True, stack=stack),
+    }
+
+
+def gelu_mlp_apply(p, x, compute_dtype):
+    return dense_apply(p["wo"], jax.nn.gelu(dense_apply(p["wi"], x, compute_dtype)), compute_dtype)
+
+
+def cross_entropy_loss(logits, labels, *, z_loss: float = 0.0, mask=None):
+    """logits (..., V) f32-cast inside; labels int32.  Returns mean nll."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def chunked_softmax_xent(
+    h, unembed_w, labels, *, chunk: int = 512, z_loss: float = 0.0, mask=None,
+    mesh=None,
+):
+    """Fused unembed-projection + cross entropy, chunked over the sequence.
+
+    Never materializes the full (B, L, V) logits: each chunk computes
+    (B, chunk, V), reduces to per-token nll, and is rematerialized in the
+    backward pass (jax.checkpoint on the chunk body).  This is the memory
+    fix that keeps the 151k-vocab train cells inside HBM (see EXPERIMENTS.md
+    dry-run S Perf-0).
+    """
+    B, L, D = h.shape
+    chunk = min(chunk, L)
+    if L % chunk:
+        pad = chunk - L % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else jnp.pad(
+            jnp.ones((B, L), jnp.float32), ((0, 0), (0, pad))
+        )
+    elif mask is None:
+        mask = jnp.ones((B, L), jnp.float32)
+    nc = h.shape[1] // chunk
+    hc = h.reshape(B, nc, chunk, D).swapaxes(0, 1)  # (nc, B, chunk, D)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        tot, cnt = carry
+        hq, lq, mq = inp
+        logits = (
+            hq.astype(unembed_w.dtype) @ unembed_w
+        ).astype(jnp.float32)  # (B, chunk, V)
+        from repro.distributed.sharding import shard_hint
+
+        logits = shard_hint(logits, mesh, "dp", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lq[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if z_loss:
+            nll = nll + z_loss * lse**2
+        return (tot + (nll * mq).sum(), cnt + mq.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,84 @@
+"""Unified model factory: ``build_model(cfg)`` -> Model bundle.
+
+One interface for every assigned architecture:
+  init(rng)                      -> params
+  loss(params, batch)            -> scalar (train objective)
+  prefill(params, batch, max_len)-> (logits, cache)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+  cache_init(batch, max_len)     -> cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_init: Callable
+
+
+def build_model(cfg, mesh=None) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda rng: whisper.whisper_init(rng, cfg),
+            loss=lambda p, batch: whisper.whisper_loss(p, cfg, batch, mesh=mesh),
+            prefill=lambda p, batch, max_len: whisper.whisper_prefill(
+                p, cfg, batch["tokens"], batch["frames"], max_len, mesh=mesh
+            ),
+            decode_step=lambda p, cache, tokens, pos: whisper.whisper_decode_step(
+                p, cfg, cache, tokens, pos, mesh=mesh
+            ),
+            cache_init=lambda batch, max_len: whisper.whisper_cache_init(
+                cfg, batch, max_len
+            ),
+        )
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: transformer.lm_init(rng, cfg),
+        loss=lambda p, batch: transformer.lm_loss(p, cfg, batch, mesh=mesh),
+        prefill=lambda p, batch, max_len: transformer.prefill(
+            p, cfg, batch["tokens"], max_len, mesh=mesh,
+            patches=batch.get("patches"),
+        ),
+        decode_step=lambda p, cache, tokens, pos: transformer.decode_step(
+            p, cfg, cache, tokens, pos, mesh=mesh
+        ),
+        cache_init=lambda batch, max_len: transformer.decode_cache_init(
+            cfg, batch, max_len
+        ),
+    )
+
+
+def make_batch(cfg, shape_kind: str, seq_len: int, batch: int, rng=None):
+    """Concrete (CPU smoke) batch for a shape kind."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 4)
+    toks = jax.random.randint(ks[0], (batch, seq_len), 0, cfg.vocab)
+    batch_d = {
+        "tokens": toks,
+        "labels": jnp.roll(toks, -1, axis=1),
+    }
+    if cfg.family == "vlm":
+        batch_d["patches"] = jax.random.normal(
+            ks[1], (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "encdec":
+        batch_d["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.n_audio_frames, cfg.d_model), jnp.float32
+        )
+    return batch_d

@@ -1,0 +1,204 @@
+"""Mixture-of-Experts layer with PULSE-style switch routing (DESIGN.md S3).
+
+Token -> expert dispatch reuses the paper's in-network routing shape: the
+router ("switch") computes each token-copy's owner from a range partition of
+expert ids; records route to the owning shard; results combine back with the
+identical record format.  On the TPU mesh:
+
+  * experts are range-partitioned over the mesh ``model`` axis (EP), exactly
+    like arena addresses over memory nodes;
+  * activations are replicated over ``model`` (TP convention), so dispatch
+    needs NO collective: each expert shard masks + compacts the token copies
+    it owns (the "switch" is a local owner_of computation, S5), computes its
+    experts, and the weighted combine is the block's existing TP psum;
+  * capacity overflow drops copies (standard MoE), mirroring the paper's
+    bounded per-link capacity with retry -- here the residual connection
+    stands in for the retry.
+
+Implemented with ``jax.shard_map`` over the full mesh; with a (1,1,1) mesh it
+degrades to the single-device reference semantics (used by smoke tests).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import dense_apply, dense_init
+
+
+def moe_init(key, cfg, *, stack=None):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+
+    def ew(k, a, b):
+        shape = (E, a, b) if stack is None else (stack, E, a, b)
+        std = 1.0 / math.sqrt(a)
+        return (jax.random.normal(k, shape) * std).astype(cfg.param_dtype)
+
+    p = {
+        "router": dense_init(ks[0], D, E, cfg.param_dtype, stack=stack),
+        "wi": ew(ks[1], D, F),
+        "wg": ew(ks[2], D, F),
+        "wo": ew(ks[3], F, D),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.common import swiglu_init
+
+        p["shared"] = swiglu_init(
+            ks[4], D, F * cfg.n_shared_experts, cfg.param_dtype, stack=stack
+        )
+    return p
+
+
+def _expert_ffn(wi, wg, wo, xb, compute_dtype):
+    """Grouped SwiGLU: xb (E_loc, C, D) @ per-expert weights."""
+    xb = xb.astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, wg.astype(compute_dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xb, wi.astype(compute_dtype))
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(compute_dtype))
+
+
+def _moe_local(p, cfg, x_flat, my_rank, ep, compute_dtype):
+    """Per-shard MoE body: route, compact, grouped FFN, weighted combine.
+
+    x_flat: (T, D) local tokens (replicated over the EP axis).
+    Returns this shard's partial output (T, D) -- psum over EP outside.
+    """
+    T, D = x_flat.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    E_loc = E // ep
+    C = max(8, int(math.ceil(T * K / E * cfg.moe_capacity_factor)))
+
+    logits = dense_apply(p["router"], x_flat, jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (T, K)
+    if cfg.moe_renormalize:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- the switch: owner = range partition of expert ids (S5) ---
+    copies_e = top_e.reshape(-1)  # (T*K,) expert id per copy
+    copies_t = jnp.repeat(jnp.arange(T), K)  # token of each copy
+    copies_w = top_p.reshape(-1)
+    owner = copies_e // E_loc
+    local_e = copies_e % E_loc
+    mine = owner == my_rank
+
+    # rank of each copy within its expert (deterministic, replicated compute)
+    order = jnp.argsort(copies_e, stable=True)
+    inv = jnp.argsort(order, stable=True)
+    sorted_e = copies_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
+    rank_in_e = jnp.arange(T * K) - start[sorted_e]
+    rank = rank_in_e[inv]  # back to copy order
+
+    fits = mine & (rank < C)
+    slot = jnp.where(fits, local_e * C + rank, E_loc * C)  # trash slot at end
+    # gather tokens into the expert buffer (E_loc, C, D)
+    buf_tok = jnp.full((E_loc * C + 1,), T, jnp.int32)  # T -> zero row sentinel
+    buf_tok = buf_tok.at[slot].set(
+        jnp.where(fits, copies_t, T).astype(jnp.int32)
+    )[: E_loc * C]
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, D), x_flat.dtype)], axis=0)
+    xb = x_pad[buf_tok].reshape(E_loc, C, D)
+
+    yb = _expert_ffn(p["wi"], p["wg"], p["wo"], xb, compute_dtype)
+    yb = yb.reshape(E_loc * C, D)
+
+    # combine: scatter-add weighted expert outputs back to tokens
+    y_copy_slot = jnp.where(fits, slot, E_loc * C)
+    yb_pad = jnp.concatenate([yb, jnp.zeros((1, D), yb.dtype)], axis=0)
+    y_copies = yb_pad[y_copy_slot] * jnp.where(fits, copies_w, 0.0)[:, None].astype(
+        yb.dtype
+    )
+    y = jnp.zeros((T, D), yb.dtype).at[copies_t].add(y_copies)
+    return y
+
+
+def moe_apply(p, cfg, x, *, mesh=None, compute_dtype=None):
+    """x: (B, L, D) -> (B, L, D).  EP over the mesh 'model' axis when a mesh
+    is provided; single-shard reference semantics otherwise."""
+    compute_dtype = compute_dtype or cfg.compute_dtype
+    B, L, D = x.shape
+
+    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
+        def body(x_flat):
+            y = _moe_local(p, cfg, x_flat, 0, 1, compute_dtype)
+            if "shared" in p:
+                from repro.models.common import swiglu_apply
+
+                y = y + swiglu_apply(p["shared"], x_flat, compute_dtype)
+            return y
+
+        return body(x.reshape(B * L, D)).reshape(B, L, D)
+
+    ep = mesh.shape["model"]
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def gather(w, axis):
+        """Explicit FSDP unshard over the dp axes (ZeRO-3 weight gather)."""
+        return jax.lax.all_gather(w, dp, axis=axis, tiled=True) if dp else w
+
+    def body(p_loc, x_loc):
+        # FULL-manual region (all mesh axes): tokens stay dp-SHARDED, so the
+        # routing sort/scatter is rank-local.  (A manual-'model'-only region
+        # left dp auto: GSPMD could not shard the sort and ALL-GATHERED the
+        # whole f32 token batch to every device -- measured 30 GB/dev/layer
+        # on kimi-k2; see EXPERIMENTS.md hillclimb H2.)
+        xf = x_loc.reshape(-1, D)
+        my = jax.lax.axis_index("model")
+        p_full = {
+            "router": {"w": gather(p_loc["router"]["w"], 0)},
+            "wi": gather(p_loc["wi"], 1),
+            "wg": gather(p_loc["wg"], 1),
+            "wo": gather(p_loc["wo"], 2),
+        }
+        y = _moe_local(p_full, cfg, xf, my, ep, compute_dtype)
+        if "shared" in p_loc:
+            # shared expert is TP-sharded on F: each rank's F-slice partial
+            # sums into the same psum as the routed experts.
+            from repro.models.common import swiglu_apply
+
+            shared = {
+                "wi": {"w": gather(p_loc["shared"]["wi"]["w"], 0)},
+                "wg": {"w": gather(p_loc["shared"]["wg"]["w"], 0)},
+                "wo": {"w": gather(p_loc["shared"]["wo"]["w"], 1)},
+            }
+            y = y + swiglu_apply(shared, xf, compute_dtype)
+        # psum in f32: bf16 all-reduce trips XLA:CPU's AllReducePromotion
+        # (fatal "Invalid binary instruction opcode copy"); f32 is also the
+        # right accumulation dtype for the expert combine.
+        y = jax.lax.psum(y.astype(jnp.float32), "model")
+        return y.reshape(x_loc.shape)
+
+    fs = dp if dp else None
+    pspec = {
+        "router": {"w": P(fs, None)},
+        "wi": P("model", fs, None),
+        "wg": P("model", fs, None),
+        "wo": P("model", None, fs),
+    }
+    if "shared" in p:
+        pspec["shared"] = {
+            "wi": {"w": P(fs, "model")},
+            "wg": {"w": P(fs, "model")},
+            "wo": {"w": P("model", fs)},
+        }
+    xspec = P(fs, None, None)
+    # f32 x at the boundary: x is replicated over 'model' in the manual
+    # region, so its cotangent is psum'ed -- f32 sidesteps the XLA:CPU
+    # bf16-all-reduce abort.  Tokens are dp-sharded, so this costs a local
+    # convert, not a gather.
+    p_in = dict(p, router={"w": p["router"]["w"].astype(jnp.float32)})
+    out = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(pspec, xspec),
+        out_specs=xspec,
+        check_vma=False,
+    )(p_in, x.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -1,0 +1,180 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Block structure (simplified faithfully from the reference implementation):
+  in_proj -> [z (gate), x, B, C, dt] ; causal depthwise conv on (x, B, C) ;
+  SSD scan over chunks ; gated RMSNorm ; out_proj.
+
+Train/prefill use the chunked SSD (``repro.kernels.ssd_scan`` ref or Pallas
+kernel); decode carries the O(1) recurrent state (B, H, N, dh) -- this is why
+SSM archs run ``long_500k`` natively (DESIGN.md S6).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+
+CONV_K = 4  # causal depthwise conv width
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def ssm_init(key, cfg, *, stack=None):
+    D = cfg.d_model
+    N = cfg.ssm_state
+    d_inner, H = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * N  # x, B, C all pass the conv
+
+    def shp(*s):
+        return s if stack is None else (stack, *s)
+
+    # dt bias drawn log-uniform in [1e-3, 1e-1] (mamba2 reference init)
+    dt_bias = jax.random.uniform(
+        ks[3], shp(H), minval=math.log(1e-3), maxval=math.log(1e-1)
+    )
+    p = {
+        # in_proj emits [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], D, 2 * d_inner + 2 * N + H, cfg.param_dtype, stack=stack),
+        "conv_w": (jax.random.normal(ks[1], shp(CONV_K, conv_dim)) * 0.1).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros(shp(conv_dim), cfg.param_dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], shp(H), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D_skip": jnp.ones(shp(H), cfg.param_dtype),
+        "norm": rmsnorm_init(d_inner, cfg.param_dtype, stack=stack),
+        "out_proj": dense_init(ks[4], d_inner, D, cfg.param_dtype, stack=stack),
+    }
+    return p
+
+
+def _split_proj(cfg, proj):
+    d_inner, H = ssm_dims(cfg)
+    N = cfg.ssm_state
+    z, x, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(w, b, u, conv_state=None):
+    """Depthwise causal conv, width CONV_K.  u: (B, L, C).  Returns (y, new
+    state (B, CONV_K-1, C)) for decode continuation."""
+    Bt, L, Cdim = u.shape
+    if conv_state is None:
+        pad = jnp.zeros((Bt, CONV_K - 1, Cdim), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)  # (B, L+K-1, C)
+    y = sum(
+        ext[:, i : i + L] * w[i][None, None, :].astype(u.dtype) for i in range(CONV_K)
+    )
+    y = y + b[None, None, :].astype(u.dtype)
+    return jax.nn.silu(y), ext[:, L:]  # last K-1 raw inputs = decode state
+
+
+def ssm_apply(p, cfg, xin, *, backend="xla", return_state=False):
+    """Train/prefill: xin (B, L, D) -> (B, L, D) [, decode state]."""
+    Bt, L, D = xin.shape
+    d_inner, H = ssm_dims(cfg)
+    N = cfg.ssm_state
+    dh = cfg.ssm_head_dim
+    proj = dense_apply(p["in_proj"], xin, cfg.compute_dtype)
+    z, x, Bm, Cm, dt = _split_proj(cfg, proj)
+    xbc_raw = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xbc_raw)
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    xh = x.reshape(Bt, L, H, dh)
+
+    chunk = min(cfg.ssm_chunk, L)
+    if L % chunk:  # pad to a chunk multiple (zero dt => identity dynamics)
+        padlen = chunk - L % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, padlen), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, padlen), (0, 0)))
+
+    if backend in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssd_scan.ops import ssd_scan
+
+        y, S = ssd_scan(
+            xh.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32), chunk=chunk,
+            interpret=backend == "pallas_interpret", use_pallas=True,
+        )
+    else:
+        from repro.kernels.ssd_scan.ref import ssd_chunked_batched
+
+        y, S = ssd_chunked_batched(
+            xh.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32), chunk=chunk, unroll=cfg.ssm_unroll,
+        )
+    y = y[:, :L]
+    xh = xh[:, :L]
+    dt = dt[:, :L]
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bt, L, d_inner).astype(cfg.compute_dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y, cfg.compute_dtype)
+    if return_state:
+        # conv state = last CONV_K-1 *raw* conv inputs (from _causal_conv)
+        return out, {"S": S, "conv": conv_state}
+    return out
+
+
+def ssm_decode_init(cfg, batch, dtype=jnp.float32):
+    d_inner, H = ssm_dims(cfg)
+    N = cfg.ssm_state
+    dh = cfg.ssm_head_dim
+    return {
+        "S": jnp.zeros((batch, H, N, dh), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner + 2 * N), dtype),
+    }
+
+
+def ssm_decode_apply(p, cfg, xin, state):
+    """One-token decode: xin (B, 1, D), O(1) state update."""
+    Bt = xin.shape[0]
+    d_inner, H = ssm_dims(cfg)
+    N = cfg.ssm_state
+    dh = cfg.ssm_head_dim
+    proj = dense_apply(p["in_proj"], xin, cfg.compute_dtype)
+    z, x, Bm, Cm, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)  # (B, 1, conv_dim)
+    conv_in = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+    y = sum(
+        conv_in[:, i : i + 1] * p["conv_w"][i][None, None, :].astype(xbc.dtype)
+        for i in range(CONV_K)
+    ) + p["conv_b"][None, None, :].astype(xbc.dtype)
+    xbc_out = jax.nn.silu(y)
+    new_conv = conv_in[:, 1:]
+    x, Bm, Cm = jnp.split(xbc_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])[:, 0]
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a = jnp.exp(dt * A[None, :])  # (B, H)
+    xh = x.reshape(Bt, H, dh).astype(jnp.float32)
+    Bf = Bm[:, 0].astype(jnp.float32)  # (B, N)
+    Cf = Cm[:, 0].astype(jnp.float32)
+    # S <- a S + dt * B x^T ; y = C S
+    S = state["S"] * a[:, :, None, None] + (
+        dt[:, :, None, None] * jnp.einsum("bn,bhd->bhnd", Bf, xh)
+    )
+    yh = jnp.einsum("bn,bhnd->bhd", Cf, S)
+    yh = yh + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = yh.reshape(Bt, 1, d_inner).astype(cfg.compute_dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y, cfg.compute_dtype)
+    return out, {"S": S, "conv": new_conv}

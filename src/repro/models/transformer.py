@@ -1,0 +1,374 @@
+"""Decoder-LM covering the dense / moe / ssm / hybrid / vlm families.
+
+All layer stacks apply via ``jax.lax.scan`` over stacked params so the HLO is
+O(1) in depth -- 61-layer Kimi-K2 compiles at 512 devices in one layer's
+worth of IR.  Remat policy wraps the scanned body.
+
+Hybrid (Zamba2): ONE weight-shared attention+MLP block applied after every
+``hybrid_attn_every`` mamba layers.  The stack is scanned in *groups* of
+``every`` mamba layers + the shared block, with a tail scan for the
+remainder (81 = 13x6 + 3), so prefill can collect per-application KV caches
+without materializing per-mamba-layer dummies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models import attention, moe as moe_mod, ssm as ssm_mod
+from repro.models.common import (
+    chunked_softmax_xent,
+    cross_entropy_loss,
+    stack_scan,
+    dense_apply,
+    dense_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    swiglu_apply,
+    swiglu_init,
+    uniform_scale_init,
+)
+
+
+# ------------------------------- init ---------------------------------------
+
+
+def lm_init(key, cfg):
+    keys = jax.random.split(key, 12)
+    L = cfg.n_layers
+    D, V = cfg.d_model, cfg.vocab
+    parametric = not cfg.nonparametric_norm
+    p = {
+        "embed": uniform_scale_init(keys[0], (V, D), 1.0, cfg.param_dtype),
+        "final_norm": rmsnorm_init(D, cfg.param_dtype, parametric=parametric),
+        "unembed": dense_init(keys[1], D, V, cfg.param_dtype),
+    }
+    if cfg.family in ("dense", "vlm", "moe"):
+        layer = {
+            "attn_norm": rmsnorm_init(D, cfg.param_dtype, parametric=parametric, stack=L),
+            "attn": attention.attention_init(keys[2], cfg, stack=L),
+            "mlp_norm": rmsnorm_init(D, cfg.param_dtype, parametric=parametric, stack=L),
+        }
+        if cfg.family == "moe":
+            layer["moe"] = moe_mod.moe_init(keys[3], cfg, stack=L)
+        else:
+            layer["mlp"] = swiglu_init(keys[3], D, cfg.d_ff, cfg.param_dtype, stack=L)
+        p["layers"] = layer
+    elif cfg.family in ("ssm", "hybrid"):
+        p["layers"] = {
+            "norm": rmsnorm_init(D, cfg.param_dtype, stack=L),
+            "ssm": ssm_mod.ssm_init(keys[2], cfg, stack=L),
+        }
+        if cfg.family == "hybrid":
+            p["shared_attn"] = {
+                "attn_norm": rmsnorm_init(D, cfg.param_dtype),
+                "attn": attention.attention_init(keys[4], cfg),
+                "mlp_norm": rmsnorm_init(D, cfg.param_dtype),
+                "mlp": swiglu_init(keys[5], D, cfg.d_ff, cfg.param_dtype),
+            }
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        # stub frontend adapter: precomputed patch embeddings -> d_model
+        p["patch_proj"] = dense_init(keys[6], D, D, cfg.param_dtype)
+    return p
+
+
+def hybrid_split(cfg):
+    """(n_groups, tail): 81 layers, every=6 -> 13 groups + 3 tail layers."""
+    every = cfg.hybrid_attn_every
+    return cfg.n_layers // every, cfg.n_layers % every
+
+
+def _tree_reshape_groups(tree, n_groups, every):
+    """(n_groups*every, ...) leaves -> (n_groups, every, ...)."""
+    return jax.tree.map(
+        lambda a: a[: n_groups * every].reshape((n_groups, every) + a.shape[1:]), tree
+    )
+
+
+def _tree_tail(tree, n_groups, every):
+    return jax.tree.map(lambda a: a[n_groups * every :], tree)
+
+
+# ----------------------------- blocks ---------------------------------------
+
+
+def _dense_block(lp, cfg, x, positions, mesh, is_moe, collect_kv=False):
+    x = shard_hint(x, mesh, "dp", None, None)
+    h = rmsnorm_apply(lp["attn_norm"], x)
+    a, kv = attention.attention_apply(
+        lp["attn"], cfg, h, positions=positions, causal=True,
+        backend=cfg.attn_backend, mesh=mesh,
+    )
+    x = x + a
+    h = rmsnorm_apply(lp["mlp_norm"], x)
+    if is_moe:
+        x = x + moe_mod.moe_apply(lp["moe"], cfg, h, mesh=mesh)
+    else:
+        x = x + swiglu_apply(lp["mlp"], h, cfg.compute_dtype)
+    return (x, kv) if collect_kv else (x, None)
+
+
+def _shared_attn_block(sp, cfg, x, positions, collect_kv=False, mesh=None):
+    x = shard_hint(x, mesh, "dp", None, None)
+    h = rmsnorm_apply(sp["attn_norm"], x)
+    a, kv = attention.attention_apply(
+        sp["attn"], cfg, h, positions=positions, causal=True,
+        backend=cfg.attn_backend, mesh=mesh,
+    )
+    x = x + a
+    h = rmsnorm_apply(sp["mlp_norm"], x)
+    x = x + swiglu_apply(sp["mlp"], h, cfg.compute_dtype)
+    return (x, kv) if collect_kv else (x, None)
+
+
+def _ssm_block(lp, cfg, x, collect_state=False, mesh=None):
+    x = shard_hint(x, mesh, "dp", None, None)
+    h = rmsnorm_apply(lp["norm"], x)
+    if collect_state:
+        out, st = ssm_mod.ssm_apply(lp["ssm"], cfg, h, backend=cfg.ssm_backend, return_state=True)
+        return x + out, st
+    return x + ssm_mod.ssm_apply(lp["ssm"], cfg, h, backend=cfg.ssm_backend), None
+
+
+def _remat(f, policy: str):
+    if policy == "none":
+        return f
+    if policy == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(f)
+
+
+# ----------------------------- forward --------------------------------------
+
+
+def backbone_apply(params, cfg, x, *, positions=None, mesh=None, collect=False):
+    """Layer stack on embeddings x (B, T, D) -> (h, cache_parts | None).
+
+    ``collect=True`` additionally returns the serving cache ingredients
+    (per-layer KV / SSM states), used by prefill.
+    """
+    B, T, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(h, lp):
+            return _dense_block(lp, cfg, h, positions, mesh, is_moe, collect)
+
+        body = _remat(body, cfg.remat)
+        x, kvs = stack_scan(body, x, params["layers"], cfg.scan_layers)
+        aux = {"k": kvs[0], "v": kvs[1]} if collect else None
+
+    elif cfg.family == "ssm":
+
+        def body(h, lp):
+            return _ssm_block(lp, cfg, h, collect, mesh=mesh)
+
+        body = _remat(body, cfg.remat)
+        x, states = stack_scan(body, x, params["layers"], cfg.scan_layers)
+        aux = states if collect else None
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups, tail = hybrid_split(cfg)
+        sp = params["shared_attn"]
+        grouped = _tree_reshape_groups(params["layers"], n_groups, every)
+        tail_p = _tree_tail(params["layers"], n_groups, every)
+
+        def mamba_body(h, lp):
+            return _ssm_block(lp, cfg, h, collect, mesh=mesh)
+
+        mamba_body = _remat(mamba_body, cfg.remat)
+
+        def group_body(h, glp):
+            h, states = stack_scan(mamba_body, h, glp, cfg.scan_layers)
+            h, kv = _shared_attn_block(sp, cfg, h, positions, collect, mesh=mesh)
+            return h, (states, kv)
+
+        x, gouts = stack_scan(group_body, x, grouped, cfg.scan_layers)
+        g_states, g_kv = gouts if gouts is not None else (None, None)
+        if tail:
+            x, t_states = stack_scan(mamba_body, x, tail_p, cfg.scan_layers)
+        aux = None
+        if collect:
+            # flatten (n_groups, every, ...) states + tail back to (L, ...)
+            flat = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), g_states
+            )
+            if tail:
+                flat = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), flat, t_states
+                )
+            aux = {"S": flat["S"], "conv": flat["conv"], "k": g_kv[0], "v": g_kv[1]}
+    else:
+        raise ValueError(cfg.family)
+    return rmsnorm_apply(params["final_norm"], x), aux
+
+
+def embed_tokens(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+
+
+def lm_logits(params, cfg, h):
+    return dense_apply(params["unembed"], h, cfg.compute_dtype)
+
+
+def lm_loss(params, cfg, batch, *, mesh=None):
+    """batch: {tokens (B,L), labels (B,L), [patches|frames ...]}."""
+    x = embed_tokens(params, cfg, batch["tokens"])
+    n_prefix = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = dense_apply(
+            params["patch_proj"], batch["patches"].astype(cfg.compute_dtype),
+            cfg.compute_dtype,
+        )
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = pe.shape[1]
+    x = shard_hint(x, mesh, "dp", None, None)
+    h, _ = backbone_apply(params, cfg, x, mesh=mesh)
+    h = h[:, n_prefix:]
+    # fused chunked unembed+CE: never materializes (B, L, V) logits
+    return chunked_softmax_xent(
+        h, params["unembed"]["w"], batch["labels"],
+        chunk=cfg.ce_chunk, z_loss=1e-4, mask=batch.get("mask"), mesh=mesh,
+    )
+
+
+# ------------------------------ serving -------------------------------------
+
+
+def decode_cache_init(cfg, batch: int, max_len: int, dtype=None):
+    """Ring-buffer KV cache (attention) / recurrent state (ssm/hybrid)."""
+    dtype = dtype or cfg.compute_dtype
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        Hk, hd = cfg.n_kv_heads, cfg.hd
+        return {
+            "k": jnp.zeros((L, batch, max_len, Hk, hd), dtype),
+            "v": jnp.zeros((L, batch, max_len, Hk, hd), dtype),
+        }
+    st = ssm_mod.ssm_decode_init(cfg, batch, dtype)
+    cache = {
+        "S": jnp.zeros((L,) + st["S"].shape, st["S"].dtype),
+        "conv": jnp.zeros((L,) + st["conv"].shape, st["conv"].dtype),
+    }
+    if cfg.family == "hybrid":
+        n_groups, _ = hybrid_split(cfg)
+        Hk, hd = cfg.n_kv_heads, cfg.hd
+        cache["k"] = jnp.zeros((n_groups, batch, max_len, Hk, hd), dtype)
+        cache["v"] = jnp.zeros((n_groups, batch, max_len, Hk, hd), dtype)
+    return cache
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, mesh=None):
+    """One decode step.  tokens (B,), pos (B,).  -> (logits (B,V), cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens[:, None])  # (B, 1, D)
+    x = shard_hint(x, mesh, "dp", None, None)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(h, lpc):
+            lp, ck, cv = lpc
+            hn = rmsnorm_apply(lp["attn_norm"], h)
+            a, ck, cv = attention.decode_attention_apply(lp["attn"], cfg, hn, ck, cv, pos)
+            h = h + a
+            hn = rmsnorm_apply(lp["mlp_norm"], h)
+            if is_moe:
+                h = h + moe_mod.moe_apply(lp["moe"], cfg, hn, mesh=mesh)
+            else:
+                h = h + swiglu_apply(lp["mlp"], hn, cfg.compute_dtype)
+            return h, (ck, cv)
+
+        x, (nk, nv) = stack_scan(body, x, (params["layers"], cache["k"], cache["v"]), cfg.scan_layers)
+        cache = {"k": nk, "v": nv}
+
+    elif cfg.family == "ssm":
+
+        def body(h, lps):
+            lp, S, conv = lps
+            hn = rmsnorm_apply(lp["norm"], h)
+            out, st = ssm_mod.ssm_decode_apply(lp["ssm"], cfg, hn, {"S": S, "conv": conv})
+            return h + out, (st["S"], st["conv"])
+
+        x, (nS, nconv) = stack_scan(body, x, (params["layers"], cache["S"], cache["conv"]), cfg.scan_layers)
+        cache = {"S": nS, "conv": nconv}
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups, tail = hybrid_split(cfg)
+        sp = params["shared_attn"]
+        grouped = _tree_reshape_groups(params["layers"], n_groups, every)
+        tail_p = _tree_tail(params["layers"], n_groups, every)
+        gS = cache["S"][: n_groups * every].reshape((n_groups, every) + cache["S"].shape[1:])
+        gC = cache["conv"][: n_groups * every].reshape((n_groups, every) + cache["conv"].shape[1:])
+
+        def mamba_body(h, lps):
+            lp, S, conv = lps
+            hn = rmsnorm_apply(lp["norm"], h)
+            out, st = ssm_mod.ssm_decode_apply(lp["ssm"], cfg, hn, {"S": S, "conv": conv})
+            return h + out, (st["S"], st["conv"])
+
+        def group_body(h, gin):
+            glp, S, conv, ck, cv = gin
+            h, (nS, nconv) = stack_scan(mamba_body, h, (glp, S, conv), cfg.scan_layers)
+            hn = rmsnorm_apply(sp["attn_norm"], h)
+            a, ck, cv = attention.decode_attention_apply(sp["attn"], cfg, hn, ck, cv, pos)
+            h = h + a
+            hn = rmsnorm_apply(sp["mlp_norm"], h)
+            h = h + swiglu_apply(sp["mlp"], hn, cfg.compute_dtype)
+            return h, (nS, nconv, ck, cv)
+
+        x, (nS, nconv, nk, nv) = stack_scan(
+            group_body, x, (grouped, gS, gC, cache["k"], cache["v"]), cfg.scan_layers
+        )
+        nS = nS.reshape((-1,) + nS.shape[2:])
+        nconv = nconv.reshape((-1,) + nconv.shape[2:])
+        if tail:
+            tS = cache["S"][n_groups * every :]
+            tC = cache["conv"][n_groups * every :]
+            x, (tS, tC) = stack_scan(mamba_body, x, (tail_p, tS, tC), cfg.scan_layers)
+            nS = jnp.concatenate([nS, tS], axis=0)
+            nconv = jnp.concatenate([nconv, tC], axis=0)
+        cache = {"S": nS, "conv": nconv, "k": nk, "v": nv}
+    else:
+        raise ValueError(cfg.family)
+
+    h = rmsnorm_apply(params["final_norm"], x)
+    logits = lm_logits(params, cfg, h)[:, 0]
+    return logits, cache
+
+
+def prefill(params, cfg, tokens, max_len: int, *, mesh=None, patches=None):
+    """Full-sequence prefill: returns (logits, cache)."""
+    B, L = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm" and patches is not None:
+        pe = dense_apply(
+            params["patch_proj"], patches.astype(cfg.compute_dtype), cfg.compute_dtype
+        )
+        x = jnp.concatenate([pe, x], axis=1)
+    T = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    h, aux = backbone_apply(params, cfg, x, positions=positions, mesh=mesh, collect=True)
+    logits = lm_logits(params, cfg, h)
+
+    max_len = max(max_len, T)  # vlm: patches extend the cached prefix
+    cache = decode_cache_init(cfg, B, max_len)
+    if "k" in cache and aux is not None and "k" in aux:
+        pad = max_len - T
+        cache["k"] = jnp.pad(aux["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["v"] = jnp.pad(aux["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if "S" in cache and aux is not None and "S" in aux:
+        cache["S"] = aux["S"]
+        cache["conv"] = aux["conv"].astype(cache["conv"].dtype)
+    return logits, cache

@@ -1,0 +1,184 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+Backbone only (assignment): the mel-spectrogram conv frontend is a stub --
+``input_specs()`` feeds precomputed frame embeddings (B, 1500, d_model).
+LayerNorm + GELU MLP + sinusoidal positions + QKV bias; decoder = causal
+self-attention + cross-attention to the encoder output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention
+from repro.models.common import (
+    chunked_softmax_xent,
+    cross_entropy_loss,
+    stack_scan,
+    dense_apply,
+    dense_init,
+    gelu_mlp_init,
+    gelu_mlp_apply,
+    layernorm_apply,
+    layernorm_init,
+    sinusoidal_positions,
+    uniform_scale_init,
+)
+
+
+def whisper_init(key, cfg):
+    keys = jax.random.split(key, 10)
+    D, V = cfg.d_model, cfg.vocab
+    Le, Ld = cfg.n_enc_layers, cfg.n_dec_layers
+    return {
+        "frame_proj": dense_init(keys[0], D, D, cfg.param_dtype, bias=True),
+        "embed": uniform_scale_init(keys[1], (V, D), 1.0, cfg.param_dtype),
+        "enc": {
+            "attn_norm": layernorm_init(D, cfg.param_dtype, stack=Le),
+            "attn": attention.attention_init(keys[2], cfg, stack=Le),
+            "mlp_norm": layernorm_init(D, cfg.param_dtype, stack=Le),
+            "mlp": gelu_mlp_init(keys[3], D, cfg.d_ff, cfg.param_dtype, stack=Le),
+        },
+        "enc_norm": layernorm_init(D, cfg.param_dtype),
+        "dec": {
+            "self_norm": layernorm_init(D, cfg.param_dtype, stack=Ld),
+            "self_attn": attention.attention_init(keys[4], cfg, stack=Ld),
+            "cross_norm": layernorm_init(D, cfg.param_dtype, stack=Ld),
+            "cross_attn": attention.attention_init(keys[5], cfg, stack=Ld),
+            "mlp_norm": layernorm_init(D, cfg.param_dtype, stack=Ld),
+            "mlp": gelu_mlp_init(keys[6], D, cfg.d_ff, cfg.param_dtype, stack=Ld),
+        },
+        "dec_norm": layernorm_init(D, cfg.param_dtype),
+    }
+
+
+def encode(params, cfg, frames, *, mesh=None):
+    """frames (B, T, D) precomputed (stub frontend) -> encoder states."""
+    B, T, D = frames.shape
+    x = dense_apply(params["frame_proj"], frames.astype(cfg.compute_dtype), cfg.compute_dtype)
+    x = x + sinusoidal_positions(T, D)[None].astype(cfg.compute_dtype)
+
+    def body(h, lp):
+        hn = layernorm_apply(lp["attn_norm"], h)
+        a, _ = attention.attention_apply(
+            lp["attn"], cfg, hn, causal=False, rope=False,
+            backend=cfg.attn_backend, mesh=mesh,
+        )
+        h = h + a
+        hn = layernorm_apply(lp["mlp_norm"], h)
+        h = h + gelu_mlp_apply(lp["mlp"], hn, cfg.compute_dtype)
+        return h, None
+
+    x, _ = stack_scan(body, x, params["enc"], cfg.scan_layers)
+    return layernorm_apply(params["enc_norm"], x)
+
+
+def decode_train(params, cfg, tokens, enc_out, *, collect_kv=False, mesh=None):
+    """Teacher-forced decoder pass -> (h, aux)."""
+    B, L = tokens.shape
+    D = cfg.d_model
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = x + sinusoidal_positions(L, D)[None].astype(cfg.compute_dtype)
+
+    def body(h, lp):
+        hn = layernorm_apply(lp["self_norm"], h)
+        a, kv = attention.attention_apply(
+            lp["self_attn"], cfg, hn, causal=True, rope=False,
+            backend=cfg.attn_backend, mesh=mesh,
+        )
+        h = h + a
+        hn = layernorm_apply(lp["cross_norm"], h)
+        a, xkv = attention.attention_apply(
+            lp["cross_attn"], cfg, hn, kv_x=enc_out, causal=False, rope=False,
+            backend=cfg.attn_backend, mesh=mesh,
+        )
+        h = h + a
+        hn = layernorm_apply(lp["mlp_norm"], h)
+        h = h + gelu_mlp_apply(lp["mlp"], hn, cfg.compute_dtype)
+        return h, (kv, xkv) if collect_kv else None
+
+    x, aux = stack_scan(body, x, params["dec"], cfg.scan_layers)
+    return layernorm_apply(params["dec_norm"], x), aux
+
+
+def whisper_loss(params, cfg, batch, *, mesh=None):
+    """batch: {frames (B,T,D), tokens (B,L), labels (B,L)}."""
+    enc_out = encode(params, cfg, batch["frames"], mesh=mesh)
+    h, _ = decode_train(params, cfg, batch["tokens"], enc_out, mesh=mesh)
+    # tied unembedding, fused chunked CE
+    return chunked_softmax_xent(
+        h, params["embed"].T, batch["labels"],
+        chunk=cfg.ce_chunk, z_loss=1e-4, mask=batch.get("mask"),
+    )
+
+
+# ------------------------------ serving -------------------------------------
+
+
+def whisper_cache_init(cfg, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    Ld = cfg.n_dec_layers
+    Hk, hd = cfg.n_kv_heads, cfg.hd
+    T = cfg.n_audio_frames
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, Hk, hd), dtype),
+        "v": jnp.zeros((Ld, batch, max_len, Hk, hd), dtype),
+        "xk": jnp.zeros((Ld, batch, T, Hk, hd), dtype),
+        "xv": jnp.zeros((Ld, batch, T, Hk, hd), dtype),
+    }
+
+
+def whisper_prefill(params, cfg, tokens, frames, max_len: int, *, mesh=None):
+    enc_out = encode(params, cfg, frames, mesh=mesh)
+    h, aux = decode_train(params, cfg, tokens, enc_out, collect_kv=True, mesh=mesh)
+    (k, v), (xk, xv) = aux
+    logits = dense_apply({"w": params["embed"].T}, h, cfg.compute_dtype)
+    pad = max_len - tokens.shape[1]
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "xk": xk,
+        "xv": xv,
+    }
+    return logits, cache
+
+
+def whisper_decode_step(params, cfg, cache, tokens, pos, *, mesh=None):
+    """One decode token vs self-KV ring cache + fixed cross KV."""
+    B = tokens.shape[0]
+    D = cfg.d_model
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.compute_dtype)
+    # per-sequence position embedding lookup
+    posemb = sinusoidal_positions(cache["k"].shape[2], D)[pos][:, None]
+    x = x + posemb.astype(cfg.compute_dtype)
+
+    def body(h, lpc):
+        lp, ck, cv, xk, xv = lpc
+        hn = layernorm_apply(lp["self_norm"], h)
+        a, ck, cv = attention.decode_attention_apply(
+            lp["self_attn"], cfg, hn, ck, cv, pos, rope=False
+        )
+        h = h + a
+        # cross attention: fixed KV, full (unmasked) softmax
+        hn = layernorm_apply(lp["cross_norm"], h)
+        q = dense_apply(lp["cross_attn"]["wq"], hn, cfg.compute_dtype).reshape(B, 1, H, hd)
+        G = H // Hk
+        qg = q.astype(jnp.float32).reshape(B, Hk, G, hd) * (hd ** -0.5)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, xk.astype(jnp.float32))
+        p_att = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bskd->bkgd", p_att, xv.astype(jnp.float32))
+        o = o.reshape(B, 1, H * hd).astype(cfg.compute_dtype)
+        h = h + dense_apply(lp["cross_attn"]["wo"], o, cfg.compute_dtype)
+        hn = layernorm_apply(lp["mlp_norm"], h)
+        h = h + gelu_mlp_apply(lp["mlp"], hn, cfg.compute_dtype)
+        return h, (ck, cv)
+
+    x, (nk, nv) = stack_scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        cfg.scan_layers,
+    )
+    h = layernorm_apply(params["dec_norm"], x)
+    logits = dense_apply({"w": params["embed"].T}, h, cfg.compute_dtype)[:, 0]
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,176 @@
+"""Paged KV cache backed by a PULSE arena (DESIGN.md S3 integration).
+
+Physical layout:
+  * ``k_pages`` / ``v_pages``: (layers, n_pages, page_size, Hk, hd) page
+    pools in HBM.  One *physical page id* indexes every layer's pool (vLLM
+    block-table convention).
+  * page tables: per-sequence **linked lists in a PULSE arena** -- node
+    ``[phys_page, next, seq_id, pad]``.  Walking a sequence's chain IS a
+    pointer traversal; the serving engine executes it with the PULSE batched
+    executor, and on the paper's hardware each walk would ship as an
+    iterator with a scratch-pad of page ids (the 256 B scratch bounds ~56
+    pages per continuation round -- the S3 max-iteration resume handles
+    longer chains; the software path materializes the whole table at once).
+
+The walked table feeds ``repro.kernels.paged_attention`` (decode) --
+pointer-chase fetch fused with flash-decode logic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arena as arena_mod
+from repro.core.iterator import PulseIterator, execute_batched
+
+NODE_WORDS = 4
+PHYS, NEXT, SEQ = 0, 1, 2
+
+
+def page_walk_iterator(max_pages: int) -> PulseIterator:
+    """Collect the chain's physical page ids into the scratch pad.
+
+    scratch: [count, pages[0..max_pages-1]]
+    """
+    S = 1 + max_pages
+
+    def init(head_ptrs):
+        B = head_ptrs.shape[0]
+        return jnp.asarray(head_ptrs, jnp.int32), jnp.full((B, S), -1, jnp.int32).at[:, 0].set(0)
+
+    def next_fn(node, ptr, scratch):
+        return node[NEXT], scratch
+
+    def end_fn(node, ptr, scratch):
+        cnt = scratch[0]
+        scratch = scratch.at[jnp.clip(cnt + 1, 1, S - 1)].set(node[PHYS])
+        scratch = scratch.at[0].set(cnt + 1)
+        done = (node[NEXT] == arena_mod.NULL) | (cnt + 1 >= max_pages)
+        return done, scratch
+
+    return PulseIterator(S, next_fn, end_fn, init, name="page_walk")
+
+
+class PagedKVCache:
+    """Host-managed page allocator + device page pools."""
+
+    def __init__(self, cfg, *, n_pages: int, page_size: int, max_batch: int,
+                 arena_capacity: int | None = None, dtype=None):
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_batch = max_batch
+        L, Hk, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        dtype = dtype or cfg.compute_dtype
+        self.k_pages = jnp.zeros((L, n_pages, page_size, Hk, hd), dtype)
+        self.v_pages = jnp.zeros((L, n_pages, page_size, Hk, hd), dtype)
+        cap = arena_capacity or (n_pages + 8)
+        self.builder = arena_mod.ArenaBuilder(cap, NODE_WORDS)
+        # page 0 is reserved as the trash page (inactive-slot writes land
+        # there), so it is never handed out
+        self.free_pages = list(range(n_pages - 1, 0, -1))
+        self.heads = np.full(max_batch, arena_mod.NULL, np.int32)
+        self.tails = np.full(max_batch, arena_mod.NULL, np.int32)
+        self.lengths = np.zeros(max_batch, np.int64)
+
+    # --------------------------- host management ----------------------------
+
+    def reset_seq(self, slot: int):
+        """Frees a sequence's pages + chain (host-side, between steps)."""
+        ptr = int(self.heads[slot])
+        while ptr != arena_mod.NULL:
+            node = self.builder.data[ptr]
+            self.free_pages.append(int(node[PHYS]))
+            nxt = int(node[NEXT])
+            node[:] = 0
+            ptr = nxt
+        self.heads[slot] = self.tails[slot] = arena_mod.NULL
+        self.lengths[slot] = 0
+
+    def _append_page(self, slot: int) -> int:
+        if not self.free_pages:
+            raise MemoryError("KV page pool exhausted")
+        phys = self.free_pages.pop()
+        node_ptr = int(self.builder.alloc(1)[0])
+        self.builder.data[node_ptr] = [phys, arena_mod.NULL, slot, 0]
+        if self.tails[slot] == arena_mod.NULL:
+            self.heads[slot] = node_ptr
+        else:
+            self.builder.data[self.tails[slot], NEXT] = node_ptr
+        self.tails[slot] = node_ptr
+        return phys
+
+    def ensure_capacity(self, slot: int, new_len: int):
+        """Appends pages until the sequence fits ``new_len`` tokens."""
+        needed = -(-new_len // self.page_size)
+        while self.n_alloc_pages(slot) < needed:
+            self._append_page(slot)
+
+    def n_alloc_pages(self, slot: int) -> int:
+        n, ptr = 0, int(self.heads[slot])
+        while ptr != arena_mod.NULL:
+            n += 1
+            ptr = int(self.builder.data[ptr, NEXT])
+        return n
+
+    # ------------------------- PULSE page-table walk -------------------------
+
+    def walk_page_tables(self, max_pages: int):
+        """Batched PULSE traversal of every active chain.
+
+        Returns (page_table (B, max_pages) int32, lengths (B,) int32).
+        """
+        ar = self.builder.finish()
+        it = page_walk_iterator(max_pages)
+        heads = jnp.asarray(self.heads, jnp.int32)
+        ptr0, scr0 = it.init(heads)
+        # empty chains (NULL head) fault immediately -- their count stays 0
+        _, scratch, status, _ = execute_batched(
+            it, ar, ptr0, scr0, max_iters=max_pages + 1
+        )
+        table = np.asarray(scratch[:, 1 : 1 + max_pages])
+        counts = np.asarray(scratch[:, 0])
+        counts = np.where(np.asarray(self.heads) == arena_mod.NULL, 0, counts)
+        return (
+            jnp.asarray(np.where(table < 0, 0, table), jnp.int32),
+            jnp.asarray(self.lengths.astype(np.int32)),
+        )
+
+    # ----------------------------- device writes ----------------------------
+
+    def write_token(self, layer_kv, active=None):
+        """Writes one new token's K/V for every active slot.
+
+        ``layer_kv``: (k, v) each (L, B, Hk, hd) -- from the decode step.
+        Must be called AFTER ensure_capacity; position = lengths[slot].
+        Inactive slots write to the reserved trash page 0.
+        """
+        k_new, v_new = layer_kv
+        B = k_new.shape[1]
+        if active is None:
+            active = np.ones(B, bool)
+        phys = np.zeros(B, np.int32)
+        offs = np.zeros(B, np.int32)
+        for b in range(B):
+            if not active[b] or self.heads[b] == arena_mod.NULL:
+                continue  # trash page 0, offset 0
+            lp = int(self.lengths[b]) // self.page_size  # logical page index
+            ptr = int(self.heads[b])
+            for _ in range(lp):
+                ptr = int(self.builder.data[ptr, NEXT])
+            phys[b] = int(self.builder.data[ptr, PHYS])
+            offs[b] = int(self.lengths[b]) % self.page_size
+        phys_j = jnp.asarray(phys)
+        offs_j = jnp.asarray(offs)
+        # (L, N, page, Hk, hd): ADJACENT advanced indices (axes 1, 2) keep
+        # the broadcast (B,) dim in place -> value shape is (L, B, Hk, hd)
+        self.k_pages = self.k_pages.at[:, phys_j, offs_j].set(k_new)
+        self.v_pages = self.v_pages.at[:, phys_j, offs_j].set(v_new)
+        self.lengths[:B] += np.asarray(active, np.int64)
+
+    def advance(self, slots):
+        for s in slots:
+            self.ensure_capacity(s, int(self.lengths[s]) + 1)

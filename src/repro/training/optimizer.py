@@ -1,0 +1,178 @@
+"""Optimizers: AdamW (f32 moments) and Adafactor (factored second moment,
+for trillion-param fits), plus warmup-cosine schedule and global-norm clip.
+
+Self-contained (no optax dependency): state is a pytree mirroring params,
+so it shards with the same PartitionSpecs and checkpoints with the same
+machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+
+
+def schedule(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# -------------------------------- AdamW --------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1**t
+    bc2 = 1 - cfg.b2**t
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        step_v = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_v = step_v + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_v).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+# ------------------------------ Adafactor ------------------------------------
+
+
+def _factored(p, min_dim):
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def adafactor_init(params, cfg: OptimizerConfig | None = None):
+    cfg = cfg or OptimizerConfig(name="adafactor")
+
+    def init_leaf(p):
+        if _factored(p, cfg.factored_min_dim):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(init_leaf, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+    eps = 1e-30
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (
+                vr[..., None]
+                * vc[..., None, :]
+                / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps)
+            )
+            pre = g / jnp.sqrt(denom + eps)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            vv = beta2 * v["v"] + (1 - beta2) * g2
+            pre = g / jnp.sqrt(vv + eps)
+            nv = {"v": vv}
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(pre * pre) + eps)
+        pre = pre / jnp.maximum(1.0, rms)
+        step_v = pre
+        if p.ndim >= 2:
+            step_v = step_v + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_v).astype(p.dtype), nv
+
+    g_flat, treedef = jax.tree.flatten(grads)
+    v_flat = treedef.flatten_up_to(state["v"])
+    p_flat = jax.tree.leaves(params)
+    res = [upd(g, v, p) for g, v, p in zip(g_flat, v_flat, p_flat)]
+    new_params = jax.tree.unflatten(treedef, [r[0] for r in res])
+    new_v = jax.tree.unflatten(treedef, [r[1] for r in res])
+    return new_params, {"v": new_v, "step": step}
+
+
+# ------------------------------ front door -----------------------------------
+
+
+def opt_init(cfg: OptimizerConfig, params):
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    raise ValueError(cfg.name)
+
+
+def opt_update(cfg: OptimizerConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.name == "adamw":
+        new_p, new_s = adamw_update(cfg, grads, state, params)
+    elif cfg.name == "adafactor":
+        new_p, new_s = adafactor_update(cfg, grads, state, params)
+    else:
+        raise ValueError(cfg.name)
+    return new_p, new_s, gnorm

@@ -1,0 +1,156 @@
+"""ISA VM tests: verifier rules + hand-assembled programs vs traced oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import isa
+from repro.core.iterator import STATUS_DONE, STATUS_FAULT, execute_batched
+from repro.core.structures import bst, btree, hash_table, linked_list
+from repro.core.structures import isa_programs
+
+RNG = np.random.default_rng(7)
+
+
+def _unique_keys(n, lo=0, hi=10**6):
+    return RNG.choice(np.arange(lo, hi, dtype=np.int64), size=n, replace=False).astype(
+        np.int32
+    )
+
+
+# ----------------------------- verifier -------------------------------------
+
+
+def test_verifier_rejects_backward_jump():
+    a = isa.Asm(scratch_words=1, node_words=4)
+    a.label("top")
+    a.movi(0, 1)
+    a.ret()
+    with pytest.raises(ValueError, match="forward"):
+        a.jmp("top")  # label already behind
+        a.finish()
+
+
+def test_verifier_rejects_unterminated_program():
+    a = isa.Asm(scratch_words=1, node_words=4)
+    a.movi(0, 1)
+    with pytest.raises(ValueError, match="NEXT_ITER or RETURN"):
+        a.finish()
+
+
+def test_verifier_rejects_bad_scratch_index():
+    a = isa.Asm(scratch_words=2, node_words=4)
+    a.loads(0, 5)
+    a.ret()
+    with pytest.raises(ValueError, match="scratch index"):
+        a.finish()
+
+
+def test_verifier_bounds_node_index():
+    a = isa.Asm(scratch_words=2, node_words=4)
+    a.loadn(0, 9)
+    a.ret()
+    with pytest.raises(ValueError, match="node index"):
+        a.finish()
+
+
+# ----------------------- programs vs traced oracles -------------------------
+
+
+def test_isa_list_find_equals_traced():
+    keys = _unique_keys(128)
+    values = RNG.integers(0, 10**6, 128).astype(np.int32)
+    ar, head = linked_list.build(keys, values)
+    traced = linked_list.find_iterator()
+    prog = isa_programs.list_find_program()
+    vm = isa.as_pulse_iterator(prog)
+    queries = np.concatenate([keys[:40], _unique_keys(40, hi=10**4)])
+    ptr0, scr0 = traced.init(jnp.asarray(queries), head)
+    r_t = execute_batched(traced, ar, ptr0, scr0, max_iters=500)
+    r_v = execute_batched(vm, ar, ptr0, scr0, max_iters=500)
+    np.testing.assert_array_equal(np.asarray(r_t[1]), np.asarray(r_v[1]))  # scratch
+    np.testing.assert_array_equal(np.asarray(r_t[2]), np.asarray(r_v[2]))  # status
+    np.testing.assert_array_equal(np.asarray(r_t[3]), np.asarray(r_v[3]))  # iters
+
+
+def test_isa_hash_find_equals_traced():
+    n, n_buckets = 300, 32
+    keys = _unique_keys(n)
+    values = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, heads = hash_table.build(keys, values, n_buckets)
+    traced = hash_table.find_iterator(n_buckets)
+    vm = isa.as_pulse_iterator(isa_programs.hash_find_program())
+    queries = np.concatenate([keys[:60], _unique_keys(60, hi=10**4)])
+    ptr0, scr0 = traced.init(jnp.asarray(queries), jnp.asarray(heads))
+    r_t = execute_batched(traced, ar, ptr0, scr0, max_iters=500)
+    r_v = execute_batched(vm, ar, ptr0, scr0, max_iters=500)
+    np.testing.assert_array_equal(np.asarray(r_t[1]), np.asarray(r_v[1]))
+    np.testing.assert_array_equal(np.asarray(r_t[2]), np.asarray(r_v[2]))
+
+
+def test_isa_bst_find_equals_traced():
+    n = 800
+    keys = _unique_keys(n)
+    values = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, root, _ = bst.build(keys, values)
+    traced = bst.find_iterator()
+    vm = isa.as_pulse_iterator(isa_programs.bst_find_program())
+    queries = np.concatenate([keys[:60], _unique_keys(60, hi=10**4)])
+    ptr0, scr0 = traced.init(jnp.asarray(queries), root)
+    r_t = execute_batched(traced, ar, ptr0, scr0, max_iters=200)
+    r_v = execute_batched(vm, ar, ptr0, scr0, max_iters=200)
+    np.testing.assert_array_equal(np.asarray(r_t[1]), np.asarray(r_v[1]))
+    np.testing.assert_array_equal(np.asarray(r_t[2]), np.asarray(r_v[2]))
+
+
+def test_isa_btree_find_equals_traced():
+    n = 1200
+    keys = _unique_keys(n)
+    values = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, root, _ = btree.build(keys, values)
+    traced = btree.find_iterator()
+    vm = isa.as_pulse_iterator(isa_programs.btree_find_program())
+    queries = np.concatenate([keys[:60], _unique_keys(60, hi=10**4)])
+    ptr0, scr0 = traced.init(jnp.asarray(queries), root)
+    r_t = execute_batched(traced, ar, ptr0, scr0, max_iters=100)
+    r_v = execute_batched(vm, ar, ptr0, scr0, max_iters=100)
+    np.testing.assert_array_equal(np.asarray(r_t[1]), np.asarray(r_v[1]))
+    np.testing.assert_array_equal(np.asarray(r_t[2]), np.asarray(r_v[2]))
+    np.testing.assert_array_equal(np.asarray(r_t[3]), np.asarray(r_v[3]))
+
+
+# --------------------------- dispatch model ---------------------------------
+
+
+def test_dispatch_offloads_memory_bound_only():
+    from repro.core import dispatch
+
+    lst = linked_list.find_iterator()
+    d = dispatch.offload_decision(lst, linked_list.NODE_WORDS)
+    assert d.offload, d.reason  # t_c/t_d ~ 0.06 in the paper (hash/list)
+
+    # a compute-heavy iterator must be rejected (run at CPU node)
+    def heavy_next(node, ptr, scratch):
+        x = scratch
+        for _ in range(200):
+            x = x * 3 + 1
+        return node[2], x
+
+    def heavy_end(node, ptr, scratch):
+        return node[2] == -1, scratch
+
+    from repro.core.iterator import PulseIterator
+
+    heavy = PulseIterator(3, heavy_next, heavy_end, name="heavy")
+    d2 = dispatch.offload_decision(heavy, linked_list.NODE_WORDS)
+    assert not d2.offload, d2.reason
+
+
+def test_dispatch_isa_count_is_longest_path():
+    from repro.core import dispatch, isa as isa_mod
+
+    prog = isa_programs.list_find_program()
+    vm = isa_mod.as_pulse_iterator(prog)
+    n = dispatch.count_instructions(vm, prog.node_words)
+    assert n == dispatch.isa_longest_path(prog)
+    assert 0 < n <= len(prog)  # a DAG path can never exceed program length

@@ -1,0 +1,200 @@
+"""Unit tests: arena + iterator executor + every ported data structure
+against its pure-Python oracle (single memory node)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import arena as arena_mod
+from repro.core.iterator import (
+    STATUS_DONE,
+    STATUS_FAULT,
+    STATUS_MAXED,
+    execute_batched,
+    resume,
+)
+from repro.core.structures import bst, btree, hash_table, linked_list, skiplist
+
+RNG = np.random.default_rng(0)
+
+
+def _unique_keys(n, lo=0, hi=10**6):
+    keys = RNG.choice(np.arange(lo, hi, dtype=np.int64), size=n, replace=False)
+    return keys.astype(np.int32)
+
+
+# ------------------------------ arena ---------------------------------------
+
+
+def test_arena_bitcast_roundtrip():
+    x = jnp.asarray([1.5, -2.25, 0.0, 3.14159], jnp.float32)
+    back = arena_mod.i2f(arena_mod.f2i(x))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_arena_node_word_limit():
+    with pytest.raises(ValueError):
+        arena_mod.make_arena(np.zeros((4, 65), np.int32))
+
+
+def test_interleaved_allocation_spreads_shards():
+    b = arena_mod.ArenaBuilder(16, 4, num_shards=4, policy="interleaved")
+    ptrs = b.alloc(8)
+    shards = ptrs // 4
+    assert sorted(shards.tolist()) == [0, 0, 1, 1, 2, 2, 3, 3]
+
+
+# --------------------------- linked list ------------------------------------
+
+
+def test_list_find_matches_oracle():
+    keys = _unique_keys(200)
+    values = RNG.integers(0, 10**6, 200).astype(np.int32)
+    ar, head = linked_list.build(keys, values)
+    it = linked_list.find_iterator()
+    queries = np.concatenate([keys[:50], _unique_keys(50, hi=10**4)])
+    ptr0, scr0 = it.init(jnp.asarray(queries), head)
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=1000)
+    ref = linked_list.ref_find(keys, values, queries)
+    scr = np.asarray(scr)
+    for i, (val, found, hops) in enumerate(ref):
+        assert int(scr[i, 1]) == val, f"query {i}"
+        assert int(scr[i, 2]) == found
+    assert (np.asarray(status) == STATUS_DONE).all()
+
+
+def test_list_sum_stateful_scratch():
+    keys = np.arange(64, dtype=np.int32)
+    values = RNG.integers(0, 100, 64).astype(np.int32)
+    ar, head = linked_list.build(keys, values)
+    it = linked_list.sum_iterator()
+    ptr0, scr0 = it.init(jnp.asarray([head, head], jnp.int32))
+    _, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=1000)
+    assert int(scr[0, 0]) == int(values.sum())
+    assert int(scr[0, 1]) == 64
+    assert int(iters[0]) == 64  # one iteration per node
+
+
+def test_max_iters_continuation_resume():
+    """Paper S3: a request hitting max_iterations returns its scratch_pad and
+    the CPU node re-issues it from that point (continuation)."""
+    keys = np.arange(100, dtype=np.int32)
+    values = np.ones(100, np.int32)
+    ar, head = linked_list.build(keys, values)
+    it = linked_list.sum_iterator()
+    ptr0, scr0 = it.init(jnp.asarray([head], jnp.int32))
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=30)
+    assert int(status[0]) == STATUS_MAXED
+    assert int(scr[0, 0]) == 30  # partial sum so far
+    # resume from the continuation: same record, fresh iteration budget
+    ptr2, scr2, status2, iters2 = execute_batched(
+        it, ar, ptr, scr, max_iters=1000
+    )
+    assert int(status2[0]) == STATUS_DONE
+    assert int(scr2[0, 0]) == 100
+
+
+# ---------------------------- hash table ------------------------------------
+
+
+def test_hash_find_matches_oracle():
+    n, n_buckets = 500, 64
+    keys = _unique_keys(n)
+    values = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, heads = hash_table.build(keys, values, n_buckets)
+    it = hash_table.find_iterator(n_buckets)
+    queries = np.concatenate([keys[:100], _unique_keys(100, hi=10**4)])
+    ptr0, scr0 = it.init(jnp.asarray(queries), jnp.asarray(heads))
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=1000)
+    ref = hash_table.ref_find(keys, values, n_buckets, queries)
+    scr = np.asarray(scr)
+    status = np.asarray(status)
+    for i, (val, found, hops) in enumerate(ref):
+        if status[i] == STATUS_FAULT:  # empty bucket -> NULL head
+            assert found == 0
+        else:
+            assert int(scr[i, 1]) == val, f"query {i}"
+            assert int(scr[i, 2]) == found
+
+
+# ------------------------------ b+tree --------------------------------------
+
+
+def test_btree_find_matches_oracle():
+    n = 3000
+    keys = _unique_keys(n)
+    values = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, root, height = btree.build(keys, values)
+    it = btree.find_iterator()
+    queries = np.concatenate([keys[:200], _unique_keys(200, hi=10**4)])
+    ptr0, scr0 = it.init(jnp.asarray(queries), root)
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=100)
+    ref = btree.ref_find(keys, values, queries)
+    scr = np.asarray(scr)
+    for i, (val, found) in enumerate(ref):
+        assert int(scr[i, 1]) == val, f"query {i}"
+        assert int(scr[i, 2]) == found
+    assert (np.asarray(iters) == height).all()  # descent = height hops
+
+
+def test_btree_range_aggregate_matches_oracle():
+    n = 2000
+    keys = np.sort(_unique_keys(n, hi=10**5))
+    values = RNG.integers(0, 1000, n).astype(np.int32)
+    ar, root, _ = btree.build(keys, values)
+    it = btree.range_aggregate_iterator()
+    los = np.asarray([0, 500, 40_000, 99_999], np.int32)
+    his = np.asarray([10**5, 45_000, 40_000, 10**5], np.int32)
+    ptr0, scr0 = it.init(jnp.asarray(los), jnp.asarray(his), root)
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=5000)
+    ref = btree.ref_range_aggregate(keys, values, los, his)
+    scr = np.asarray(scr)
+    for i, (s, mn, mx, c) in enumerate(ref):
+        assert int(scr[i, btree.RA_SUM]) % (2**32) == s, f"range {i} sum"
+        assert int(scr[i, btree.RA_COUNT]) == c, f"range {i} count"
+        if c:
+            assert int(scr[i, btree.RA_MIN]) == mn
+            assert int(scr[i, btree.RA_MAX]) == mx
+
+
+# ------------------------------- bst ----------------------------------------
+
+
+def test_bst_find_matches_oracle():
+    n = 1500
+    keys = _unique_keys(n)
+    values = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, root, height = bst.build(keys, values)
+    it = bst.find_iterator()
+    queries = np.concatenate([keys[:200], _unique_keys(200, hi=10**4)])
+    ptr0, scr0 = it.init(jnp.asarray(queries), root)
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=100)
+    value, found = bst.result(jnp.asarray(scr))
+    ref = bst.ref_find(keys, values, queries)
+    for i, (val, fnd) in enumerate(ref):
+        assert int(found[i]) == fnd, f"query {i}"
+        if fnd:
+            assert int(value[i]) == val, f"query {i}"
+    assert int(np.asarray(iters).max()) <= height
+
+
+# ----------------------------- skiplist -------------------------------------
+
+
+def test_skiplist_find_matches_oracle():
+    n = 1000
+    keys = _unique_keys(n)
+    values = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, head = skiplist.build(keys, values)
+    it = skiplist.find_iterator()
+    queries = np.concatenate([keys[:150], _unique_keys(150, hi=10**4)])
+    ptr0, scr0 = it.init(jnp.asarray(queries), head)
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=3000)
+    ref = skiplist.ref_find(keys, values, queries)
+    scr = np.asarray(scr)
+    for i, (val, found) in enumerate(ref):
+        assert int(scr[i, 2]) == found, f"query {i}"
+        if found:
+            assert int(scr[i, 1]) == val
+    # skip levels must beat a plain list walk by a wide margin
+    assert float(np.asarray(iters).mean()) < n / 8

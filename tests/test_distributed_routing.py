@@ -1,0 +1,30 @@
+"""Distributed routing integration tests.
+
+These need >1 XLA host device, and jax pins the device count at first init,
+so they run in a subprocess with its own XLA_FLAGS (in-process tests keep
+seeing 1 device, matching the dry-run isolation rule)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_distributed_routing_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # the helper sets its own
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "helpers" / "distributed_checks.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

@@ -1,0 +1,174 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arena as arena_mod
+from repro.core import translation
+from repro.core.iterator import STATUS_DONE, STATUS_FAULT, execute_batched
+from repro.core.structures import bst, btree, hash_table, linked_list
+from repro.data.pipeline import pack_documents
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------- translation / ownership ------------------------------
+
+
+@SET
+@given(
+    st.integers(2, 16),
+    st.lists(st.integers(-64, 2**20), min_size=1, max_size=64),
+    st.integers(4, 2**16),
+)
+def test_ownership_is_a_partition(num_shards, ptrs, per_shard):
+    """Every valid address has exactly one owner; invalid -> NULL."""
+    cap = per_shard * num_shards
+    bounds = jnp.asarray([i * per_shard for i in range(num_shards)] + [cap])
+    owners = np.asarray(translation.owner_of(bounds, jnp.asarray(ptrs, jnp.int32)))
+    for p, o in zip(ptrs, owners):
+        if 0 <= p < cap:
+            assert o == p // per_shard
+            assert bool(translation.is_local(bounds, int(o), p))
+            # no other shard claims it
+            for s in range(num_shards):
+                if s != o:
+                    assert not bool(translation.is_local(bounds, s, p))
+        else:
+            assert o == arena_mod.NULL
+
+
+@SET
+@given(st.integers(1, 12), st.data())
+def test_local_offset_roundtrip(num_shards, data):
+    per = data.draw(st.integers(2, 4096))
+    bounds = jnp.asarray([i * per for i in range(num_shards)] + [num_shards * per])
+    ptr = data.draw(st.integers(0, num_shards * per - 1))
+    o = int(translation.owner_of(bounds, ptr))
+    off = int(translation.local_offset(bounds, o, ptr))
+    assert 0 <= off < per
+    assert int(bounds[o]) + off == ptr
+
+
+# ---------------------- scratch-pad round trip -------------------------------
+
+
+@SET
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32), min_size=1, max_size=32))
+def test_float_bitcast_roundtrip(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(arena_mod.i2f(arena_mod.f2i(x))), np.asarray(x)
+    )
+
+
+# ---------------------- structure invariants ---------------------------------
+
+
+@SET
+@given(st.data())
+def test_btree_find_always_terminates_and_is_correct(data):
+    n = data.draw(st.integers(1, 300))
+    keys = data.draw(
+        st.lists(st.integers(0, 10**6), min_size=n, max_size=n, unique=True)
+    )
+    keys = np.asarray(keys, np.int32)
+    values = np.arange(n, dtype=np.int32)
+    ar, root, height = btree.build(keys, values)
+    it = btree.find_iterator()
+    queries = data.draw(
+        st.lists(st.integers(0, 10**6), min_size=1, max_size=32)
+    )
+    q = np.asarray(queries, np.int32)
+    ptr0, scr0 = it.init(jnp.asarray(q), root)
+    ptr, scr, status, iters = execute_batched(it, ar, ptr0, scr0, max_iters=height + 1)
+    # termination within height hops, DONE status, exact results
+    assert (np.asarray(status) == STATUS_DONE).all()
+    assert (np.asarray(iters) <= height).all()
+    ref = btree.ref_find(keys, values, q)
+    for i, (val, found) in enumerate(ref):
+        assert int(scr[i, 2]) == found
+        if found:
+            assert int(scr[i, 1]) == val
+
+
+@SET
+@given(st.data())
+def test_hash_chain_membership_complete(data):
+    """Every inserted key is findable; chains cover all keys exactly once."""
+    n = data.draw(st.integers(1, 200))
+    keys = np.asarray(
+        data.draw(st.lists(st.integers(0, 10**6), min_size=n, max_size=n, unique=True)),
+        np.int32,
+    )
+    n_buckets = data.draw(st.sampled_from([4, 16, 64]))
+    values = np.arange(n, dtype=np.int32)
+    ar, heads = hash_table.build(keys, values, n_buckets)
+    # chain coverage: walking every bucket touches each key exactly once
+    seen = []
+    dat = np.asarray(ar.data)
+    for h in heads:
+        p = int(h)
+        hops = 0
+        while p != arena_mod.NULL and hops <= n:
+            seen.append(int(dat[p, hash_table.KEY]))
+            p = int(dat[p, hash_table.NEXT])
+            hops += 1
+    assert sorted(seen) == sorted(keys.tolist())
+    # findability
+    it = hash_table.find_iterator(n_buckets)
+    ptr0, scr0 = it.init(jnp.asarray(keys), jnp.asarray(heads))
+    _, scr, status, _ = execute_batched(it, ar, ptr0, scr0, max_iters=n + 2)
+    assert (np.asarray(scr)[:, 2] == 1).all()
+
+
+@SET
+@given(st.data())
+def test_bst_lower_bound_invariant(data):
+    """The traversal's y pointer is exactly the lower bound of the query."""
+    n = data.draw(st.integers(1, 200))
+    keys = np.asarray(
+        data.draw(st.lists(st.integers(0, 10**5), min_size=n, max_size=n, unique=True)),
+        np.int32,
+    )
+    values = np.arange(n, dtype=np.int32)
+    ar, root, height = bst.build(keys, values)
+    it = bst.find_iterator()
+    q = np.asarray(data.draw(st.lists(st.integers(0, 10**5), min_size=1, max_size=16)), np.int32)
+    ptr0, scr0 = it.init(jnp.asarray(q), root)
+    _, scr, status, _ = execute_batched(it, ar, ptr0, scr0, max_iters=height + 1)
+    ks = np.sort(keys)
+    for i, query in enumerate(q):
+        idx = np.searchsorted(ks, query)
+        if idx < len(ks):  # lower bound exists
+            assert int(scr[i, bst.S_YKEY]) == int(ks[idx])
+        else:
+            assert int(scr[i, bst.S_Y]) == arena_mod.NULL
+
+
+# ---------------------- allocation / packing ---------------------------------
+
+
+@SET
+@given(st.integers(1, 8), st.integers(1, 64))
+def test_interleaved_allocation_balanced(num_shards, n_alloc):
+    per = 64
+    b = arena_mod.ArenaBuilder(per * num_shards, 4, num_shards=num_shards, policy="interleaved")
+    ptrs = b.alloc(min(n_alloc, per * num_shards))
+    shards = ptrs // per
+    counts = np.bincount(shards, minlength=num_shards)
+    assert counts.max() - counts.min() <= 1  # perfectly balanced round robin
+    assert len(np.unique(ptrs)) == len(ptrs)  # no double allocation
+
+
+@SET
+@given(st.lists(st.integers(1, 700), min_size=1, max_size=120), st.sampled_from([512, 1024]))
+def test_packing_never_overflows(doc_lens, window):
+    lens = np.asarray(doc_lens)
+    assign, waste = pack_documents(lens, window)
+    fill = {}
+    for l, a in zip(lens, assign):
+        fill[a] = fill.get(a, 0) + min(int(l), window)
+    assert max(fill.values()) <= window
+    assert 0.0 <= waste < 1.0

@@ -1,0 +1,178 @@
+"""Training substrate: optimizers, schedules, compression, loop, resume."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models.model_zoo import build_model
+from repro.data.pipeline import DataConfig, DataIterator, pack_documents, tokens_for
+from repro.training import optimizer as opt_mod
+from repro.training.compression import CompressionConfig, compress, ef_init
+from repro.training.train_loop import (
+    StragglerPolicy,
+    TrainConfig,
+    TrainLoop,
+    init_state,
+    make_train_step,
+)
+
+
+def tiny_setup(arch="qwen3_0_6b", **tcfg_kw):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    tcfg = TrainConfig(
+        opt=opt_mod.OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=100),
+        **tcfg_kw,
+    )
+    data = DataIterator(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4))
+    return cfg, model, tcfg, data
+
+
+class _Repeat:
+    """Cycles a fixed set of batches: gives the optimizer something to fit."""
+
+    def __init__(self, data, n=2):
+        self.batches = [next(data) for _ in range(n)]
+        self.i = 0
+
+    def __next__(self):
+        b = self.batches[self.i % len(self.batches)]
+        self.i += 1
+        return b
+
+
+def run_steps(model, tcfg, data, steps, state=None, rng=0):
+    state = state or init_state(model, tcfg, jax.random.PRNGKey(rng))
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    losses = []
+    for _ in range(steps):
+        state, m = step_fn(state, next(data))
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_loss_decreases_adamw():
+    _, model, tcfg, data = tiny_setup()
+    _, losses = run_steps(model, tcfg, _Repeat(data), 30)
+    assert losses[-1] < losses[0] - 1.0, losses[::10]
+
+
+def test_loss_decreases_adafactor():
+    _, model, _, data = tiny_setup()
+    tcfg = TrainConfig(
+        opt=opt_mod.OptimizerConfig(
+            name="adafactor", lr=1e-2, warmup_steps=5, total_steps=100,
+            factored_min_dim=8,
+        )
+    )
+    _, losses = run_steps(model, tcfg, _Repeat(data), 30)
+    assert losses[-1] < losses[0] - 1.0, losses[::10]
+
+
+def test_microbatching_matches_full_batch():
+    """Grad accumulation must equal the single-batch step (same math)."""
+    cfg, model, _, _ = tiny_setup()
+    data1 = DataIterator(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4))
+    data2 = DataIterator(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4))
+    t_full = TrainConfig(opt=opt_mod.OptimizerConfig(lr=1e-3), microbatches=1)
+    t_micro = TrainConfig(opt=opt_mod.OptimizerConfig(lr=1e-3), microbatches=2)
+    s1, _ = run_steps(model, t_full, data1, 3)
+    s2, _ = run_steps(model, t_micro, data2, 3)
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=3e-5, rtol=3e-4
+        )
+
+
+def test_schedule_shape():
+    oc = opt_mod.OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(opt_mod.schedule(oc, s)) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6 and abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+
+
+def test_compression_error_feedback_roundtrip():
+    g = {"a": jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)), jnp.float32)}
+    ef = ef_init(g)
+    cfg = CompressionConfig(scheme="topk", topk_frac=0.1)
+    out, new_ef, wire = compress(cfg, g, ef)
+    # decomposition: kept + residual == original
+    np.testing.assert_allclose(
+        np.asarray(out["a"]) + np.asarray(new_ef["a"]), np.asarray(g["a"]), atol=1e-6
+    )
+    # wire bytes ~10% of dense + indices
+    assert wire < 64 * 64 * 4 * 0.25
+    nz = (np.asarray(out["a"]) != 0).mean()
+    assert 0.05 < nz < 0.15
+
+
+def test_int8_compression_bounded_error():
+    g = {"a": jnp.asarray(np.random.default_rng(1).standard_normal((128,)), jnp.float32)}
+    out, new_ef, wire = compress(CompressionConfig(scheme="int8"), g, ef_init(g))
+    err = np.abs(np.asarray(out["a"]) - np.asarray(g["a"])).max()
+    scale = np.abs(np.asarray(g["a"])).max() / 127
+    assert err <= scale * 0.51 + 1e-7
+    assert wire == 128 + 4
+
+
+@pytest.mark.slow
+def test_compressed_training_converges():
+    _, model, _, data = tiny_setup()
+    tcfg = TrainConfig(
+        opt=opt_mod.OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=200),
+        compression=CompressionConfig(scheme="topk", topk_frac=0.2),
+    )
+    _, losses = run_steps(model, tcfg, _Repeat(data), 40)
+    assert losses[-1] < losses[0] - 1.0, losses[::10]
+
+
+def test_straggler_policy_flags_slow_steps():
+    pol = StragglerPolicy(deadline_factor=2.0, window=10)
+    for s in range(10):
+        pol.observe(s, 0.1)
+    assert not pol.flagged_steps
+    pol.observe(10, 0.5)
+    assert pol.flagged_steps == [10]
+
+
+# ------------------------------ data pipeline -------------------------------
+
+
+def test_data_deterministic_and_host_disjoint():
+    c0 = DataConfig(vocab=1000, seq_len=16, global_batch=8, num_hosts=2, host_id=0)
+    c1 = DataConfig(vocab=1000, seq_len=16, global_batch=8, num_hosts=2, host_id=1)
+    a = tokens_for(c0, 7)
+    b = tokens_for(c0, 7)
+    np.testing.assert_array_equal(a, b)  # deterministic
+    c = tokens_for(c1, 7)
+    assert not np.array_equal(a, c)  # disjoint slices
+    d = tokens_for(c0, 8)
+    assert not np.array_equal(a, d)  # steps differ
+
+
+def test_data_iterator_resume_exact():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=4)
+    it = DataIterator(cfg)
+    for _ in range(5):
+        next(it)
+    snap = it.state_dict()
+    want = np.asarray(next(it)["tokens"])
+    it2 = DataIterator(cfg)
+    it2.load_state_dict(snap)
+    got = np.asarray(next(it2)["tokens"])
+    np.testing.assert_array_equal(want, got)
+
+
+def test_packing_low_waste():
+    rng = np.random.default_rng(0)
+    lens = rng.integers(32, 512, 200)
+    assign, waste = pack_documents(lens, 1024)
+    assert waste < 0.15, waste
+    # no window overflows
+    fill = {}
+    for l, a in zip(lens, assign):
+        fill[a] = fill.get(a, 0) + min(int(l), 1024)
+    assert max(fill.values()) <= 1024
