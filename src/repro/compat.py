@@ -1,0 +1,29 @@
+"""Version-compat shims for the JAX APIs this repo leans on.
+
+The repo targets the installed ``jax`` (0.4.x today) but the public
+spellings of two APIs moved across releases:
+
+  * ``shard_map``: ``jax.experimental.shard_map.shard_map`` on 0.4.x,
+    promoted to ``jax.shard_map`` later.
+  * Pallas TPU memory spaces: ``pltpu.TPUMemorySpace.ANY`` (exported as
+    ``pltpu.ANY``) on 0.4.x, renamed to ``pltpu.MemorySpace.ANY`` later.
+
+Everything else imports these names from here so a JAX upgrade is a
+one-file change.
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.5-era spelling
+    from jax import shard_map as _shard_map
+
+    shard_map = _shard_map
+except (ImportError, AttributeError):  # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+from jax.experimental.pallas import tpu as _pltpu
+
+if hasattr(_pltpu, "MemorySpace"):  # modern spelling
+    TPU_ANY = _pltpu.MemorySpace.ANY
+else:  # 0.4.x: TPUMemorySpace, with ANY re-exported at module level
+    TPU_ANY = _pltpu.ANY

@@ -189,7 +189,16 @@ class ArenaBuilder:
         return out
 
     def write(self, ptrs: np.ndarray, records: np.ndarray) -> None:
-        self.data[np.asarray(ptrs)] = np.asarray(records, np.int32)
+        """Write node records; records narrower than ``node_words`` are
+        zero-padded (several structure families with different record widths
+        can share one pooled heap, as in the paper's memory nodes)."""
+        records = np.asarray(records, np.int32)
+        w = records.shape[-1]
+        if w > self.node_words:
+            raise ValueError(f"record width {w} > arena node_words {self.node_words}")
+        self.data[np.asarray(ptrs), :w] = records
+        if w < self.node_words:
+            self.data[np.asarray(ptrs), w:] = 0
 
     def finish(self, perms: Sequence[int] | None = None) -> Arena:
         return make_arena(self.data, num_shards=self.num_shards, perms=perms)

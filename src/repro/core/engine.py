@@ -32,6 +32,8 @@ from repro.core.arena import NULL, Arena
 from repro.core.iterator import (
     STATUS_ACTIVE,
     STATUS_DONE,
+    STATUS_FAULT,
+    STATUS_MAXED,
     PulseIterator,
     execute_batched,
 )
@@ -137,6 +139,12 @@ class PulseEngine:
         self.axis_name = axis_name
         self.accel = accel or dispatch_mod.AcceleratorSpec()
         self.eta = self.accel.eta if eta is None else eta
+        # serving calls execute() every scheduling round with a fixed batch
+        # shape; cache the compiled local executor per (iterator, B, budget)
+        # and the kernel path's logic closure per iterator (pulse_chase jits
+        # on logic_fn identity, so a fresh closure per call would retrace)
+        self._local_jit: dict = {}
+        self._logic_cache: dict = {}
 
     def dispatch(self, it: PulseIterator) -> dispatch_mod.OffloadDecision:
         return dispatch_mod.offload_decision(
@@ -154,7 +162,18 @@ class PulseEngine:
         return_to_cpu: bool = False,
         k_local: int = 4,
         cache_nodes: int = 0,
+        compact: bool = True,
+        backend: str = "xla",
     ) -> ExecResult:
+        """Dispatch + execute a batch of traversals.
+
+        ``backend`` selects the single-node executor: ``"xla"`` is the pure
+        JAX while_loop oracle; ``"kernel"`` runs the pulse_chase Pallas
+        kernel under the variable-depth wave scheduler (compiled on TPU, the
+        Pallas interpreter elsewhere), retiring finished lanes between depth
+        quanta.  ``compact`` enables active-set compaction of distributed
+        supersteps (ignored for the ``return_to_cpu`` ablation).
+        """
         decision = self.dispatch(it)
         offload = decision.offload if force_offload is None else force_offload
         if not offload:
@@ -170,7 +189,7 @@ class PulseEngine:
                 it, self.arena, ptr0, scratch0,
                 mesh=self.mesh, axis_name=self.axis_name,
                 max_iters=max_iters, k_local=k_local,
-                return_to_cpu=return_to_cpu,
+                return_to_cpu=return_to_cpu, compact=compact,
             )
             return ExecResult(
                 ptr=rec[:, routing.F_PTR],
@@ -180,11 +199,66 @@ class PulseEngine:
                 stats=stats,
             )
 
-        ptr, scratch, status, iters = execute_batched(
-            it, self.arena, jnp.asarray(ptr0), jnp.asarray(scratch0),
-            max_iters=max_iters,
+        if backend == "kernel":
+            return self._execute_kernel(it, ptr0, scratch0, max_iters=max_iters)
+
+        ptr0 = jnp.asarray(ptr0)
+        key = (it, int(ptr0.shape[0]), int(max_iters))
+        fn = self._local_jit.get(key)
+        if fn is None:
+            fn = jax.jit(
+                lambda arena, p, s: execute_batched(it, arena, p, s, max_iters=max_iters)
+            )
+            self._local_jit[key] = fn
+        ptr, scratch, status, iters = fn(
+            self.arena, ptr0, jnp.asarray(scratch0)
         )
         return ExecResult(
             np.asarray(ptr), np.asarray(scratch), np.asarray(status),
             np.asarray(iters),
+        )
+
+    def _execute_kernel(
+        self, it: PulseIterator, ptr0, scratch0, *, max_iters: int
+    ) -> ExecResult:
+        """Single-node path on the pulse_chase kernel (variable-depth waves).
+
+        Translation/protection faults (NULL or out-of-range pointers,
+        perm-revoked ranges) are enforced by a host-side ``fault_fn`` between
+        depth quanta, so detection is quantum-granular rather than
+        per-iteration like the XLA executor -- a faulting lane may execute a
+        few extra clamped (harmless) loads first.  Lanes still active after
+        ``max_iters`` report MAXED (resumable).  Iteration counts are
+        chunk-granular upper bounds, not exact.  Runs the compiled kernel on
+        TPU and the Pallas interpreter elsewhere.
+        """
+        from repro.core.arena import PERM_READ
+        from repro.kernels.pulse_chase import ops as chase_ops
+
+        ptr0 = np.asarray(ptr0, np.int32)
+        B = ptr0.shape[0]
+        scratch0 = np.asarray(scratch0, np.int32).reshape(B, it.scratch_words)
+        logic = self._logic_cache.get(it)
+        if logic is None:
+            logic = self._logic_cache[it] = chase_ops.iterator_logic(it)
+        max_steps = int(min(max_iters, 1 << 20))
+
+        bounds = np.asarray(self.arena.bounds)
+        perms = np.asarray(self.arena.perms)
+        cap = self.arena.capacity
+
+        def fault_fn(p):
+            shard = np.searchsorted(bounds, p, side="right") - 1
+            ok = perms[np.clip(shard, 0, perms.shape[0] - 1)] & PERM_READ
+            return (p < 0) | (p >= cap) | (ok != PERM_READ)
+
+        ptr, scratch, st, wstats = chase_ops.pulse_chase_waves(
+            self.arena.data, ptr0, scratch0, np.zeros(B, np.int32),
+            logic_fn=logic, max_steps=max_steps, fault_fn=fault_fn,
+            interpret=jax.default_backend() != "tpu",
+        )
+        status = np.where(st == 1, STATUS_DONE, STATUS_MAXED).astype(np.int32)
+        status = np.where(wstats.faulted, STATUS_FAULT, status)
+        return ExecResult(
+            ptr, scratch, status, wstats.retire_step.astype(np.int32), wstats
         )

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import translation
 from repro.core.arena import NULL, PERM_READ, Arena
 from repro.core.iterator import (
@@ -65,7 +66,18 @@ def empty_records(n: int, scratch_words: int) -> jnp.ndarray:
 class RoutingStats:
     supersteps: int
     crossings: np.ndarray  # (B,) network crossings per request (Fig. 2c/9)
-    routed_per_step: list  # records exchanged per superstep
+    routed_per_step: list  # valid records exchanged per superstep
+    active_per_step: list = dataclasses.field(default_factory=list)
+    wire_words_per_step: list = dataclasses.field(default_factory=list)
+    # int32 words shipped across off-shard links per superstep (the BSP
+    # all_to_all payload: num_shards * (num_shards-1) * link_capacity * R;
+    # 0 for compacted local-only supersteps that skip the fabric entirely)
+    capacity_per_step: list = dataclasses.field(default_factory=list)
+    local_only_steps: int = 0  # supersteps that skipped the all_to_all
+
+    @property
+    def total_wire_words(self) -> int:
+        return int(sum(self.wire_words_per_step))
 
 
 def _local_superstep(
@@ -122,10 +134,24 @@ def _route(
     axis_name: str,
     *,
     return_to_cpu: bool,
+    link_capacity: int | None = None,
+    drain_done: bool = False,
 ):
-    """Switch routing: deliver records to their next shard via all_to_all."""
+    """Switch routing: deliver records to their next shard via all_to_all.
+
+    ``link_capacity`` is the per-destination link budget C (records per
+    superstep); the default is the worst-case L // num_shards.  Compacted
+    execution passes a shrunken C once most of the batch has finished, so the
+    BSP payload tracks the live set instead of the original batch.
+
+    ``drain_done`` is the active-set compaction: finished (DONE/FAULT/MAXED)
+    records retire *in place* instead of being routed to their home shard --
+    the final gather collects them from wherever they stopped, so shipping
+    them home only burned link capacity (exactly the waste the paper's switch
+    design avoids by keeping only live traversals in the fabric).
+    """
     L, R = pool.shape
-    C = L // num_shards  # per-destination link capacity
+    C = L // num_shards if link_capacity is None else int(link_capacity)
     status = pool[:, F_STATUS]
     valid = status != STATUS_EMPTY
     active = status == STATUS_ACTIVE
@@ -147,6 +173,8 @@ def _route(
         # once home, re-issue toward the owner
         at_home = active & (pool[:, F_HOME] == my_shard) & (owner != my_shard)
         dest = jnp.where(at_home, owner, dest)
+    elif drain_done:
+        dest = jnp.where(active, owner, my_shard)
     else:
         dest = jnp.where(active, owner, pool[:, F_HOME])
     dest = jnp.where(valid, dest, my_shard).astype(jnp.int32)
@@ -191,6 +219,13 @@ def _route(
     return merged, n_routed, n_dropped_valid
 
 
+def _remote_active(pool, bounds, my_shard):
+    """Active records this shard cannot serve (owner elsewhere / invalid)."""
+    active = pool[:, F_STATUS] == STATUS_ACTIVE
+    owner = translation.owner_of(bounds, pool[:, F_PTR])
+    return (active & (owner != my_shard)).sum()
+
+
 def make_superstep(
     it: PulseIterator,
     num_shards: int,
@@ -199,8 +234,21 @@ def make_superstep(
     k_local: int,
     max_iters: int,
     return_to_cpu: bool = False,
+    link_capacity: int | None = None,
+    drain_done: bool = False,
+    do_route: bool = True,
 ):
-    """Builds the jittable per-shard superstep: local run -> switch route."""
+    """Builds the jittable per-shard superstep: local run -> switch route.
+
+    ``do_route=False`` builds the compacted *local-only* superstep: when every
+    surviving traversal is already at its owning shard, the fabric has nothing
+    to carry, so the all_to_all is skipped entirely (wire payload 0).  The
+    step still reports how many actives turned remote so the driver knows
+    when to re-enter the routed variant.
+
+    Returns ``(pool, n_active, n_routed, n_drop, n_remote)`` -- all counters
+    globally psum'd.
+    """
 
     def superstep(pool, arena_rows, bounds, perms):
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
@@ -208,17 +256,33 @@ def make_superstep(
             it, pool, arena_rows, bounds, perms, my_shard,
             k_local=k_local, max_iters=max_iters,
         )
-        pool, n_routed, n_drop = _route(
-            pool, bounds, my_shard, num_shards, axis_name,
-            return_to_cpu=return_to_cpu,
-        )
+        if do_route:
+            pool, n_routed, n_drop = _route(
+                pool, bounds, my_shard, num_shards, axis_name,
+                return_to_cpu=return_to_cpu,
+                link_capacity=link_capacity,
+                drain_done=drain_done,
+            )
+        else:
+            n_routed = jnp.int32(0)
+            n_drop = jnp.int32(0)
         n_active = (pool[:, F_STATUS] == STATUS_ACTIVE).sum()
+        n_remote = _remote_active(pool, bounds, my_shard)
         n_active = jax.lax.psum(n_active, axis_name)
         n_routed = jax.lax.psum(n_routed, axis_name)
         n_drop = jax.lax.psum(n_drop, axis_name)
-        return pool, n_active, n_routed, n_drop
+        n_remote = jax.lax.psum(n_remote, axis_name)
+        return pool, n_active, n_routed, n_drop, n_remote
 
     return superstep
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+# compiled supersteps, shared across distributed_execute calls (see get_step)
+_STEP_CACHE: dict = {}
 
 
 def distributed_execute(
@@ -231,10 +295,31 @@ def distributed_execute(
     axis_name: str = "mem",
     max_iters: int = 1 << 30,
     k_local: int = 4,
-    max_supersteps: int = 4096,
+    max_supersteps: int = 1 << 16,
     return_to_cpu: bool = False,
+    compact: bool = False,
+    min_link_capacity: int = 8,
 ):
     """Run a batch of traversals over a range-partitioned arena on a mesh.
+
+    ``compact=True`` enables active-set compaction of the supersteps:
+
+      * finished records retire in place instead of being shipped home
+        (``drain_done``), so only live traversals occupy link capacity;
+      * the per-destination link capacity C adapts each superstep to a
+        power-of-two envelope of the surviving active count, shrinking the
+        all_to_all payload as the batch drains (a smaller C only parks
+        overflow locally for one superstep -- correctness is unaffected);
+      * supersteps where every active record already sits at its owning
+        shard skip the all_to_all entirely (local-only fast path).
+
+    Results are bit-identical to the uncompacted schedule (ptr/scratch/
+    status/iters are scheduling-independent); only ``crossings`` differs,
+    since finished records no longer hop home.  With ``return_to_cpu`` the
+    home bounce IS the semantics being ablated (Fig. 9's crossings count),
+    and both drain-in-place and the local-only/adaptive-capacity schedule
+    would strand or delay exactly the hops that ablation measures -- so
+    ``compact`` is ignored on that path.
 
     Returns (records (B, R) ordered by request id, RoutingStats).
     """
@@ -281,30 +366,79 @@ def distributed_execute(
     bounds = jax.device_put(arena.bounds, NamedSharding(mesh, P()))
     perms = jax.device_put(arena.perms, NamedSharding(mesh, P()))
 
-    superstep = make_superstep(
-        it, num_shards, axis_name,
-        k_local=k_local, max_iters=max_iters, return_to_cpu=return_to_cpu,
-    )
-    step = jax.jit(
-        jax.shard_map(
-            superstep,
-            mesh=mesh,
-            in_specs=(P(axis_name), P(axis_name), P(), P()),
-            out_specs=(P(axis_name), P(), P(), P()),
+    base_capacity = L // num_shards
+    compact = compact and not return_to_cpu
+    drain_done = compact
+    R = record_width(S)
+
+    def get_step(capacity: int | None, do_route: bool):
+        # cached across calls: the serving loop re-enters distributed_execute
+        # every scheduling round with identical parameters, and a per-call
+        # cache would recompile the shard_map superstep each round
+        key = (
+            it, mesh, axis_name, num_shards, k_local, max_iters,
+            return_to_cpu, drain_done, capacity, do_route,
         )
-    )
+        if key not in _STEP_CACHE:
+            superstep = make_superstep(
+                it, num_shards, axis_name,
+                k_local=k_local, max_iters=max_iters,
+                return_to_cpu=return_to_cpu,
+                link_capacity=capacity, drain_done=drain_done,
+                do_route=do_route,
+            )
+            _STEP_CACHE[key] = jax.jit(
+                shard_map(
+                    superstep,
+                    mesh=mesh,
+                    in_specs=(P(axis_name), P(axis_name), P(), P()),
+                    out_specs=(P(axis_name), P(), P(), P(), P()),
+                )
+            )
+        return _STEP_CACHE[key]
 
     routed_per_step = []
+    active_per_step = []
+    wire_words_per_step = []
+    capacity_per_step = []
+    local_only_steps = 0
     steps = 0
+    # before the first superstep everything is active and sitting at home
+    n_active, n_remote = B, B
     for _ in range(max_supersteps):
-        pool_global, n_active, n_routed, n_drop = step(
-            pool_global, arena_data, bounds, perms
-        )
+        if compact:
+            # power-of-two envelope of the per-link demand; the ladder keeps
+            # the number of distinct compiled supersteps at O(log L)
+            demand = (int(n_active) + num_shards - 1) // num_shards
+            capacity = min(
+                base_capacity, max(min_link_capacity, _pow2_at_least(demand))
+            )
+            do_route = int(n_remote) > 0
+        else:
+            capacity, do_route = base_capacity, True
+        # link_capacity is dead in the local-only step: collapse those cache
+        # keys to one so the capacity ladder doesn't compile duplicate steps
+        step_capacity = capacity if (compact and do_route) else None
+        pool_global, n_active, n_routed, n_drop, n_remote = get_step(
+            step_capacity, do_route
+        )(pool_global, arena_data, bounds, perms)
         steps += 1
         routed_per_step.append(int(n_routed))
+        active_per_step.append(int(n_active))
+        capacity_per_step.append(capacity if do_route else 0)
+        wire_words_per_step.append(
+            num_shards * (num_shards - 1) * capacity * R if do_route else 0
+        )
+        local_only_steps += int(not do_route)
         assert int(n_drop) == 0, "request records lost in routing (pool overflow)"
         if int(n_active) == 0:
             break
+    else:
+        raise RuntimeError(
+            f"distributed_execute: {int(n_active)} records still ACTIVE after "
+            f"max_supersteps={max_supersteps}; raise the cap or lower max_iters "
+            f"(records would be returned with partial state otherwise)"
+        )
 
     # gather and order results by id
     all_rec = np.asarray(pool_global).reshape(-1, record_width(S))
@@ -317,5 +451,9 @@ def distributed_execute(
         supersteps=steps,
         crossings=all_rec[:, F_HOPS].copy(),
         routed_per_step=routed_per_step,
+        active_per_step=active_per_step,
+        wire_words_per_step=wire_words_per_step,
+        capacity_per_step=capacity_per_step,
+        local_only_steps=local_only_steps,
     )
     return all_rec, stats

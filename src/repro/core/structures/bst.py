@@ -24,21 +24,14 @@ S_KEY, S_Y, S_YKEY, S_YVAL = 0, 1, 2, 3
 SCRATCH_WORDS = 4
 
 
-def build(
-    keys: np.ndarray,
-    values: np.ndarray,
-    num_shards: int = 1,
-    policy: str = "sequential",
-    capacity: int | None = None,
-):
-    """Builds a balanced BST (median split). Returns (arena, root_ptr, height)."""
+def build_into(b: ArenaBuilder, keys: np.ndarray, values: np.ndarray):
+    """Builds a balanced BST into a (possibly shared) heap; returns
+    (root_ptr, height)."""
     keys = np.asarray(keys, np.int32)
     values = np.asarray(values, np.int32)
     order = np.argsort(keys, kind="stable")
     keys, values = keys[order], values[order]
     n = len(keys)
-    cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
-    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
     ptrs = b.alloc(n)
     rec = np.zeros((n, NODE_WORDS), np.int32)
 
@@ -67,7 +60,22 @@ def build(
     root = place(0, n, 0)
     sys.setrecursionlimit(old)
     b.write(ptrs, rec)
-    return b.finish(), root, height[0]
+    return root, height[0]
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Builds a balanced BST (median split). Returns (arena, root_ptr, height)."""
+    n = len(keys)
+    cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    root, height = build_into(b, keys, values)
+    return b.finish(), root, height
 
 
 def find_iterator() -> PulseIterator:

@@ -25,30 +25,25 @@ INT_MIN = -(2**31)
 INT_MAX = 2**31 - 1
 
 
-def build(
-    keys: np.ndarray,
-    values: np.ndarray,
-    num_shards: int = 1,
-    policy: str = "sequential",
-    capacity: int | None = None,
-):
-    """Bulk-loads a B+tree from sorted keys. Returns (arena, root_ptr, height)."""
+def node_estimate(n: int) -> int:
+    """Upper bound on node count: leaves + internals (geometric series)."""
+    n_leaves = max(1, (n + FANOUT - 1) // FANOUT)
+    total, level = n_leaves, n_leaves
+    while level > 1:
+        level = (level + FANOUT) // (FANOUT + 1)
+        total += level
+    return total
+
+
+def build_into(b: ArenaBuilder, keys: np.ndarray, values: np.ndarray):
+    """Bulk-loads a B+tree into a (possibly shared) heap; returns
+    (root_ptr, height)."""
     keys = np.asarray(keys, np.int32)
     values = np.asarray(values, np.int32)
     order = np.argsort(keys, kind="stable")
     keys, values = keys[order], values[order]
     n = len(keys)
-    # Upper bound on node count: leaves + internals (geometric series).
     n_leaves = max(1, (n + FANOUT - 1) // FANOUT)
-    est = n_leaves
-    total, level = n_leaves, n_leaves
-    while level > 1:
-        level = (level + FANOUT) // (FANOUT + 1)
-        total += level
-    cap = capacity or max(
-        num_shards, ((total + num_shards - 1) // num_shards) * num_shards
-    )
-    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
 
     # --- leaves ---
     leaf_ptrs = b.alloc(n_leaves)
@@ -89,6 +84,23 @@ def build(
         b.write(ptrs, recs)
         child_ptrs, child_max = ptrs, new_max
     root = int(child_ptrs[0])
+    return root, height
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Bulk-loads a B+tree from sorted keys. Returns (arena, root_ptr, height)."""
+    total = node_estimate(len(keys))
+    cap = capacity or max(
+        num_shards, ((total + num_shards - 1) // num_shards) * num_shards
+    )
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    root, height = build_into(b, keys, values)
     return b.finish(), root, height
 
 

@@ -36,20 +36,14 @@ def _np_hash(keys: np.ndarray, n_buckets: int) -> np.ndarray:
     return (h % np.uint32(n_buckets)).astype(np.int32)
 
 
-def build(
-    keys: np.ndarray,
-    values: np.ndarray,
-    n_buckets: int,
-    num_shards: int = 1,
-    policy: str = "sequential",
-    capacity: int | None = None,
-):
-    """Returns (arena, bucket_heads (n_buckets,) int32 np array)."""
+def build_into(
+    b: ArenaBuilder, keys: np.ndarray, values: np.ndarray, n_buckets: int
+) -> np.ndarray:
+    """Builds the bucket chains into a (possibly shared) heap; returns the
+    bucket-head pointer array (n_buckets,) int32."""
     keys = np.asarray(keys, np.int32)
     values = np.asarray(values, np.int32)
     n = len(keys)
-    cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
-    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
     ptrs = b.alloc(n)
     heads = np.full(n_buckets, NULL, np.int32)
     rec = np.zeros((n, NODE_WORDS), np.int32)
@@ -61,6 +55,22 @@ def build(
         rec[i, NEXT] = heads[buckets[i]]
         heads[buckets[i]] = ptrs[i]
     b.write(ptrs, rec)
+    return heads
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    n_buckets: int,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Returns (arena, bucket_heads (n_buckets,) int32 np array)."""
+    n = len(keys)
+    cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    heads = build_into(b, keys, values, n_buckets)
     return b.finish(), heads
 
 

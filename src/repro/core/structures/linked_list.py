@@ -19,6 +19,23 @@ SCRATCH_WORDS = 3
 KEY_NOT_FOUND = -(2**31) + 1
 
 
+def build_into(b: ArenaBuilder, keys: np.ndarray, values: np.ndarray) -> int:
+    """Builds a singly linked list into a (possibly shared) heap; returns the
+    head pointer.  Several structures can live in one pooled arena -- exactly
+    the paper's memory nodes, which host many applications' structures."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    n = len(keys)
+    ptrs = b.alloc(n)
+    rec = np.zeros((n, NODE_WORDS), np.int32)
+    rec[:, KEY] = keys
+    rec[:, VALUE] = values
+    rec[:-1, NEXT] = ptrs[1:]
+    rec[-1, NEXT] = NULL
+    b.write(ptrs, rec)
+    return int(ptrs[0])
+
+
 def build(
     keys: np.ndarray,
     values: np.ndarray,
@@ -27,19 +44,11 @@ def build(
     capacity: int | None = None,
 ):
     """Builds a singly linked list in list order; returns (arena, head_ptr)."""
-    keys = np.asarray(keys, np.int32)
-    values = np.asarray(values, np.int32)
     n = len(keys)
     cap = capacity or max(num_shards, ((n + num_shards - 1) // num_shards) * num_shards)
     b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
-    ptrs = b.alloc(n)
-    rec = np.zeros((n, NODE_WORDS), np.int32)
-    rec[:, KEY] = keys
-    rec[:, VALUE] = values
-    rec[:-1, NEXT] = ptrs[1:]
-    rec[-1, NEXT] = NULL
-    b.write(ptrs, rec)
-    return b.finish(), int(ptrs[0])
+    head = build_into(b, keys, values)
+    return b.finish(), head
 
 
 def find_iterator() -> PulseIterator:

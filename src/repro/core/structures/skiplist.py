@@ -39,24 +39,14 @@ def _level_of(i: int) -> int:
     return lvl
 
 
-def build(
-    keys: np.ndarray,
-    values: np.ndarray,
-    num_shards: int = 1,
-    policy: str = "sequential",
-    capacity: int | None = None,
-):
-    """Builds from sorted keys; returns (arena, head_ptr)."""
+def build_into(b: ArenaBuilder, keys: np.ndarray, values: np.ndarray) -> int:
+    """Builds the skip list into a (possibly shared) heap; returns head_ptr."""
     keys = np.asarray(keys, np.int32)
     values = np.asarray(values, np.int32)
     order = np.argsort(keys, kind="stable")
     keys, values = keys[order], values[order]
     n = len(keys)
     total = n + 1  # + head
-    cap = capacity or max(
-        num_shards, ((total + num_shards - 1) // num_shards) * num_shards
-    )
-    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
     ptrs = b.alloc(total)  # ptrs[0] = head, ptrs[1+i] = i-th key
     levels = np.array([LEVELS - 1] + [_level_of(i) for i in range(n)])
     rec = np.zeros((total, NODE_WORDS), np.int32)
@@ -74,7 +64,24 @@ def build(
             rec[a, NPTR0 + 2 * l] = ptrs[bnode]
             rec[a, NPTR0 + 2 * l + 1] = rec[bnode, KEY]
     b.write(ptrs, rec)
-    return b.finish(), int(ptrs[0])
+    return int(ptrs[0])
+
+
+def build(
+    keys: np.ndarray,
+    values: np.ndarray,
+    num_shards: int = 1,
+    policy: str = "sequential",
+    capacity: int | None = None,
+):
+    """Builds from sorted keys; returns (arena, head_ptr)."""
+    total = len(keys) + 1  # + head
+    cap = capacity or max(
+        num_shards, ((total + num_shards - 1) // num_shards) * num_shards
+    )
+    b = ArenaBuilder(cap, NODE_WORDS, num_shards=num_shards, policy=policy)
+    head = build_into(b, keys, values)
+    return b.finish(), head
 
 
 def find_iterator() -> PulseIterator:

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPU_ANY
+
 NBUF = 2  # double buffering: one wave in flight per buffer slot
 
 
@@ -110,18 +112,35 @@ def _chase_kernel(
 
     def step(k, _):
         # snapshot pointers for this traversal step: every wave's fetch uses
-        # the pointers produced by step k-1 (Property 1 per lane).
+        # the pointers produced by step k-1 (Property 1 per lane).  The
+        # status snapshot retires whole waves: a wave whose lanes have all
+        # finished issues no DMAs and runs no logic this step (the in-kernel
+        # half of the variable-depth wave scheduler; ops.pulse_chase_waves
+        # compacts retired lanes out *between* kernel invocations).
         step_ptr = out_ptr_ref[...]
-        issue_wave(0, step_ptr)
+        step_st = out_status_ref[...]
+
+        def wave_live(g):
+            st = jax.lax.dynamic_slice_in_dim(step_st, g * G, G)
+            return jnp.any(st == 0)
+
+        @pl.when(wave_live(0))
+        def _():
+            issue_wave(0, step_ptr)
 
         def pipelined(g, _):
-            # overlap: start wave g+1's fetch, then execute logic on wave g
-            @pl.when(g + 1 < num_waves)
+            # overlap: start wave g+1's fetch, then execute logic on wave g.
+            # issue/wait share the wave_live predicate (computed on the same
+            # snapshot), so DMA semaphores stay balanced.
+            @pl.when(jnp.logical_and(g + 1 < num_waves, wave_live(g + 1)))
             def _():
                 issue_wave(g + 1, step_ptr)
 
-            wait_wave(g)
-            logic_wave(g)
+            @pl.when(wave_live(g))
+            def _():
+                wait_wave(g)
+                logic_wave(g)
+
             return 0
 
         jax.lax.fori_loop(0, num_waves, pipelined, 0)
@@ -157,15 +176,15 @@ def pulse_chase_pallas(
         kernel,
         grid=(),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # handled below
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=TPU_ANY),  # handled below
+            pl.BlockSpec(memory_space=TPU_ANY),
+            pl.BlockSpec(memory_space=TPU_ANY),
+            pl.BlockSpec(memory_space=TPU_ANY),
         ],
         out_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=TPU_ANY),
+            pl.BlockSpec(memory_space=TPU_ANY),
+            pl.BlockSpec(memory_space=TPU_ANY),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B,), jnp.int32),

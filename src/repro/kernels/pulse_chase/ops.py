@@ -2,7 +2,10 @@
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -69,3 +72,143 @@ def pulse_chase(
         wave=wave,
         interpret=interpret,
     )
+
+
+# ------------------------- variable-depth scheduling -------------------------
+
+
+@dataclasses.dataclass
+class WaveStats:
+    """Accounting for the variable-depth wave scheduler.
+
+    ``lane_steps`` is the work actually executed (surviving+padding lanes x
+    steps, summed over chunks); ``dense_lane_steps`` is what the fixed-depth
+    scheduler would have executed (every lane runs every step).  The ratio is
+    the fraction of accelerator issue slots the early-retire scheduler saved.
+    """
+
+    chunks: int = 0
+    lane_steps: int = 0
+    dense_lane_steps: int = 0
+    steps_per_chunk: list = dataclasses.field(default_factory=list)
+    lanes_per_chunk: list = dataclasses.field(default_factory=list)
+    retire_step: np.ndarray | None = None  # (B,) chunk-granular upper bound
+    # on the step at which each lane retired (0 for NULL-entry lanes; the
+    # total step budget for lanes that never finished)
+    faulted: np.ndarray | None = None  # (B,) lanes retired by fault_fn
+    # (or by a NULL/negative pointer) rather than by finishing
+
+    @property
+    def savings(self) -> float:
+        if not self.dense_lane_steps:
+            return 0.0
+        return 1.0 - self.lane_steps / self.dense_lane_steps
+
+
+def _pad_ladder(n: int, wave: int) -> int:
+    """Smallest wave multiple >= n from the power-of-two ladder {wave, 2*wave,
+    4*wave, ...} -- bounds the number of distinct compiled batch shapes at
+    O(log B) while keeping padding overhead under 2x."""
+    m = wave
+    while m < n:
+        m *= 2
+    return m
+
+
+def pulse_chase_waves(
+    arena_data: jax.Array,
+    ptr: jax.Array,
+    scratch: jax.Array,
+    status: jax.Array,
+    *,
+    logic_fn,
+    max_steps: int,
+    depth_quantum: int = 8,
+    wave: int = 8,
+    interpret: bool = True,
+    use_pallas: bool = True,
+    fault_fn=None,
+):
+    """Variable-depth traversal: retire finished lanes between depth quanta.
+
+    The fixed-depth ``pulse_chase`` runs every lane for ``num_steps``
+    iterations even after it finishes -- fine when depths are uniform (B-tree
+    descent), wasteful for skewed workloads (hash chains, list walks) where a
+    few deep lanes pin the depth for everyone.  This scheduler runs the
+    kernel in chunks of ``depth_quantum`` steps, pulls lane status between
+    chunks, compacts retired lanes out of the batch (pow2 ladder padding so
+    recompiles stay bounded), and keeps only survivors in flight -- the m:n
+    multiplexer only ever holds live traversals, mirroring the routing
+    layer's active-set compaction.
+
+    Lanes entering with ``ptr == NULL`` retire immediately with their init
+    scratch (the executor's FAULT-on-NULL semantics, minus the status code --
+    the caller maps status if it needs to distinguish).
+
+    ``fault_fn`` is the translation/protection layer's hook: a host-side
+    ``(ptrs int32 array) -> bool mask`` applied to live lanes on entry and
+    between chunks; ``True`` lanes retire as faults (``stats.faulted``).
+    Fault detection is therefore quantum-granular -- a lane stepping into a
+    bad range mid-chunk executes up to ``depth_quantum - 1`` extra (clamped,
+    harmless) loads before it is retired.
+
+    Returns ``(ptr, scratch, status, stats)`` in the original lane order;
+    results are identical to running the fixed scheduler for ``max_steps``.
+    """
+    out_ptr = np.asarray(ptr, np.int32).copy()
+    out_scr = np.asarray(scratch, np.int32).copy()
+    out_st = np.asarray(status, np.int32).copy()
+    B = out_ptr.shape[0]
+    faulted = np.zeros(B, bool)
+    faulted[(out_st == 0) & (out_ptr < 0)] = True  # NULL entry: fault on arrival
+
+    stats = WaveStats(dense_lane_steps=B * max_steps)
+    stats.retire_step = np.zeros(B, np.int32)
+    stats.faulted = faulted
+
+    def _apply_faults(idx):
+        """Retire live lanes whose pointer fails the caller's check."""
+        if fault_fn is None or not idx.size:
+            return idx
+        bad = np.asarray(fault_fn(out_ptr[idx]), bool)
+        faulted[idx[bad]] = True
+        out_st[idx[bad]] = 1
+        return idx[~bad]
+
+    out_st[faulted] = 1
+    steps_done = 0
+    live = _apply_faults(np.flatnonzero(out_st == 0))
+    while live.size and steps_done < max_steps:
+        q = min(depth_quantum, max_steps - steps_done)
+        n = int(live.size)
+        padded = _pad_ladder(n, wave)
+        p_in = np.full(padded, -1, np.int32)
+        s_in = np.zeros((padded, out_scr.shape[1]), np.int32)
+        st_in = np.ones(padded, np.int32)  # padding lanes are born retired
+        p_in[:n] = out_ptr[live]
+        s_in[:n] = out_scr[live]
+        st_in[:n] = 0
+        p1, s1, st1 = pulse_chase(
+            arena_data,
+            jnp.asarray(p_in),
+            jnp.asarray(s_in),
+            jnp.asarray(st_in),
+            logic_fn=logic_fn,
+            num_steps=q,
+            wave=wave,
+            interpret=interpret,
+            use_pallas=use_pallas,
+        )
+        out_ptr[live] = np.asarray(p1)[:n]
+        out_scr[live] = np.asarray(s1)[:n]
+        out_st[live] = np.asarray(st1)[:n]
+        steps_done += q
+        stats.chunks += 1
+        stats.lane_steps += padded * q
+        stats.steps_per_chunk.append(q)
+        stats.lanes_per_chunk.append(n)
+        stats.retire_step[live] = steps_done  # overwritten while lane survives
+        # lanes the kernel retired on a negative pointer are faults too
+        faulted[live[(np.asarray(st1)[:n] == 1) & (np.asarray(p1)[:n] < 0)]] = True
+        live = _apply_faults(live[np.asarray(st1)[:n] == 0])
+    return out_ptr, out_scr, out_st, stats

@@ -1,0 +1,127 @@
+"""Admission control for the traversal serving layer (PulseService).
+
+The CPU node in the paper (S4.1) is where requests are born: ``init()`` runs
+there, and the dispatch engine decides what gets offloaded.  At serving
+scale the CPU node needs an *admission* policy too -- which of the queued
+traversal requests get the accelerator's finite slot budget next.
+
+Policy implemented here:
+
+  * **per-tenant FIFO queues** -- arrival order is preserved within a
+    tenant, so a tenant's own requests never reorder;
+  * **deadline-aware (EDF) selection across tenants** -- the head request
+    with the earliest absolute deadline wins a free slot;
+  * **fairness credits** -- ties (including the common all-deadline-free
+    case) go to the tenant that has been served least, so a flooding tenant
+    cannot starve a trickle tenant;
+  * **per-structure capacity** -- a SIMD slot group executes one iterator
+    program, so admission respects the free-slot budget of each structure
+    group and skips past requests whose group is full (they keep their
+    queue position).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TraversalRequest:
+    """One pointer-traversal request (the wire-format record's CPU-side twin).
+
+    ``query`` is the structure-specific init argument (search key for
+    find-style iterators, head pointer for aggregations).  ``deadline_ms``
+    is relative to arrival; ``None`` means best-effort.
+    """
+
+    req_id: int
+    structure: str
+    query: int
+    tenant: str = "default"
+    deadline_ms: float | None = None
+    arrive_round: int = 0  # logical arrival time (service rounds)
+
+    # filled in by the service
+    arrival_s: float = -1.0
+    admit_s: float = -1.0
+    finish_s: float = -1.0
+    admit_round: int = -1
+    finish_round: int = -1
+    status: int = -1
+    iters: int = 0
+    result: np.ndarray | None = None  # final scratch pad
+
+    @property
+    def latency_ms(self) -> float:
+        if self.finish_s < 0 or self.arrival_s < 0:
+            return float("nan")
+        return (self.finish_s - self.arrival_s) * 1e3
+
+    @property
+    def deadline_met(self) -> bool | None:
+        if self.deadline_ms is None:
+            return None
+        return self.latency_ms <= self.deadline_ms
+
+
+class AdmissionController:
+    """Per-tenant queues + EDF-with-fairness slot assignment."""
+
+    def __init__(self):
+        self._queues: dict[str, deque[TraversalRequest]] = {}
+        self._served: dict[str, int] = {}
+        self._seq = 0  # global arrival tiebreak
+
+    def submit(self, req: TraversalRequest, now_s: float) -> None:
+        req.arrival_s = now_s
+        req._seq = self._seq  # type: ignore[attr-defined]
+        self._seq += 1
+        self._queues.setdefault(req.tenant, deque()).append(req)
+        self._served.setdefault(req.tenant, 0)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def __len__(self) -> int:
+        return self.pending()
+
+    def admit(self, free_slots: dict[str, int]) -> list[TraversalRequest]:
+        """Fill free slots from the queues; returns the admitted requests.
+
+        Selection loop: among every tenant's head request whose structure
+        group still has room, pick the earliest (deadline, served-credit,
+        arrival) triple.  A head whose group is full blocks its tenant for
+        this round (FIFO within tenant is preserved) -- the tenant's later
+        requests for non-full groups wait their turn.
+        """
+        free = {k: int(v) for k, v in free_slots.items() if v > 0}
+        admitted: list[TraversalRequest] = []
+        while free:
+            best_key = None
+            best_tenant = None
+            for tenant, q in self._queues.items():
+                if not q:
+                    continue
+                head = q[0]
+                if free.get(head.structure, 0) <= 0:
+                    continue
+                deadline = (
+                    float("inf")
+                    if head.deadline_ms is None
+                    else head.arrival_s + head.deadline_ms / 1e3
+                )
+                key = (deadline, self._served[tenant], head._seq)  # type: ignore[attr-defined]
+                if best_key is None or key < best_key:
+                    best_key, best_tenant = key, tenant
+            if best_tenant is None:
+                break
+            req = self._queues[best_tenant].popleft()
+            self._served[best_tenant] += 1
+            free[req.structure] -= 1
+            if free[req.structure] <= 0:
+                del free[req.structure]
+            admitted.append(req)
+        return admitted

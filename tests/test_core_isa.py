@@ -9,6 +9,8 @@ from repro.core.iterator import STATUS_DONE, STATUS_FAULT, execute_batched
 from repro.core.structures import bst, btree, hash_table, linked_list
 from repro.core.structures import isa_programs
 
+pytestmark = pytest.mark.slow  # VM-vs-oracle sweeps; full CI lane only
+
 RNG = np.random.default_rng(7)
 
 

@@ -81,6 +81,7 @@ def test_pulse_chase_hash_chain(
         (1, 4, 2, 128, 128, 64, False),  # bidirectional (encoder)
     ],
 )
+@pytest.mark.slow
 def test_flash_attention_matches_ref(B, H, Hk, Lq, Lk, D, causal, dtype):
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.flash_attention.ref import mha_reference
@@ -97,6 +98,7 @@ def test_flash_attention_matches_ref(B, H, Hk, Lq, Lk, D, causal, dtype):
     )
 
 
+@pytest.mark.slow
 def test_flash_attention_grad_matches_ref():
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.flash_attention.ref import mha_reference
@@ -121,6 +123,7 @@ def test_flash_attention_grad_matches_ref():
         (3, 4, 1, 64, 16, 3, 16),
     ],
 )
+@pytest.mark.slow
 def test_paged_attention_matches_ref(B, H, Hk, D, page, P, N, dtype):
     from repro.kernels.paged_attention.ops import paged_attention
     from repro.kernels.paged_attention.ref import paged_attention_reference
@@ -144,6 +147,7 @@ def test_paged_attention_matches_ref(B, H, Hk, D, page, P, N, dtype):
 
 @pytest.mark.parametrize("chunk", [32, 64])
 @pytest.mark.parametrize("Bt,L,H,dh,N", [(2, 256, 3, 32, 16), (1, 128, 2, 64, 64)])
+@pytest.mark.slow
 def test_ssd_kernel_matches_chunked_ref(Bt, L, H, dh, N, chunk):
     from repro.kernels.ssd_scan.ops import ssd_scan
     from repro.kernels.ssd_scan.ref import ssd_chunked_batched
@@ -159,6 +163,7 @@ def test_ssd_kernel_matches_chunked_ref(Bt, L, H, dh, N, chunk):
     np.testing.assert_allclose(np.asarray(Sr), np.asarray(Sk), atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_chunked_equals_sequential_recurrence():
     from repro.kernels.ssd_scan.ref import ssd_chunked, ssd_sequential
 

@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ARCH_IDS, get_reduced_config
 from repro.models.model_zoo import build_model, make_batch
 
+pytestmark = pytest.mark.slow  # ~80s of per-arch compiles; full CI lane only
+
 LM_ARCHS = [a for a in ARCH_IDS if a != "pulse_paper"]
 
 

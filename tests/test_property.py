@@ -2,7 +2,14 @@
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -r requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow  # jit-heavy sweeps; full CI lane only
 
 from repro.core import arena as arena_mod
 from repro.core import translation

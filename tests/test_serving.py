@@ -11,6 +11,8 @@ from repro.models.model_zoo import build_model
 from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.kv_cache import PagedKVCache
 
+pytestmark = pytest.mark.slow  # model-zoo decode loops; full CI lane only
+
 RNG = np.random.default_rng(0)
 
 

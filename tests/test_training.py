@@ -18,6 +18,8 @@ from repro.training.train_loop import (
     make_train_step,
 )
 
+pytestmark = pytest.mark.slow  # optimizer/convergence loops; full CI lane only
+
 
 def tiny_setup(arch="qwen3_0_6b", **tcfg_kw):
     cfg = get_reduced_config(arch)
