@@ -15,6 +15,7 @@ Two experiments:
      throughput, utilization, and per-tenant counts.
 
 Run:  PYTHONPATH=src python benchmarks/service_bench.py
+      PYTHONPATH=src python benchmarks/service_bench.py --small --json BENCH_service.json
 """
 
 from __future__ import annotations
@@ -24,6 +25,8 @@ import os
 # must be set before jax initializes: experiment 1 needs a multi-device host
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -181,6 +184,9 @@ def bench_service(n_requests=600, slots=64, quantum=16):
     if m.deadlines_met + m.deadlines_missed:
         print(f"    deadline hit rate: {m.deadline_hit_rate:.0%}")
     assert m.completed == n_requests
+    # NOTE: no wire_words here -- this experiment serves through a single-node
+    # engine (no mesh), so the distributed wire accounting is structurally 0;
+    # the JSON's wire trajectory comes from the compacted-routing experiment.
     return {
         "completed": m.completed,
         "p50_ms": m.p50_ms,
@@ -190,12 +196,43 @@ def bench_service(n_requests=600, slots=64, quantum=16):
     }
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const="BENCH_service.json",
+        default=None,
+        metavar="PATH",
+        help="write machine-readable results (default path: BENCH_service.json)",
+    )
+    ap.add_argument(
+        "--small",
+        action="store_true",
+        help="CI smoke sizes (faster, same assertions)",
+    )
+    args = ap.parse_args(argv)
+
     print("[1/2] compacted supersteps vs bulk-synchronous baseline")
-    r1 = bench_compacted_routing()
+    r1 = bench_compacted_routing(
+        **({"n": 512, "B": 128} if args.small else {})
+    )
     print("[2/2] PulseService: mixed 4-structure workload")
-    r2 = bench_service()
-    print("\nsummary:", {**r1, **r2})
+    r2 = bench_service(
+        **({"n_requests": 150, "slots": 32} if args.small else {})
+    )
+    summary = {**r1, **r2}
+    print("\nsummary:", summary)
+    if args.json:
+        payload = {
+            "benchmark": "service_bench",
+            "config": {"shards": P, "small": bool(args.small)},
+            "compacted_routing": r1,
+            "service": r2,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

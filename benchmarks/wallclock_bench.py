@@ -1,0 +1,212 @@
+"""Wall-clock benchmark: fused device-resident routing vs per-hop dispatch.
+
+PR 1's active-set compaction cut *wire words*; the paper's headline claim
+(Fig. 7-9) is wall-clock latency/throughput.  This harness measures exactly
+that on an 8-shard mesh: the same compacted superstep schedule executed
+
+  * **dispatched** -- one jitted superstep program per hop, the local-vs-
+    fabric decision and the capacity ladder re-decided on the host between
+    hops (PR 1 behavior), vs
+  * **fused**      -- the whole traversal as a single device-resident
+    ``lax.while_loop`` program (``core.routing`` ``fused=True``): no host
+    round-trip per hop, conditional collectives, traced capacity ladder.
+
+Both paths are bit-identical to the single-node BSP oracle (asserted here on
+every config); only the wall clock differs.  Reports per-superstep and
+end-to-end latency for each config plus an end-to-end mixed-structure total.
+
+Run:  PYTHONPATH=src python benchmarks/wallclock_bench.py
+      PYTHONPATH=src python benchmarks/wallclock_bench.py --small --check \
+          --json BENCH_wallclock.json
+"""
+
+from __future__ import annotations
+
+import os
+
+# must be set before jax initializes: the mesh needs a multi-device host
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing
+from repro.core.iterator import execute_batched
+from repro.core.structures import btree, hash_table, linked_list, skiplist
+
+P = 8
+RNG = np.random.default_rng(42)
+N_BUCKETS = 64
+
+
+def _unique(n, lo, hi):
+    return RNG.choice(np.arange(lo, hi, dtype=np.int64), n, replace=False).astype(
+        np.int32
+    )
+
+
+def build_configs(small: bool):
+    """Each config: (iterator, arena, ptr0, scratch0, max_iters).
+
+    ``chain-skewed`` is the acceptance config: an interleaved linked list
+    where half the batch retires in a few hops and half walks deep -- the
+    schedule where per-hop host dispatch hurts most (hundreds of supersteps,
+    each shipping almost nothing by the end).
+    """
+    n = 256 if small else 640
+    B = 64 if small else 160
+    cfgs = {}
+
+    keys = np.arange(n, dtype=np.int32)
+    vals = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, head = linked_list.build(keys, vals, num_shards=P, policy="interleaved")
+    it = linked_list.find_iterator()
+    q = np.concatenate(
+        [RNG.integers(0, n // 16, B // 2), RNG.integers(n // 2, n, B // 2)]
+    ).astype(np.int32)
+    ptr0, scr0 = it.init(jnp.asarray(q), head)
+    cfgs["chain-skewed"] = (it, ar, ptr0, scr0, 1 << 16)
+
+    bkeys = _unique(n, 0, 10**6)
+    ar, root, _ = btree.build(bkeys, vals, num_shards=P, policy="interleaved")
+    it = btree.find_iterator()
+    q = np.concatenate([bkeys[: B // 2], _unique(B // 2, 10**6, 2 * 10**6)])
+    ptr0, scr0 = it.init(jnp.asarray(q), root)
+    cfgs["btree-lookup"] = (it, ar, ptr0, scr0, 64)
+
+    hkeys = _unique(n, 0, 10**6)
+    ar, heads = hash_table.build(hkeys, vals, N_BUCKETS, num_shards=P, policy="interleaved")
+    it = hash_table.find_iterator(N_BUCKETS)
+    q = np.concatenate([hkeys[: B // 2], _unique(B // 2, 10**6, 2 * 10**6)])
+    ptr0, scr0 = it.init(jnp.asarray(q), jnp.asarray(heads))
+    cfgs["hash-probe"] = (it, ar, ptr0, scr0, 1 << 12)
+
+    skeys = np.sort(_unique(n, 0, 10**6))
+    ar, shead = skiplist.build(skeys, vals, num_shards=P, policy="interleaved")
+    it = skiplist.find_iterator()
+    q = np.concatenate([skeys[: B // 2], _unique(B // 2, 10**6, 2 * 10**6)])
+    ptr0, scr0 = it.init(jnp.asarray(q), shead)
+    cfgs["skiplist-search"] = (it, ar, ptr0, scr0, 1 << 12)
+
+    return cfgs
+
+
+def bench_config(name, it, ar, ptr0, scr0, mesh, *, max_iters, repeats):
+    o_ptr, o_scr, o_status, o_iters = execute_batched(
+        it, ar, ptr0, scr0, max_iters=max_iters
+    )
+    B = int(np.asarray(ptr0).shape[0])
+    out = {"batch": B}
+    for mode, fused in (("dispatched", False), ("fused", True)):
+        kw = dict(
+            mesh=mesh, axis_name="mem", max_iters=max_iters, k_local=4,
+            compact=True, fused=fused,
+        )
+        rec, st = routing.distributed_execute(it, ar, ptr0, scr0, **kw)  # warmup
+        np.testing.assert_array_equal(rec[:, routing.F_SCRATCH:], np.asarray(o_scr))
+        np.testing.assert_array_equal(rec[:, routing.F_STATUS], np.asarray(o_status))
+        np.testing.assert_array_equal(rec[:, routing.F_ITERS], np.asarray(o_iters))
+        walls = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            rec, st = routing.distributed_execute(it, ar, ptr0, scr0, **kw)
+            walls.append(time.perf_counter() - t0)
+        p50 = float(np.percentile(walls, 50))
+        out[mode] = {
+            "wall_s_p50": p50,
+            "wall_s_p99": float(np.percentile(walls, 99)),
+            "per_superstep_ms": p50 / st.supersteps * 1e3,
+            "supersteps": st.supersteps,
+            "local_only_steps": st.local_only_steps,
+            "wire_words": st.total_wire_words,
+            "throughput_rps": B / p50,
+        }
+    out["speedup"] = out["dispatched"]["wall_s_p50"] / out["fused"]["wall_s_p50"]
+    d, f = out["dispatched"], out["fused"]
+    print(
+        f"  {name:16s} steps={f['supersteps']:4d} "
+        f"dispatched={d['wall_s_p50']*1e3:8.1f}ms ({d['per_superstep_ms']*1e3:6.0f}us/step) "
+        f"fused={f['wall_s_p50']*1e3:8.1f}ms ({f['per_superstep_ms']*1e3:6.0f}us/step) "
+        f"speedup={out['speedup']:.2f}x"
+    )
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const="BENCH_wallclock.json",
+        default=None,
+        metavar="PATH",
+        help="write machine-readable results (default path: BENCH_wallclock.json)",
+    )
+    ap.add_argument("--small", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="fail unless fused beats per-hop dispatch (>=1.3x on chain-skewed, "
+        ">=1x end-to-end) -- the CI perf gate",
+    )
+    args = ap.parse_args(argv)
+
+    mesh = jax.make_mesh((P,), ("mem",))
+    assert jax.device_count() >= P, jax.devices()
+    cfgs = build_configs(args.small)
+    print(f"fused vs per-hop dispatch, {P} shards, repeats={args.repeats}")
+    results = {}
+    for name, (it, ar, ptr0, scr0, max_iters) in cfgs.items():
+        results[name] = bench_config(
+            name, it, ar, ptr0, scr0, mesh, max_iters=max_iters, repeats=args.repeats
+        )
+
+    e2e = {
+        mode: sum(r[mode]["wall_s_p50"] for r in results.values())
+        for mode in ("dispatched", "fused")
+    }
+    e2e["speedup"] = e2e["dispatched"] / e2e["fused"]
+    print(
+        f"  end-to-end mixed: dispatched={e2e['dispatched']*1e3:.1f}ms "
+        f"fused={e2e['fused']*1e3:.1f}ms speedup={e2e['speedup']:.2f}x"
+    )
+
+    if args.json:
+        payload = {
+            "benchmark": "wallclock_bench",
+            "config": {
+                "shards": P,
+                "small": bool(args.small),
+                "repeats": args.repeats,
+            },
+            "results": results,
+            "end_to_end": e2e,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    if args.check:
+        chain = results["chain-skewed"]["speedup"]
+        assert chain >= 1.3, (
+            f"fused routing must beat per-hop dispatch by >=1.3x on the "
+            f"skewed-depth chain, got {chain:.2f}x"
+        )
+        assert e2e["speedup"] >= 1.0, (
+            f"fused routing slower than per-hop dispatch end-to-end: "
+            f"{e2e['speedup']:.2f}x"
+        )
+        print(
+            f"  perf gate ok: chain-skewed {chain:.2f}x (>=1.3), "
+            f"end-to-end {e2e['speedup']:.2f}x (>=1.0)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,28 @@ try:  # jax >= 0.5-era spelling
 except (ImportError, AttributeError):  # 0.4.x: experimental namespace
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the per-output replication check disabled.
+
+    The fused routing loop puts a ``lax.while_loop`` inside ``shard_map``,
+    which shard_map's replication checker cannot analyze; the flag that turns
+    the check off was renamed across releases (``check_rep`` -> ``check_vma``),
+    so callers go through this shim.
+    """
+    try:
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+    except TypeError:
+        pass
+    try:
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
 from jax.experimental.pallas import tpu as _pltpu
 
 if hasattr(_pltpu, "MemorySpace"):  # modern spelling

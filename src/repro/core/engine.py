@@ -163,6 +163,7 @@ class PulseEngine:
         k_local: int = 4,
         cache_nodes: int = 0,
         compact: bool = True,
+        fused: bool = True,
         backend: str = "xla",
     ) -> ExecResult:
         """Dispatch + execute a batch of traversals.
@@ -172,7 +173,10 @@ class PulseEngine:
         kernel under the variable-depth wave scheduler (compiled on TPU, the
         Pallas interpreter elsewhere), retiring finished lanes between depth
         quanta.  ``compact`` enables active-set compaction of distributed
-        supersteps (ignored for the ``return_to_cpu`` ablation).
+        supersteps (ignored for the ``return_to_cpu`` ablation); ``fused``
+        runs the whole distributed traversal as one device-resident
+        while_loop program (bit-identical results, no per-hop host dispatch)
+        through the shared compiled-executable cache in ``core.routing``.
         """
         decision = self.dispatch(it)
         offload = decision.offload if force_offload is None else force_offload
@@ -189,7 +193,7 @@ class PulseEngine:
                 it, self.arena, ptr0, scratch0,
                 mesh=self.mesh, axis_name=self.axis_name,
                 max_iters=max_iters, k_local=k_local,
-                return_to_cpu=return_to_cpu, compact=compact,
+                return_to_cpu=return_to_cpu, compact=compact, fused=fused,
             )
             return ExecResult(
                 ptr=rec[:, routing.F_PTR],
@@ -202,16 +206,19 @@ class PulseEngine:
         if backend == "kernel":
             return self._execute_kernel(it, ptr0, scratch0, max_iters=max_iters)
 
-        ptr0 = jnp.asarray(ptr0)
+        # jnp.array copies (unlike asarray), so donating the copies keeps the
+        # caller's buffers alive while letting the while_loop alias in place
+        ptr0 = jnp.array(ptr0, jnp.int32)
         key = (it, int(ptr0.shape[0]), int(max_iters))
         fn = self._local_jit.get(key)
         if fn is None:
             fn = jax.jit(
-                lambda arena, p, s: execute_batched(it, arena, p, s, max_iters=max_iters)
+                lambda arena, p, s: execute_batched(it, arena, p, s, max_iters=max_iters),
+                donate_argnums=(1, 2),
             )
             self._local_jit[key] = fn
         ptr, scratch, status, iters = fn(
-            self.arena, ptr0, jnp.asarray(scratch0)
+            self.arena, ptr0, jnp.array(scratch0, jnp.int32)
         )
         return ExecResult(
             np.asarray(ptr), np.asarray(scratch), np.asarray(status),

@@ -157,9 +157,10 @@ def execute_batched(
     status = jnp.full((B,), STATUS_ACTIVE, jnp.int32)
     iters = jnp.zeros((B,), jnp.int32)
 
-    perm_ok = translation.check_access(
-        arena.perms, translation.owner_of(arena.bounds, ptr), PERM_READ
-    )
+    # The per-shard grant table is loop-invariant: hoist it once instead of
+    # re-deriving the permission bitmask from ``arena.perms`` on every unroll
+    # step (only the owner lookup depends on the moving pointer).
+    readable = translation.access_table(arena.perms, PERM_READ)
 
     def cond(state):
         _, _, status, _ = state
@@ -168,8 +169,8 @@ def execute_batched(
     def body(state):
         ptr, scratch, status, iters = state
         for _ in range(unroll):
-            perm = translation.check_access(
-                arena.perms, translation.owner_of(arena.bounds, ptr), PERM_READ
+            perm = translation.check_access_table(
+                readable, translation.owner_of(arena.bounds, ptr)
             )
             ptr, scratch, status, iters = step_batch(
                 it,
@@ -183,7 +184,6 @@ def execute_batched(
             )
         return ptr, scratch, status, iters
 
-    del perm_ok
     ptr, scratch, status, iters = jax.lax.while_loop(
         cond, body, (ptr, scratch, status, iters)
     )

@@ -21,14 +21,14 @@ Record wire format (R = 6 + S int32 words):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import weakref
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import shard_map, shard_map_unchecked
 from repro.core import translation
 from repro.core.arena import NULL, PERM_READ, Arena
 from repro.core.iterator import (
@@ -74,10 +74,44 @@ class RoutingStats:
     # 0 for compacted local-only supersteps that skip the fabric entirely)
     capacity_per_step: list = dataclasses.field(default_factory=list)
     local_only_steps: int = 0  # supersteps that skipped the all_to_all
+    # Fused executions stay device-resident for the whole loop, so the
+    # per-step lists above are empty and only this aggregate (decoded from
+    # traced counters after the while_loop exits) is available.  NOTE: wire
+    # words are the *modeled* switch payload (the paper's BSP accounting at
+    # the scheduled capacity rung) on both paths; physically, the dispatched
+    # path compiles a buffer per rung while the fused path always exchanges
+    # the static base-capacity buffer (shapes cannot be traced) -- fused
+    # trades that physical shrinkage for zero per-hop host dispatch, and
+    # only its local-only lax.cond skips remove real transfers.
+    wire_words_total: int | None = None
+    fused: bool = False
 
     @property
     def total_wire_words(self) -> int:
+        if self.wire_words_total is not None:
+            return int(self.wire_words_total)
         return int(sum(self.wire_words_per_step))
+
+
+@dataclasses.dataclass
+class ExecutableCacheStats:
+    """Counters for the compiled-superstep caches (regression-tested: serving
+    quanta and repeated engine calls with same-shaped pools must not retrace).
+
+    ``traces`` counts actual Python traces of the step/loop bodies (bumped
+    from inside the traced function, so it only moves when XLA recompiles);
+    ``hits``/``misses`` count executable-cache lookups.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    traces: int = 0
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.traces = 0
+
+
+CACHE_STATS = ExecutableCacheStats()
 
 
 def _local_superstep(
@@ -134,7 +168,8 @@ def _route(
     axis_name: str,
     *,
     return_to_cpu: bool,
-    link_capacity: int | None = None,
+    link_capacity=None,
+    phys_capacity: int | None = None,
     drain_done: bool = False,
 ):
     """Switch routing: deliver records to their next shard via all_to_all.
@@ -142,7 +177,12 @@ def _route(
     ``link_capacity`` is the per-destination link budget C (records per
     superstep); the default is the worst-case L // num_shards.  Compacted
     execution passes a shrunken C once most of the batch has finished, so the
-    BSP payload tracks the live set instead of the original batch.
+    BSP payload tracks the live set instead of the original batch.  It may be
+    a *traced* scalar (the fused loop carries the capacity-ladder rung as
+    state); then ``phys_capacity`` fixes the static buffer shape and C only
+    gates which records fit -- the parking schedule is identical to a
+    host-dispatched superstep compiled at capacity C, so results (and even
+    pool layouts) match bit-for-bit.
 
     ``drain_done`` is the active-set compaction: finished (DONE/FAULT/MAXED)
     records retire *in place* instead of being routed to their home shard --
@@ -151,7 +191,10 @@ def _route(
     design avoids by keeping only live traversals in the fabric).
     """
     L, R = pool.shape
-    C = L // num_shards if link_capacity is None else int(link_capacity)
+    if phys_capacity is None:
+        phys_capacity = L // num_shards if link_capacity is None else int(link_capacity)
+    Cp = int(phys_capacity)  # static: buffer rows per destination link
+    C = Cp if link_capacity is None else link_capacity  # may be traced
     status = pool[:, F_STATUS]
     valid = status != STATUS_EMPTY
     active = status == STATUS_ACTIVE
@@ -180,10 +223,9 @@ def _route(
     dest = jnp.where(valid, dest, my_shard).astype(jnp.int32)
 
     moves = valid & (dest != my_shard)
-    pool = pool.at[:, F_HOPS].set(pool[:, F_HOPS] + moves.astype(jnp.int32))
 
-    # pack into (P, C+1, R): overflow beyond per-link capacity parks in the
-    # trash row (C) and stays local for the next superstep.
+    # pack into (P, Cp+1, R): overflow beyond per-link capacity parks in the
+    # trash row (Cp) and stays local for the next superstep.
     onehot = (dest[:, None] == jnp.arange(num_shards, dtype=jnp.int32)[None, :]) & (
         moves[:, None]
     )
@@ -192,13 +234,16 @@ def _route(
         :, 0
     ]
     fits = moves & (pos < C)
+    # a crossing is a record that actually leaves this shard: parked overflow
+    # (pos >= C) stays local and must not count toward Fig. 2c/9 crossings
+    pool = pool.at[:, F_HOPS].set(pool[:, F_HOPS] + fits.astype(jnp.int32))
     d_idx = jnp.where(fits, dest, 0)
-    p_idx = jnp.where(fits, pos, C)
+    p_idx = jnp.where(fits, pos, Cp)
     send = jnp.broadcast_to(
-        empty_records(1, R - F_SCRATCH)[0], (num_shards, C + 1, R)
+        empty_records(1, R - F_SCRATCH)[0], (num_shards, Cp + 1, R)
     ).astype(jnp.int32)
     send = send.at[d_idx, p_idx].set(jnp.where(fits[:, None], pool, send[d_idx, p_idx]))
-    send = send[:, :C]
+    send = send[:, :Cp]
 
     # what leaves this shard is removed from the local pool
     kept = pool.at[:, F_STATUS].set(
@@ -206,7 +251,7 @@ def _route(
     )
 
     arrivals = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    arrivals = arrivals.reshape(num_shards * C, R)
+    arrivals = arrivals.reshape(num_shards * Cp, R)
 
     # merge: valid records first, then empties; keep L slots (conservation:
     # total valid records across the mesh is constant == B <= sum of pools).
@@ -251,6 +296,7 @@ def make_superstep(
     """
 
     def superstep(pool, arena_rows, bounds, perms):
+        CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         pool = _local_superstep(
             it, pool, arena_rows, bounds, perms, my_shard,
@@ -281,8 +327,237 @@ def _pow2_at_least(n: int) -> int:
     return 1 << max(0, int(n - 1).bit_length())
 
 
-# compiled supersteps, shared across distributed_execute calls (see get_step)
+def _pow2_at_least_traced(n: jnp.ndarray) -> jnp.ndarray:
+    """Traced twin of ``_pow2_at_least``: exact integer bit-length (no float
+    log2, whose rounding at exact powers of two would desync the fused
+    capacity ladder from the host-dispatched one)."""
+    bl = jnp.sum(
+        (jnp.asarray(n, jnp.int32) - 1) >= (1 << jnp.arange(31, dtype=jnp.int32))
+    ).astype(jnp.int32)
+    return jnp.left_shift(jnp.int32(1), bl)
+
+
+# Compiled-executable caches, shared by every distributed_execute caller
+# (PulseEngine.execute, PulseService quanta, benchmarks): per-hop supersteps
+# keyed by (iterator, mesh, capacity rung, ...), fused whole-traversal loops
+# keyed by (iterator, mesh, pool shape, record width, ...).  CACHE_STATS
+# tracks hits/misses/traces for the retracing regression tests.
 _STEP_CACHE: dict = {}
+_FUSED_CACHE: dict = {}
+
+# Device-resident arenas: (id(arena), mesh, axis_name) -> sharded
+# (data, bounds, perms).  A PulseService quantum re-enters distributed_execute
+# every scheduling round with the same arena; placing the pool once and
+# reusing the resident buffers removes the per-quantum H2D re-upload.
+_RESIDENT: dict = {}
+
+
+def reset_executable_caches() -> None:
+    """Drop every cached executable / resident buffer (test isolation)."""
+    _STEP_CACHE.clear()
+    _FUSED_CACHE.clear()
+    _RESIDENT.clear()
+    CACHE_STATS.reset()
+
+
+def _resident_arena(arena: Arena, mesh: Mesh, axis_name: str):
+    key = (id(arena), mesh, axis_name)
+    ent = _RESIDENT.get(key)
+    if ent is None:
+        ent = (
+            jax.device_put(arena.data, NamedSharding(mesh, P(axis_name, None))),
+            jax.device_put(arena.bounds, NamedSharding(mesh, P())),
+            jax.device_put(arena.perms, NamedSharding(mesh, P())),
+        )
+        _RESIDENT[key] = ent
+        # evict when the arena dies so a recycled id() cannot alias stale data
+        weakref.finalize(arena, _RESIDENT.pop, key, None)
+    return ent
+
+
+def make_fused_loop(
+    it: PulseIterator,
+    num_shards: int,
+    axis_name: str,
+    *,
+    k_local: int,
+    max_iters: int,
+    max_supersteps: int,
+    base_capacity: int,
+    min_link_capacity: int,
+    return_to_cpu: bool,
+    compact: bool,
+):
+    """Builds the whole-traversal device-resident loop (one shard's view).
+
+    The entire superstep schedule -- local execution, the local-vs-fabric
+    decision, the power-of-two capacity ladder, and termination -- runs as a
+    single ``lax.while_loop``; the host only sees the final pool and a handful
+    of aggregate counters.  Scheduling decisions mirror ``distributed_execute``
+    's host loop exactly (same stale-by-one active/remote counts, same ladder
+    arithmetic), so the fused execution is bit-identical to the dispatched
+    one, down to pool layouts and crossing counts.
+
+    Returned state: ``(pool, n_active, steps, routed, dropped, cap_counts,
+    local_only)`` -- every counter globally psum'd/replicated.  ``cap_counts``
+    is a histogram of routed supersteps per capacity rung (the ladder has at
+    most 31 distinct values, precomputed in ``capacity_rungs``); the host
+    turns it into a wire-word total with Python integer arithmetic, so the
+    traced counters never multiply capacity into an int32 (which would wrap
+    at production batch sizes where the dispatched path's per-step Python
+    sums would not).
+    """
+    drain_done = compact
+    rungs = capacity_rungs(base_capacity, min_link_capacity) if compact else (
+        base_capacity,
+    )
+    rungs_arr = jnp.asarray(rungs, jnp.int32)
+
+    def fused(pool, arena_rows, bounds, perms):
+        CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
+        my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        n0 = jax.lax.psum(
+            (pool[:, F_STATUS] == STATUS_ACTIVE).sum().astype(jnp.int32), axis_name
+        )
+
+        def cond(carry):
+            _, n_active, steps, _, n_drop, _, _, _ = carry
+            return (n_active > 0) & (steps < max_supersteps) & (n_drop == 0)
+
+        def body(carry):
+            pool, n_active, steps, n_routed_tot, n_drop_tot, cap_counts, local_only, n_remote = carry
+            pool = _local_superstep(
+                it, pool, arena_rows, bounds, perms, my_shard,
+                k_local=k_local, max_iters=max_iters,
+            )
+            if compact:
+                # the host loop's ladder, verbatim, on stale-by-one counts
+                demand = (n_active + num_shards - 1) // num_shards
+                capacity = jnp.minimum(
+                    jnp.int32(base_capacity),
+                    jnp.maximum(
+                        jnp.int32(min_link_capacity), _pow2_at_least_traced(demand)
+                    ),
+                )
+                do_route = n_remote > 0
+            else:
+                capacity = jnp.int32(base_capacity)
+                do_route = jnp.bool_(True)
+
+            def routed(p):
+                return _route(
+                    p, bounds, my_shard, num_shards, axis_name,
+                    return_to_cpu=return_to_cpu,
+                    link_capacity=capacity, phys_capacity=base_capacity,
+                    drain_done=drain_done,
+                )
+
+            def local_only_step(p):
+                return p, jnp.int32(0), jnp.int32(0)
+
+            if compact:
+                # conditional collective: every shard takes the same branch
+                # (the predicate is a psum), so the fabric is skipped entirely
+                # on local-only supersteps
+                pool, n_routed, n_drop = jax.lax.cond(
+                    do_route, routed, local_only_step, pool
+                )
+            else:
+                pool, n_routed, n_drop = routed(pool)
+            n_active = jax.lax.psum(
+                (pool[:, F_STATUS] == STATUS_ACTIVE).sum().astype(jnp.int32),
+                axis_name,
+            )
+            n_remote = jax.lax.psum(
+                _remote_active(pool, bounds, my_shard).astype(jnp.int32), axis_name
+            )
+            n_routed = jax.lax.psum(n_routed.astype(jnp.int32), axis_name)
+            n_drop = jax.lax.psum(n_drop.astype(jnp.int32), axis_name)
+            cap_counts = cap_counts + jnp.where(
+                do_route, (rungs_arr == capacity).astype(jnp.int32), 0
+            )
+            local_only = local_only + jnp.where(do_route, 0, 1).astype(jnp.int32)
+            return (
+                pool, n_active, steps + 1, n_routed_tot + n_routed,
+                n_drop_tot + n_drop, cap_counts, local_only, n_remote,
+            )
+
+        # before the first superstep the host loop assumes everything is
+        # active and remote (n_active = n_remote = B); mirror that exactly
+        init = (
+            pool, n0, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.zeros(len(rungs), jnp.int32), jnp.int32(0), n0,
+        )
+        pool, n_active, steps, n_routed, n_drop, cap_counts, local_only, _ = (
+            jax.lax.while_loop(cond, body, init)
+        )
+        return pool, n_active, steps, n_routed, n_drop, cap_counts, local_only
+
+    return fused
+
+
+def capacity_rungs(base_capacity: int, min_link_capacity: int) -> tuple:
+    """The distinct values the compacted capacity ladder can take: powers of
+    two clamped to [min_link_capacity, base_capacity] -- at most 31 rungs."""
+    return tuple(
+        sorted({
+            min(base_capacity, max(min_link_capacity, 1 << i)) for i in range(31)
+        })
+    )
+
+
+def get_fused_runner(
+    it: PulseIterator,
+    mesh: Mesh,
+    axis_name: str,
+    *,
+    num_shards: int,
+    pool_rows: int,
+    scratch_words: int,
+    k_local: int,
+    max_iters: int,
+    max_supersteps: int,
+    base_capacity: int,
+    min_link_capacity: int,
+    return_to_cpu: bool,
+    compact: bool,
+):
+    """Cached, jitted, donated whole-traversal executable.
+
+    Key = (iterator, mesh, pool shape, record width, schedule knobs); the
+    capacity rung is *traced state* inside the loop, so the ladder costs one
+    executable instead of O(log L).  ``donate_argnums=(0,)`` hands the request
+    pool's buffer to XLA (it is rebuilt per call, and the while_loop aliases
+    it in place); the resident arena buffers are NOT donated -- they are the
+    cross-call state being kept device-resident.
+    """
+    key = (
+        it, mesh, axis_name, num_shards, pool_rows, scratch_words, k_local,
+        max_iters, max_supersteps, base_capacity, min_link_capacity,
+        return_to_cpu, compact,
+    )
+    fn = _FUSED_CACHE.get(key)
+    if fn is None:
+        CACHE_STATS.misses += 1
+        fused = make_fused_loop(
+            it, num_shards, axis_name,
+            k_local=k_local, max_iters=max_iters, max_supersteps=max_supersteps,
+            base_capacity=base_capacity, min_link_capacity=min_link_capacity,
+            return_to_cpu=return_to_cpu, compact=compact,
+        )
+        fn = jax.jit(
+            shard_map_unchecked(
+                fused,
+                mesh=mesh,
+                in_specs=(P(axis_name), P(axis_name), P(), P()),
+                out_specs=(P(axis_name), P(), P(), P(), P(), P(), P()),
+            ),
+            donate_argnums=(0,),
+        )
+        _FUSED_CACHE[key] = fn
+    else:
+        CACHE_STATS.hits += 1
+    return fn
 
 
 def distributed_execute(
@@ -299,8 +574,22 @@ def distributed_execute(
     return_to_cpu: bool = False,
     compact: bool = False,
     min_link_capacity: int = 8,
+    fused: bool = False,
 ):
     """Run a batch of traversals over a range-partitioned arena on a mesh.
+
+    ``fused=True`` runs the *entire* traversal as one device-resident
+    program: the superstep loop becomes a ``lax.while_loop`` inside a single
+    jitted ``shard_map`` executable (cached in ``_FUSED_CACHE``, pool buffer
+    donated), with the local-vs-fabric decision taken on-device by a
+    ``lax.cond`` around the all_to_all and the capacity ladder carried as
+    traced state.  No host round-trip per hop: the host sees only the final
+    pool plus aggregate counters, so ``RoutingStats`` carries totals instead
+    of per-step lists.  Results are bit-identical to the dispatched schedule.
+    Wire words stay the modeled ladder payload on both paths (see
+    RoutingStats): the fused all_to_all buffer is fixed at base capacity
+    (shapes cannot be traced), so the ladder's shrinkage is physical only
+    when dispatched, while the local-only fabric skip is physical on both.
 
     ``compact=True`` enables active-set compaction of the supersteps:
 
@@ -362,14 +651,51 @@ def distributed_execute(
 
     sharding = NamedSharding(mesh, P(axis_name))
     pool_global = jax.device_put(pool_global.reshape(num_shards * L, -1), sharding)
-    arena_data = jax.device_put(arena.data, NamedSharding(mesh, P(axis_name, None)))
-    bounds = jax.device_put(arena.bounds, NamedSharding(mesh, P()))
-    perms = jax.device_put(arena.perms, NamedSharding(mesh, P()))
+    arena_data, bounds, perms = _resident_arena(arena, mesh, axis_name)
 
     base_capacity = L // num_shards
     compact = compact and not return_to_cpu
     drain_done = compact
     R = record_width(S)
+
+    if fused:
+        runner = get_fused_runner(
+            it, mesh, axis_name,
+            num_shards=num_shards, pool_rows=num_shards * L, scratch_words=S,
+            k_local=k_local, max_iters=max_iters, max_supersteps=max_supersteps,
+            base_capacity=base_capacity, min_link_capacity=min_link_capacity,
+            return_to_cpu=return_to_cpu, compact=compact,
+        )
+        pool_global, n_active, steps, n_routed, n_drop, cap_counts, local_only = (
+            runner(pool_global, arena_data, bounds, perms)
+        )
+        if int(n_drop) != 0:  # not assert: must survive python -O
+            raise RuntimeError(
+                f"request records lost in routing (pool overflow): {int(n_drop)}"
+            )
+        if int(n_active) != 0:
+            raise RuntimeError(
+                f"distributed_execute: {int(n_active)} records still ACTIVE after "
+                f"max_supersteps={max_supersteps}; raise the cap or lower max_iters "
+                f"(records would be returned with partial state otherwise)"
+            )
+        # decode the per-rung superstep histogram into a wire total with
+        # Python integer arithmetic (exact at any batch size; a traced int32
+        # product would wrap for production-scale pools)
+        rungs = capacity_rungs(base_capacity, min_link_capacity) if compact else (
+            base_capacity,
+        )
+        wire_total = sum(
+            int(c) * num_shards * (num_shards - 1) * cap * R
+            for c, cap in zip(np.asarray(cap_counts), rungs)
+        )
+        return _decode_results(
+            pool_global, B, S,
+            supersteps=int(steps),
+            local_only_steps=int(local_only),
+            wire_words_total=wire_total,
+            fused=True,
+        )
 
     def get_step(capacity: int | None, do_route: bool):
         # cached across calls: the serving loop re-enters distributed_execute
@@ -380,6 +706,7 @@ def distributed_execute(
             return_to_cpu, drain_done, capacity, do_route,
         )
         if key not in _STEP_CACHE:
+            CACHE_STATS.misses += 1
             superstep = make_superstep(
                 it, num_shards, axis_name,
                 k_local=k_local, max_iters=max_iters,
@@ -395,6 +722,8 @@ def distributed_execute(
                     out_specs=(P(axis_name), P(), P(), P(), P()),
                 )
             )
+        else:
+            CACHE_STATS.hits += 1
         return _STEP_CACHE[key]
 
     routed_per_step = []
@@ -430,7 +759,10 @@ def distributed_execute(
             num_shards * (num_shards - 1) * capacity * R if do_route else 0
         )
         local_only_steps += int(not do_route)
-        assert int(n_drop) == 0, "request records lost in routing (pool overflow)"
+        if int(n_drop) != 0:  # not assert: must survive python -O
+            raise RuntimeError(
+                f"request records lost in routing (pool overflow): {int(n_drop)}"
+            )
         if int(n_active) == 0:
             break
     else:
@@ -440,20 +772,47 @@ def distributed_execute(
             f"(records would be returned with partial state otherwise)"
         )
 
-    # gather and order results by id
-    all_rec = np.asarray(pool_global).reshape(-1, record_width(S))
+    return _decode_results(
+        pool_global, B, S,
+        supersteps=steps,
+        routed_per_step=routed_per_step,
+        active_per_step=active_per_step,
+        wire_words_per_step=wire_words_per_step,
+        capacity_per_step=capacity_per_step,
+        local_only_steps=local_only_steps,
+    )
+
+
+def _decode_results(
+    pool_global,
+    B: int,
+    scratch_words: int,
+    *,
+    supersteps: int,
+    routed_per_step: list | None = None,
+    active_per_step: list | None = None,
+    wire_words_per_step: list | None = None,
+    capacity_per_step: list | None = None,
+    local_only_steps: int = 0,
+    wire_words_total: int | None = None,
+    fused: bool = False,
+):
+    """Gather the final pools, order records by request id, build stats."""
+    all_rec = np.asarray(pool_global).reshape(-1, record_width(scratch_words))
     valid = all_rec[:, F_STATUS] != STATUS_EMPTY
     all_rec = all_rec[valid]
     all_rec = all_rec[all_rec[:, F_ID] < B]
     order = np.argsort(all_rec[:, F_ID], kind="stable")
     all_rec = all_rec[order]
     stats = RoutingStats(
-        supersteps=steps,
+        supersteps=supersteps,
         crossings=all_rec[:, F_HOPS].copy(),
-        routed_per_step=routed_per_step,
-        active_per_step=active_per_step,
-        wire_words_per_step=wire_words_per_step,
-        capacity_per_step=capacity_per_step,
+        routed_per_step=routed_per_step or [],
+        active_per_step=active_per_step or [],
+        wire_words_per_step=wire_words_per_step or [],
+        capacity_per_step=capacity_per_step or [],
         local_only_steps=local_only_steps,
+        wire_words_total=wire_words_total,
+        fused=fused,
     )
     return all_rec, stats

@@ -47,9 +47,23 @@ def is_local(bounds: jnp.ndarray, shard_id, ptr) -> jnp.ndarray:
     return (ptr >= lo) & (ptr < hi)
 
 
+def access_table(perms: jnp.ndarray, want: int = PERM_READ) -> jnp.ndarray:
+    """Per-shard grant table for ``want`` access: ``(num_shards,)`` bool.
+
+    The table depends only on the (loop-invariant) permission registers, so
+    traversal loops hoist it once and index it per iteration instead of
+    re-deriving the bitmask comparison every step.
+    """
+    return (perms & want) == want
+
+
+def check_access_table(table: jnp.ndarray, shard: jnp.ndarray) -> jnp.ndarray:
+    """Protection check against a hoisted ``access_table`` result."""
+    num_shards = table.shape[0]
+    safe = jnp.clip(shard, 0, num_shards - 1)
+    return jnp.take(table, safe, axis=0) & (shard >= 0) & (shard < num_shards)
+
+
 def check_access(perms: jnp.ndarray, shard: jnp.ndarray, want: int = PERM_READ) -> jnp.ndarray:
     """Node-level protection check: does the range grant ``want`` access."""
-    num_shards = perms.shape[0]
-    safe = jnp.clip(shard, 0, num_shards - 1)
-    ok = (jnp.take(perms, safe, axis=0) & want) == want
-    return ok & (shard >= 0) & (shard < num_shards)
+    return check_access_table(access_table(perms, want), shard)

@@ -11,8 +11,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.iterator import PulseIterator
+from repro.core.routing import ExecutableCacheStats
 from repro.kernels.pulse_chase.kernel import pulse_chase_pallas
 from repro.kernels.pulse_chase.ref import chase_reference
+
+# Executable reuse accounting for the kernel backend (same discipline as the
+# routing layer's fused cache): ``traces`` only moves when a new (shape,
+# statics) combination forces a recompile, so the wave scheduler's pow2 lane
+# ladder is regression-tested to stay at O(log B) compiles across waves.
+CACHE_STATS = ExecutableCacheStats()
 
 
 def iterator_logic(it: PulseIterator):
@@ -36,7 +43,48 @@ def iterator_logic(it: PulseIterator):
 @partial(
     jax.jit,
     static_argnames=("logic_fn", "num_steps", "wave", "interpret", "use_pallas"),
+    donate_argnames=("ptr", "scratch", "status"),
 )
+def _pulse_chase_donated(
+    arena_data: jax.Array,
+    ptr: jax.Array,
+    scratch: jax.Array,
+    status: jax.Array,
+    *,
+    logic_fn,
+    num_steps: int,
+    wave: int = 8,
+    interpret: bool = True,
+    use_pallas: bool = True,
+):
+    """The one compiled executable behind both entry points.
+
+    Lane buffers (ptr/scratch/status) are donated: the wave scheduler owns
+    its padded buffers and rebuilds them per chunk, so XLA may alias them in
+    place.  The arena is never donated -- it is the resident state reused
+    across waves.  Callers that do not own their buffers go through
+    ``pulse_chase``, which copies first.
+    """
+    CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
+    ptr = jnp.asarray(ptr, jnp.int32)
+    scratch = jnp.asarray(scratch, jnp.int32)
+    status = jnp.asarray(status, jnp.int32)
+    if not use_pallas:
+        return chase_reference(
+            arena_data, ptr, scratch, status, logic_fn, num_steps
+        )
+    return pulse_chase_pallas(
+        jnp.asarray(arena_data, jnp.int32),
+        ptr,
+        scratch,
+        status,
+        logic_fn=logic_fn,
+        num_steps=num_steps,
+        wave=wave,
+        interpret=interpret,
+    )
+
+
 def pulse_chase(
     arena_data: jax.Array,
     ptr: jax.Array,
@@ -54,23 +102,20 @@ def pulse_chase(
     ``use_pallas=False`` falls back to the pure-jnp reference (the XLA path
     models use on CPU); ``interpret=True`` runs the Pallas kernel body in
     interpret mode (CPU validation of the TPU kernel).
+
+    The caller's lane buffers are copied (``jnp.array``) before entering the
+    donating executable, so they stay valid after the call.
     """
-    ptr = jnp.asarray(ptr, jnp.int32)
-    scratch = jnp.asarray(scratch, jnp.int32)
-    status = jnp.asarray(status, jnp.int32)
-    if not use_pallas:
-        return chase_reference(
-            arena_data, ptr, scratch, status, logic_fn, num_steps
-        )
-    return pulse_chase_pallas(
-        jnp.asarray(arena_data, jnp.int32),
-        ptr,
-        scratch,
-        status,
+    return _pulse_chase_donated(
+        arena_data,
+        jnp.array(ptr, jnp.int32),
+        jnp.array(scratch, jnp.int32),
+        jnp.array(status, jnp.int32),
         logic_fn=logic_fn,
         num_steps=num_steps,
         wave=wave,
         interpret=interpret,
+        use_pallas=use_pallas,
     )
 
 
@@ -188,7 +233,10 @@ def pulse_chase_waves(
         p_in[:n] = out_ptr[live]
         s_in[:n] = out_scr[live]
         st_in[:n] = 0
-        p1, s1, st1 = pulse_chase(
+        # chunk buffers are freshly built above, so hand them straight to the
+        # donating executable (no defensive copy); the pow2 lane ladder keeps
+        # the executable cache at O(log B) entries across waves
+        p1, s1, st1 = _pulse_chase_donated(
             arena_data,
             jnp.asarray(p_in),
             jnp.asarray(s_in),

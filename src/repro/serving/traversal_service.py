@@ -149,12 +149,17 @@ class PulseService:
         max_request_iters: int = 1 << 16,
         backend: str = "xla",
         compact: bool = True,
+        fused: bool = True,
     ):
         if quantum < 1:
             raise ValueError("quantum must be >= 1")
         self.engine = engine
         self.backend = backend
         self.compact = compact
+        # fused quanta share one compiled whole-traversal executable per
+        # (structure, slot shape) and reuse the device-resident arena, so
+        # steady-state rounds neither retrace nor re-upload the heap
+        self.fused = fused
         self.quantum = quantum
         self.max_request_iters = max_request_iters
         self.groups = {
@@ -246,6 +251,7 @@ class PulseService:
             max_iters=self.quantum,
             backend=self.backend,
             compact=self.compact,
+            fused=self.fused,
         )
         self.metrics.engine_calls += 1
         stats = res.stats

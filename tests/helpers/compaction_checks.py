@@ -11,7 +11,13 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import routing  # noqa: E402
 from repro.core.iterator import execute_batched  # noqa: E402
-from repro.core.structures import linked_list  # noqa: E402
+from repro.core.structures import (  # noqa: E402
+    bst,
+    btree,
+    hash_table,
+    linked_list,
+    skiplist,
+)
 
 RNG = np.random.default_rng(5)
 P = 4
@@ -82,8 +88,108 @@ def check_compact_handles_faults():
     print("compact fault ok")
 
 
+def _five_structures(n=96, B=32):
+    """(name, iterator, arena, ptr0, scratch0, max_iters) for every structure
+    family, interleaved across shards, with a hit/miss query mix."""
+    vals = RNG.integers(0, 10**6, n).astype(np.int32)
+    cases = []
+
+    keys = np.arange(n, dtype=np.int32)
+    ar, head = linked_list.build(keys, vals, num_shards=P, policy="interleaved")
+    it = linked_list.find_iterator()
+    q = np.concatenate([keys[RNG.integers(0, n, B - 4)], np.full(4, 10**6)])
+    p0, s0 = it.init(jnp.asarray(q.astype(np.int32)), head)
+    cases.append(("list", it, ar, p0, s0, 4096))
+
+    keys = np.sort(RNG.choice(np.arange(10**6), n, replace=False).astype(np.int32))
+    ar, root, _ = bst.build(keys, vals, num_shards=P, policy="interleaved")
+    it = bst.find_iterator()
+    q = np.concatenate([keys[: B // 2], RNG.integers(10**6, 2 * 10**6, B // 2)])
+    p0, s0 = it.init(jnp.asarray(q.astype(np.int32)), root)
+    cases.append(("bst", it, ar, p0, s0, 256))
+
+    ar, root, _ = btree.build(keys, vals, num_shards=P, policy="interleaved")
+    it = btree.find_iterator()
+    p0, s0 = it.init(jnp.asarray(q.astype(np.int32)), root)
+    cases.append(("btree", it, ar, p0, s0, 64))
+
+    ar, heads = hash_table.build(keys, vals, 16, num_shards=P, policy="interleaved")
+    it = hash_table.find_iterator(16)
+    p0, s0 = it.init(jnp.asarray(q.astype(np.int32)), jnp.asarray(heads))
+    cases.append(("hash", it, ar, p0, s0, 1024))
+
+    ar, shead = skiplist.build(keys, vals, num_shards=P, policy="interleaved")
+    it = skiplist.find_iterator()
+    p0, s0 = it.init(jnp.asarray(q.astype(np.int32)), shead)
+    cases.append(("skip", it, ar, p0, s0, 1024))
+    return cases
+
+
+def check_fused_equivalence_all_structures():
+    """The fused device-resident loop must be bit-identical to the PR 1
+    host-dispatched compacted schedule AND to the BSP oracle, for all five
+    structure families -- including crossings and the schedule itself
+    (supersteps / wire words / local-only counts), since the fused loop
+    re-derives the exact same ladder decisions on-device."""
+    mesh = jax.make_mesh((P,), ("mem",))
+    for name, it, ar, p0, s0, max_iters in _five_structures():
+        o_ptr, o_scr, o_status, o_iters = execute_batched(
+            it, ar, p0, s0, max_iters=max_iters
+        )
+        rec_d, st_d = routing.distributed_execute(
+            it, ar, p0, s0, mesh=mesh, max_iters=max_iters, compact=True, fused=False
+        )
+        rec_f, st_f = routing.distributed_execute(
+            it, ar, p0, s0, mesh=mesh, max_iters=max_iters, compact=True, fused=True
+        )
+        # full wire records (id/home/ptr/status/iters/hops/scratch) identical
+        np.testing.assert_array_equal(rec_f, rec_d, err_msg=name)
+        np.testing.assert_array_equal(
+            rec_f[:, routing.F_SCRATCH:], np.asarray(o_scr), err_msg=name
+        )
+        np.testing.assert_array_equal(
+            rec_f[:, routing.F_STATUS], np.asarray(o_status), err_msg=name
+        )
+        np.testing.assert_array_equal(
+            rec_f[:, routing.F_ITERS], np.asarray(o_iters), err_msg=name
+        )
+        assert st_f.supersteps == st_d.supersteps, (name, st_f, st_d)
+        assert st_f.total_wire_words == st_d.total_wire_words, (name, st_f, st_d)
+        assert st_f.local_only_steps == st_d.local_only_steps, (name, st_f, st_d)
+        print(
+            f"fused {name} ok: steps={st_f.supersteps} "
+            f"wire={st_f.total_wire_words} local_only={st_f.local_only_steps}"
+        )
+
+
+def check_fused_handles_faults():
+    """Switch-level faults retire identically on the fused path."""
+    n, B = 64, 16
+    keys = np.arange(n, dtype=np.int32)
+    values = RNG.integers(0, 100, n).astype(np.int32)
+    ar, head = linked_list.build(keys, values, num_shards=P)
+    it = linked_list.find_iterator()
+    q = keys[RNG.integers(0, n, B)].astype(np.int32)
+    ptr0, scr0 = it.init(jnp.asarray(q), head)
+    ptr0 = jnp.asarray(np.where(np.arange(B) % 2 == 0, 10**6, np.asarray(ptr0)))
+    mesh = jax.make_mesh((P,), ("mem",))
+    rec_d, _ = routing.distributed_execute(
+        it, ar, ptr0, scr0, mesh=mesh, max_iters=256, compact=True, fused=False
+    )
+    rec_f, _ = routing.distributed_execute(
+        it, ar, ptr0, scr0, mesh=mesh, max_iters=256, compact=True, fused=True
+    )
+    np.testing.assert_array_equal(rec_f, rec_d)
+    from repro.core.iterator import STATUS_FAULT
+
+    assert (rec_f[::2, routing.F_STATUS] == STATUS_FAULT).all()
+    print("fused fault ok")
+
+
 if __name__ == "__main__":
     assert jax.device_count() == P, jax.devices()
     check_compact_equals_uncompacted()
     check_compact_handles_faults()
+    check_fused_equivalence_all_structures()
+    check_fused_handles_faults()
     print("ALL COMPACTION CHECKS PASSED")
