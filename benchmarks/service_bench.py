@@ -1,6 +1,6 @@
 """Serving-layer benchmark: compacted supersteps + PulseService throughput.
 
-Two experiments:
+Three experiments:
 
   1. **Compacted routing** -- a skewed distributed workload (half the batch
      finishes early, the rest keep walking) on an 8-way mesh.  Reports the
@@ -13,6 +13,12 @@ Two experiments:
      lookup, hash-chain probe, skiplist search) from 3 tenants served
      end-to-end through continuous batching; reports p50/p99 latency,
      throughput, utilization, and per-tenant counts.
+
+  3. **LM batched prefill** -- the ContinuousBatcher's admission path:
+     batched full-sequence prefill (one jitted call per admission) vs the
+     legacy token-by-token slot prefill, on a reduced LM config.  Checks
+     outputs are identical and reports the prefill-call reduction + wall
+     clock for both.
 
 Run:  PYTHONPATH=src python benchmarks/service_bench.py
       PYTHONPATH=src python benchmarks/service_bench.py --small --json BENCH_service.json
@@ -196,6 +202,63 @@ def bench_service(n_requests=600, slots=64, quantum=16):
     }
 
 
+def bench_batched_prefill(n_requests=12, prompt_len=8, max_new=6):
+    """Admission throughput: batched prefill vs token-by-token slot prefill.
+
+    The legacy path runs one full-batch decode_step per prompt token per
+    admitted request; the batched path absorbs a whole admission's prompts
+    in one jitted prefill call per distinct prompt length.
+    """
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models.model_zoo import build_model
+    from repro.serving.batching import ContinuousBatcher, Request
+
+    cfg = get_reduced_config("qwen3_0_6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [
+        RNG.integers(2, cfg.vocab, prompt_len).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+
+    results = {}
+    outputs = {}
+    for mode in ("token", "batched"):
+        reqs = [
+            Request(req_id=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)
+        ]
+        b = ContinuousBatcher(model, max_batch=4, max_len=32, prefill_mode=mode)
+        b.model_params = params
+        b.serve(list(reqs))  # warm the compiles
+        for r in reqs:
+            r.output, r.finished_step = [], -1
+        t0 = time.perf_counter()
+        m = b.serve(list(reqs))
+        wall = time.perf_counter() - t0
+        outputs[mode] = [list(r.output) for r in reqs]
+        results[mode] = {
+            "wall_s": wall,
+            "tokens_per_s": m.tokens_out / wall,
+            "prefill_calls": m.prefill_calls,
+            "prompt_tokens": int(sum(len(p) for p in prompts)),
+        }
+        print(
+            f"  {mode:8s}: wall={wall*1e3:7.1f}ms "
+            f"decode_tokens/s={m.tokens_out / wall:7.0f} "
+            f"prefill_calls={m.prefill_calls}"
+        )
+    assert outputs["token"] == outputs["batched"], (
+        "batched prefill must produce identical decodes"
+    )
+    speedup = results["token"]["wall_s"] / results["batched"]["wall_s"]
+    results["prefill_speedup"] = speedup
+    print(f"  batched-prefill admission speedup: {speedup:.2f}x (identical outputs)")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -213,15 +276,19 @@ def main(argv=None):
     )
     args = ap.parse_args(argv)
 
-    print("[1/2] compacted supersteps vs bulk-synchronous baseline")
+    print("[1/3] compacted supersteps vs bulk-synchronous baseline")
     r1 = bench_compacted_routing(
         **({"n": 512, "B": 128} if args.small else {})
     )
-    print("[2/2] PulseService: mixed 4-structure workload")
+    print("[2/3] PulseService: mixed 4-structure workload")
     r2 = bench_service(
         **({"n_requests": 150, "slots": 32} if args.small else {})
     )
-    summary = {**r1, **r2}
+    print("[3/3] LM admission: batched prefill vs token-by-token")
+    r3 = bench_batched_prefill(
+        **({"n_requests": 8, "prompt_len": 6, "max_new": 4} if args.small else {})
+    )
+    summary = {**r1, **r2, "prefill_speedup": r3["prefill_speedup"]}
     print("\nsummary:", summary)
     if args.json:
         payload = {
@@ -229,6 +296,7 @@ def main(argv=None):
             "config": {"shards": P, "small": bool(args.small)},
             "compacted_routing": r1,
             "service": r2,
+            "batched_prefill": r3,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

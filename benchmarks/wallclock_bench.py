@@ -1,4 +1,4 @@
-"""Wall-clock benchmark: fused device-resident routing vs per-hop dispatch.
+"""Wall-clock benchmark: superstep schedules on an 8-shard mesh.
 
 PR 1's active-set compaction cut *wire words*; the paper's headline claim
 (Fig. 7-9) is wall-clock latency/throughput.  This harness measures exactly
@@ -6,13 +6,20 @@ that on an 8-shard mesh: the same compacted superstep schedule executed
 
   * **dispatched** -- one jitted superstep program per hop, the local-vs-
     fabric decision and the capacity ladder re-decided on the host between
-    hops (PR 1 behavior), vs
+    hops (PR 1 behavior);
   * **fused**      -- the whole traversal as a single device-resident
-    ``lax.while_loop`` program (``core.routing`` ``fused=True``): no host
-    round-trip per hop, conditional collectives, traced capacity ladder.
+    ``lax.while_loop`` program (``core.routing`` ``schedule="fused"``): no
+    host round-trip per hop, but each superstep still serializes local
+    chase -> all_to_all -> wait;
+  * **pipelined**  -- the fused loop's active set split into two wavefronts
+    (``schedule="pipelined"``): the in-flight wavefront rides the fabric as
+    carried loop state while the resident wavefront chases locally, and
+    fabric-side coordination collapses to one stacked psum per superstep;
+  * **ring**       -- the pipelined schedule on the ``lax.ppermute`` ring
+    fabric (P-1 distance classes instead of one dense all_to_all).
 
-Both paths are bit-identical to the single-node BSP oracle (asserted here on
-every config); only the wall clock differs.  Reports per-superstep and
+All schedules are bit-identical to the single-node BSP oracle (asserted here
+on every config); only the wall clock differs.  Reports per-superstep and
 end-to-end latency for each config plus an end-to-end mixed-structure total.
 
 Run:  PYTHONPATH=src python benchmarks/wallclock_bench.py
@@ -96,16 +103,24 @@ def build_configs(small: bool):
     return cfgs
 
 
+MODES = {
+    "dispatched": dict(schedule="dispatched"),
+    "fused": dict(schedule="fused"),
+    "pipelined": dict(schedule="pipelined"),
+    "ring": dict(schedule="pipelined", fabric="ring"),
+}
+
+
 def bench_config(name, it, ar, ptr0, scr0, mesh, *, max_iters, repeats):
     o_ptr, o_scr, o_status, o_iters = execute_batched(
         it, ar, ptr0, scr0, max_iters=max_iters
     )
     B = int(np.asarray(ptr0).shape[0])
     out = {"batch": B}
-    for mode, fused in (("dispatched", False), ("fused", True)):
+    for mode, mode_kw in MODES.items():
         kw = dict(
             mesh=mesh, axis_name="mem", max_iters=max_iters, k_local=4,
-            compact=True, fused=fused,
+            compact=True, **mode_kw,
         )
         rec, st = routing.distributed_execute(it, ar, ptr0, scr0, **kw)  # warmup
         np.testing.assert_array_equal(rec[:, routing.F_SCRATCH:], np.asarray(o_scr))
@@ -126,13 +141,24 @@ def bench_config(name, it, ar, ptr0, scr0, mesh, *, max_iters, repeats):
             "wire_words": st.total_wire_words,
             "throughput_rps": B / p50,
         }
+    # schedule-identity across modes (the bit-identity contract, stats side)
+    ss = {m: out[m]["supersteps"] for m in MODES}
+    ww = {m: out[m]["wire_words"] for m in MODES}
+    assert len(set(ss.values())) == 1, f"superstep counts diverged: {ss}"
+    assert len(set(ww.values())) == 1, f"wire accounting diverged: {ww}"
     out["speedup"] = out["dispatched"]["wall_s_p50"] / out["fused"]["wall_s_p50"]
-    d, f = out["dispatched"], out["fused"]
+    out["speedup_pipelined"] = (
+        out["fused"]["wall_s_p50"] / out["pipelined"]["wall_s_p50"]
+    )
+    out["speedup_ring"] = out["fused"]["wall_s_p50"] / out["ring"]["wall_s_p50"]
+    f, p = out["fused"], out["pipelined"]
     print(
         f"  {name:16s} steps={f['supersteps']:4d} "
-        f"dispatched={d['wall_s_p50']*1e3:8.1f}ms ({d['per_superstep_ms']*1e3:6.0f}us/step) "
-        f"fused={f['wall_s_p50']*1e3:8.1f}ms ({f['per_superstep_ms']*1e3:6.0f}us/step) "
-        f"speedup={out['speedup']:.2f}x"
+        f"dispatched={out['dispatched']['wall_s_p50']*1e3:8.1f}ms "
+        f"fused={f['wall_s_p50']*1e3:8.1f}ms "
+        f"pipelined={p['wall_s_p50']*1e3:8.1f}ms "
+        f"ring={out['ring']['wall_s_p50']*1e3:8.1f}ms "
+        f"fused/disp={out['speedup']:.2f}x pipe/fused={out['speedup_pipelined']:.2f}x"
     )
     return out
 
@@ -160,7 +186,10 @@ def main(argv=None):
     mesh = jax.make_mesh((P,), ("mem",))
     assert jax.device_count() >= P, jax.devices()
     cfgs = build_configs(args.small)
-    print(f"fused vs per-hop dispatch, {P} shards, repeats={args.repeats}")
+    print(
+        f"superstep schedules (dispatched/fused/pipelined/ring), {P} shards, "
+        f"repeats={args.repeats}"
+    )
     results = {}
     for name, (it, ar, ptr0, scr0, max_iters) in cfgs.items():
         results[name] = bench_config(
@@ -169,12 +198,16 @@ def main(argv=None):
 
     e2e = {
         mode: sum(r[mode]["wall_s_p50"] for r in results.values())
-        for mode in ("dispatched", "fused")
+        for mode in MODES
     }
     e2e["speedup"] = e2e["dispatched"] / e2e["fused"]
+    e2e["speedup_pipelined"] = e2e["fused"] / e2e["pipelined"]
+    e2e["speedup_ring"] = e2e["fused"] / e2e["ring"]
     print(
         f"  end-to-end mixed: dispatched={e2e['dispatched']*1e3:.1f}ms "
-        f"fused={e2e['fused']*1e3:.1f}ms speedup={e2e['speedup']:.2f}x"
+        f"fused={e2e['fused']*1e3:.1f}ms pipelined={e2e['pipelined']*1e3:.1f}ms "
+        f"ring={e2e['ring']*1e3:.1f}ms "
+        f"fused/disp={e2e['speedup']:.2f}x pipe/fused={e2e['speedup_pipelined']:.2f}x"
     )
 
     if args.json:
@@ -202,9 +235,24 @@ def main(argv=None):
             f"fused routing slower than per-hop dispatch end-to-end: "
             f"{e2e['speedup']:.2f}x"
         )
+        # the wavefront-pipelined gate: 1.2x on CI smoke sizes (collectives
+        # are cheap relative to dispatch at tiny pools), 1.5x -- the
+        # acceptance target -- at full size where hundreds of supersteps
+        # amortize the compile
+        need = 1.2 if args.small else 1.5
+        pipe = results["chain-skewed"]["speedup_pipelined"]
+        assert pipe >= need, (
+            f"pipelined schedule must beat fused-serialized by >={need}x on "
+            f"the skewed-depth chain, got {pipe:.2f}x"
+        )
+        assert e2e["speedup_pipelined"] >= 1.0, (
+            f"pipelined schedule slower than fused end-to-end: "
+            f"{e2e['speedup_pipelined']:.2f}x"
+        )
         print(
-            f"  perf gate ok: chain-skewed {chain:.2f}x (>=1.3), "
-            f"end-to-end {e2e['speedup']:.2f}x (>=1.0)"
+            f"  perf gate ok: chain-skewed fused/disp {chain:.2f}x (>=1.3), "
+            f"pipelined/fused {pipe:.2f}x (>={need}), end-to-end "
+            f"{e2e['speedup']:.2f}x / {e2e['speedup_pipelined']:.2f}x (>=1.0)"
         )
 
 

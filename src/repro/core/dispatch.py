@@ -174,6 +174,67 @@ def offload_decision(
     return OffloadDecision(ok, t_c, t_d, ratio, n, reason)
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduleDecision:
+    """Which distributed superstep schedule the dispatch engine picks.
+
+    Mirrors the offload decision's shape: a closed-form model of where a
+    superstep's time goes, and the schedule that hides the larger share.
+    ``overlap_frac`` is the fraction of a serialized superstep the
+    wavefront-pipelined schedule can hide (min of the two phases over their
+    sum): >0 whenever both phases are nonzero, so multi-shard traversals
+    default to ``pipelined`` unless one phase fully dominates.
+    """
+
+    schedule: str  # "pipelined" | "fused" | "local"
+    t_local_ns: float  # modeled local-chase time per superstep
+    t_fabric_ns: float  # modeled fabric time per superstep
+    overlap_frac: float  # serialized time hidden by overlapping the two
+    reason: str
+
+
+def schedule_decision(
+    it: PulseIterator,
+    node_words: int,
+    num_shards: int,
+    accel: AcceleratorSpec | None = None,
+    *,
+    k_local: int = 4,
+    min_overlap: float = 0.05,
+) -> ScheduleDecision:
+    """Pick the superstep schedule for a distributed traversal (S5 + the
+    rack-scale overlap lever).
+
+    The local phase runs ``k_local`` iterations, each bounded by the larger
+    of compute (t_i * N) and the aggregated LOAD (t_d); the fabric phase is
+    the network-stack traversal plus per-link interconnect time.  When
+    neither phase dominates, pipelining the two wavefronts hides
+    ``min(t_local, t_fabric)`` of every superstep, so the engine picks
+    ``pipelined``; below ``min_overlap`` the double-buffered schedule's
+    extra bookkeeping is not worth the hidden time and the serialized fused
+    loop wins.
+    """
+    accel = accel or AcceleratorSpec()
+    if num_shards <= 1:
+        return ScheduleDecision(
+            "local", 0.0, 0.0, 0.0, "single memory node: nothing to overlap"
+        )
+    n = count_instructions(it, node_words)
+    t_local = k_local * max(accel.t_i_ns * n, accel.t_d_ns(node_words * 4))
+    t_fabric = (
+        accel.network_ns
+        + accel.scheduler_ns
+        + accel.interconnect_ns * (num_shards - 1)
+    )
+    overlap = min(t_local, t_fabric) / (t_local + t_fabric)
+    schedule = "pipelined" if overlap >= min_overlap else "fused"
+    reason = (
+        f"t_local={t_local:.0f}ns t_fabric={t_fabric:.0f}ns -> overlap hides "
+        f"{overlap:.0%} of a serialized superstep -> {schedule}"
+    )
+    return ScheduleDecision(schedule, t_local, t_fabric, overlap, reason)
+
+
 def workload_table(entries):
     """Reproduce the shape of paper Table 3: name, t_c/t_d, iterations.
 

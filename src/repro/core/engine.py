@@ -140,11 +140,15 @@ class PulseEngine:
         self.accel = accel or dispatch_mod.AcceleratorSpec()
         self.eta = self.accel.eta if eta is None else eta
         # serving calls execute() every scheduling round with a fixed batch
-        # shape; cache the compiled local executor per (iterator, B, budget)
-        # and the kernel path's logic closure per iterator (pulse_chase jits
-        # on logic_fn identity, so a fresh closure per call would retrace)
+        # shape; cache the compiled local executor per (iterator, B, budget).
+        # The kernel path's logic closure is cached per iterator in
+        # routing._kernel_logic (pulse_chase jits on logic_fn identity, so a
+        # fresh closure per call would retrace) -- one cache shared by the
+        # single-node kernel path and the distributed local_backend="kernel".
         self._local_jit: dict = {}
-        self._logic_cache: dict = {}
+        # schedule_decision re-traces the iterator's jaxpr for the overlap
+        # model; serving calls execute() per quantum, so cache per iterator
+        self._schedule_cache: dict = {}
 
     def dispatch(self, it: PulseIterator) -> dispatch_mod.OffloadDecision:
         return dispatch_mod.offload_decision(
@@ -165,6 +169,8 @@ class PulseEngine:
         compact: bool = True,
         fused: bool = True,
         backend: str = "xla",
+        schedule: str = "auto",
+        fabric: str = "dense",
     ) -> ExecResult:
         """Dispatch + execute a batch of traversals.
 
@@ -172,11 +178,23 @@ class PulseEngine:
         JAX while_loop oracle; ``"kernel"`` runs the pulse_chase Pallas
         kernel under the variable-depth wave scheduler (compiled on TPU, the
         Pallas interpreter elsewhere), retiring finished lanes between depth
-        quanta.  ``compact`` enables active-set compaction of distributed
-        supersteps (ignored for the ``return_to_cpu`` ablation); ``fused``
-        runs the whole distributed traversal as one device-resident
-        while_loop program (bit-identical results, no per-hop host dispatch)
-        through the shared compiled-executable cache in ``core.routing``.
+        quanta.  On a mesh, ``backend="kernel"`` threads the distributed
+        local chase through the kernel's vectorized iterator body
+        (``local_backend="kernel"``), so the overlapped local step shares
+        the accelerator's compiled logic end-to-end.
+
+        ``schedule`` picks the distributed superstep engine: ``"auto"``
+        consults the dispatch engine's overlap model
+        (``dispatch.schedule_decision``) and normally selects the
+        wavefront-pipelined loop, which overlaps the in-flight wavefront's
+        fabric time with the resident wavefront's local chase; ``"fused"``
+        and ``"dispatched"`` force the serialized schedules.  ``fabric``
+        selects the collective carrying the records (dense all_to_all or a
+        ppermute ring).  All combinations are bit-identical in results and
+        wire accounting.  ``compact`` enables active-set compaction of
+        distributed supersteps (ignored for the ``return_to_cpu`` ablation);
+        ``fused`` is the pre-pipelined boolean knob, still honored when
+        ``schedule="auto"`` resolves away from it only by the overlap model.
         """
         decision = self.dispatch(it)
         offload = decision.offload if force_offload is None else force_offload
@@ -189,11 +207,25 @@ class PulseEngine:
             return ExecResult(ptr, scratch, status, np.asarray(iters), trace, False)
 
         if self.mesh is not None and self.arena.num_shards > 1:
+            if schedule == "auto":
+                if not fused:  # explicit opt-out of device-resident loops
+                    schedule = "dispatched"
+                else:
+                    sk = (it, k_local)
+                    sd = self._schedule_cache.get(sk)
+                    if sd is None:
+                        sd = self._schedule_cache[sk] = dispatch_mod.schedule_decision(
+                            it, self.arena.node_words, self.arena.num_shards,
+                            self.accel, k_local=k_local,
+                        )
+                    schedule = sd.schedule if sd.schedule != "local" else "fused"
             rec, stats = routing.distributed_execute(
                 it, self.arena, ptr0, scratch0,
                 mesh=self.mesh, axis_name=self.axis_name,
                 max_iters=max_iters, k_local=k_local,
                 return_to_cpu=return_to_cpu, compact=compact, fused=fused,
+                schedule=schedule, fabric=fabric,
+                local_backend="kernel" if backend == "kernel" else "xla",
             )
             return ExecResult(
                 ptr=rec[:, routing.F_PTR],
@@ -235,9 +267,12 @@ class PulseEngine:
         depth quanta, so detection is quantum-granular rather than
         per-iteration like the XLA executor -- a faulting lane may execute a
         few extra clamped (harmless) loads first.  Lanes still active after
-        ``max_iters`` report MAXED (resumable).  Iteration counts are
-        chunk-granular upper bounds, not exact.  Runs the compiled kernel on
-        TPU and the Pallas interpreter elsewhere.
+        ``max_iters`` report MAXED (resumable).  Iteration counts are exact
+        per lane (the kernel accumulates them; wave retirement no longer
+        rounds up to the depth quantum), except for fault_fn-retired lanes,
+        whose counts include the clamped loads executed before the
+        quantum-granular check caught them.  Runs the compiled kernel on TPU
+        and the Pallas interpreter elsewhere.
         """
         from repro.core.arena import PERM_READ
         from repro.kernels.pulse_chase import ops as chase_ops
@@ -245,9 +280,7 @@ class PulseEngine:
         ptr0 = np.asarray(ptr0, np.int32)
         B = ptr0.shape[0]
         scratch0 = np.asarray(scratch0, np.int32).reshape(B, it.scratch_words)
-        logic = self._logic_cache.get(it)
-        if logic is None:
-            logic = self._logic_cache[it] = chase_ops.iterator_logic(it)
+        logic = routing._kernel_logic(it)
         max_steps = int(min(max_iters, 1 << 20))
 
         bounds = np.asarray(self.arena.bounds)

@@ -94,6 +94,7 @@ def step_batch(
     local_lo: jax.Array | int = 0,
     local_hi: jax.Array | int | None = None,
     perm_ok: jax.Array | bool = True,
+    logic_fn=None,
 ):
     """Advance every ACTIVE request by one iteration (vectorized).
 
@@ -101,6 +102,11 @@ def step_batch(
     memory node's translation range); an ACTIVE request pointing elsewhere is
     left untouched (the router will move it).  ``perm_ok`` is the node-level
     protection check result for this shard.
+
+    ``logic_fn`` optionally substitutes a pre-vectorized fused next+end body
+    (``kernels.pulse_chase.ops.iterator_logic``) for the per-lane vmap --
+    the same compiled iterator the accelerator kernel runs, with identical
+    done-gating, so results are bit-identical.
     """
     if local_hi is None:
         local_hi = arena_data.shape[0]
@@ -115,9 +121,17 @@ def step_batch(
 
     offset = jnp.asarray(ptr, jnp.int32) - jnp.asarray(local_lo, jnp.int32)
     node = load_node(arena_data, jnp.where(runnable, offset, 0))
-    done, new_ptr_off, new_scratch = jax.vmap(partial(_step_one, it))(
-        node, ptr, scratch
-    )
+    if logic_fn is not None:
+        done, nptr, nscr = logic_fn(node, ptr, scratch)
+        # the kernel's logic pipeline leaves done-gating of the pointer to
+        # the caller (kernel.py's logic_wave); gate it here exactly like
+        # _step_one so both backends advance records identically
+        new_ptr_off = jnp.where(done, ptr, nptr).astype(jnp.int32)
+        new_scratch = jnp.asarray(nscr, jnp.int32)
+    else:
+        done, new_ptr_off, new_scratch = jax.vmap(partial(_step_one, it))(
+            node, ptr, scratch
+        )
     # next_fn operates on *global* pointers stored in the records; nothing to
     # rebase (records in the arena hold global addresses).
     new_ptr = new_ptr_off

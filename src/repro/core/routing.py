@@ -85,12 +85,31 @@ class RoutingStats:
     # only its local-only lax.cond skips remove real transfers.
     wire_words_total: int | None = None
     fused: bool = False
+    # which superstep schedule produced this run ("dispatched" | "fused" |
+    # "pipelined") and which fabric carried the records ("dense" all_to_all
+    # | "ring" ppermute distance classes).  The pipelined schedule overlaps
+    # the in-flight wavefront's fabric time with the resident wavefront's
+    # local chase; scheduling decisions, wire accounting, and results are
+    # bit-identical to the fused schedule.
+    schedule: str = "dispatched"
+    fabric: str = "dense"
 
     @property
     def total_wire_words(self) -> int:
         if self.wire_words_total is not None:
             return int(self.wire_words_total)
         return int(sum(self.wire_words_per_step))
+
+    @property
+    def ring_hops(self) -> int:
+        """Physical ppermute hops a ring fabric executed (P-1 distance
+        classes per routed superstep; 0 on the dense fabric)."""
+        if self.fabric != "ring":
+            return 0
+        routed = self.supersteps - self.local_only_steps
+        return routed * max(0, self._num_shards - 1) if self._num_shards else 0
+
+    _num_shards: int = 0
 
 
 @dataclasses.dataclass
@@ -114,6 +133,24 @@ class ExecutableCacheStats:
 CACHE_STATS = ExecutableCacheStats()
 
 
+# Kernel-backend iterator bodies: the vectorized fused next+end `logic_fn`
+# compiled by kernels/pulse_chase (one entry per iterator; lazily imported to
+# avoid a routing <-> kernels import cycle).  Threading the distributed local
+# superstep through this shares the exact iterator body the accelerator
+# kernel executes, so the overlapped local step is the kernel fast path
+# end-to-end (engine backend="kernel" on a mesh).
+_KERNEL_LOGIC: dict = {}
+
+
+def _kernel_logic(it: PulseIterator):
+    fn = _KERNEL_LOGIC.get(it)
+    if fn is None:
+        from repro.kernels.pulse_chase import ops as chase_ops
+
+        fn = _KERNEL_LOGIC[it] = chase_ops.iterator_logic(it)
+    return fn
+
+
 def _local_superstep(
     it: PulseIterator,
     pool: jnp.ndarray,  # (L, R) local request pool
@@ -124,14 +161,23 @@ def _local_superstep(
     *,
     k_local: int,
     max_iters: int,
+    adaptive: bool = False,
+    logic_fn=None,
 ):
-    """Run up to ``k_local`` iterations for locally-owned ACTIVE requests."""
+    """Run up to ``k_local`` iterations for locally-owned ACTIVE requests.
+
+    ``adaptive=True`` exits as soon as no record can make local progress
+    (active, locally owned, non-NULL): the remaining iterations would be
+    identities, so results are bit-identical while remote-heavy supersteps
+    stop paying for dead chase work.  ``logic_fn`` substitutes the
+    pulse_chase kernel's vectorized iterator body for the per-lane vmap.
+    """
     S = it.scratch_words
     lo = bounds[my_shard]
     hi = bounds[my_shard + 1]
     perm_ok = translation.check_access(perms, my_shard, PERM_READ)
 
-    def body(_, st):
+    def step(st):
         ptr, scratch, status, iters = st
         return step_batch(
             it,
@@ -144,15 +190,37 @@ def _local_superstep(
             local_lo=lo,
             local_hi=hi,
             perm_ok=perm_ok,
+            logic_fn=logic_fn,
         )
 
     ptr = pool[:, F_PTR]
     scratch = pool[:, F_SCRATCH:]
     status = pool[:, F_STATUS]
     iters = pool[:, F_ITERS]
-    ptr, scratch, status, iters = jax.lax.fori_loop(
-        0, k_local, body, (ptr, scratch, status, iters)
-    )
+    if adaptive:
+        # chaseable = records a step_batch call could touch (including ones
+        # that would fault on the protection check): skipping is only legal
+        # when the iteration is an identity for every record in the pool
+        def chaseable(ptr, status):
+            return jnp.any(
+                (status == STATUS_ACTIVE) & (ptr >= lo) & (ptr < hi) & (ptr != NULL)
+            )
+
+        def cond(st):
+            i, (ptr, _, status, _) = st
+            return (i < k_local) & chaseable(ptr, status)
+
+        def body(st):
+            i, inner = st
+            return i + 1, step(inner)
+
+        _, (ptr, scratch, status, iters) = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), (ptr, scratch, status, iters))
+        )
+    else:
+        ptr, scratch, status, iters = jax.lax.fori_loop(
+            0, k_local, lambda _, st: step(st), (ptr, scratch, status, iters)
+        )
     pool = pool.at[:, F_PTR].set(ptr)
     pool = pool.at[:, F_SCRATCH:].set(scratch)
     pool = pool.at[:, F_STATUS].set(status)
@@ -160,35 +228,27 @@ def _local_superstep(
     return pool
 
 
-def _route(
+def _route_decide(
     pool: jnp.ndarray,  # (L, R)
     bounds: jnp.ndarray,
     my_shard: jnp.ndarray,
     num_shards: int,
-    axis_name: str,
     *,
     return_to_cpu: bool,
     link_capacity=None,
     phys_capacity: int | None = None,
     drain_done: bool = False,
 ):
-    """Switch routing: deliver records to their next shard via all_to_all.
+    """Switch decision + leaver extraction: the collective-free half of a
+    routed superstep.
 
-    ``link_capacity`` is the per-destination link budget C (records per
-    superstep); the default is the worst-case L // num_shards.  Compacted
-    execution passes a shrunken C once most of the batch has finished, so the
-    BSP payload tracks the live set instead of the original batch.  It may be
-    a *traced* scalar (the fused loop carries the capacity-ladder rung as
-    state); then ``phys_capacity`` fixes the static buffer shape and C only
-    gates which records fit -- the parking schedule is identical to a
-    host-dispatched superstep compiled at capacity C, so results (and even
-    pool layouts) match bit-for-bit.
-
-    ``drain_done`` is the active-set compaction: finished (DONE/FAULT/MAXED)
-    records retire *in place* instead of being routed to their home shard --
-    the final gather collects them from wherever they stopped, so shipping
-    them home only burned link capacity (exactly the waste the paper's switch
-    design avoids by keeping only live traversals in the fabric).
+    Computes each record's next shard, marks switch-level faults, packs the
+    records that fit under the per-link capacity into a ``(P, Cp, R)`` send
+    buffer, and strips them from the local pool.  Returns ``(kept, send,
+    n_routed)`` where ``kept`` is the pool with departed records blanked.
+    The wavefront-pipelined schedule calls this directly so the send buffer
+    can stay in flight across a loop tick; ``_route`` composes it with
+    ``_exchange`` + ``_merge_pools`` for the bulk-synchronous schedule.
     """
     L, R = pool.shape
     if phys_capacity is None:
@@ -249,18 +309,112 @@ def _route(
     kept = pool.at[:, F_STATUS].set(
         jnp.where(fits, jnp.int32(STATUS_EMPTY), pool[:, F_STATUS])
     )
+    return kept, send, fits.sum()
 
-    arrivals = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    arrivals = arrivals.reshape(num_shards * Cp, R)
 
-    # merge: valid records first, then empties; keep L slots (conservation:
-    # total valid records across the mesh is constant == B <= sum of pools).
+def _exchange(
+    send: jnp.ndarray,  # (P, Cp, R) per-destination send buffer
+    axis_name: str,
+    num_shards: int,
+    *,
+    fabric: str = "dense",
+    my_shard=None,
+):
+    """Carry the packed send buffer across the fabric; returns arrivals
+    ``(P * Cp, R)`` ordered by source shard (dense all_to_all layout).
+
+    ``fabric="dense"`` is the paper's programmable-switch model: one
+    all_to_all carries every link at once.  ``fabric="ring"`` decomposes the
+    same exchange into ``P - 1`` ``lax.ppermute`` distance classes -- hop h
+    carries exactly the records travelling h shards forward, so each hop's
+    live payload shrinks with the compaction ladder (the capacity rung gates
+    how many records occupy each (Cp, R) hop buffer).  Arrivals are
+    assembled into the dense layout, so downstream merges (and therefore
+    results, pool layouts, and stats) are bit-identical across fabrics.
+    """
+    Cp, R = send.shape[1], send.shape[2]
+    if fabric == "dense":
+        arrivals = jax.lax.all_to_all(
+            send, axis_name, split_axis=0, concat_axis=0, tiled=True
+        )
+        return arrivals.reshape(num_shards * Cp, R)
+    if fabric != "ring":
+        raise ValueError(f"unknown fabric {fabric!r}")
+    # ring: my own (always-empty) self block stays in place; distance class h
+    # ships send[(me+h) % P] forward h hops and receives from (me-h) % P.
+    arrivals = jnp.broadcast_to(
+        empty_records(1, R - F_SCRATCH)[0], (num_shards, Cp, R)
+    ).astype(jnp.int32)
+    me = my_shard
+    for h in range(1, num_shards):
+        out = jax.lax.dynamic_index_in_dim(
+            send, (me + h) % num_shards, axis=0, keepdims=False
+        )
+        got = jax.lax.ppermute(
+            out, axis_name, perm=[(i, (i + h) % num_shards) for i in range(num_shards)]
+        )
+        arrivals = jax.lax.dynamic_update_index_in_dim(
+            arrivals, got, (me - h) % num_shards, axis=0
+        )
+    return arrivals.reshape(num_shards * Cp, R)
+
+
+def _merge_pools(kept: jnp.ndarray, arrivals: jnp.ndarray, L: int):
+    """Merge arrivals into the local pool: valid records first, then empties;
+    keep L slots (conservation: total valid records across the mesh is
+    constant == B <= sum of pools).  Returns ``(merged, n_dropped_valid)``.
+    """
     both = jnp.concatenate([kept, arrivals], axis=0)
     is_empty = both[:, F_STATUS] == STATUS_EMPTY
     order = jnp.argsort(is_empty, stable=True)
     merged = both[order][:L]
     n_dropped_valid = (~is_empty).sum() - (merged[:, F_STATUS] != STATUS_EMPTY).sum()
-    n_routed = fits.sum()
+    return merged, n_dropped_valid
+
+
+def _route(
+    pool: jnp.ndarray,  # (L, R)
+    bounds: jnp.ndarray,
+    my_shard: jnp.ndarray,
+    num_shards: int,
+    axis_name: str,
+    *,
+    return_to_cpu: bool,
+    link_capacity=None,
+    phys_capacity: int | None = None,
+    drain_done: bool = False,
+    fabric: str = "dense",
+):
+    """Switch routing: deliver records to their next shard in one superstep.
+
+    ``link_capacity`` is the per-destination link budget C (records per
+    superstep); the default is the worst-case L // num_shards.  Compacted
+    execution passes a shrunken C once most of the batch has finished, so the
+    BSP payload tracks the live set instead of the original batch.  It may be
+    a *traced* scalar (the fused loop carries the capacity-ladder rung as
+    state); then ``phys_capacity`` fixes the static buffer shape and C only
+    gates which records fit -- the parking schedule is identical to a
+    host-dispatched superstep compiled at capacity C, so results (and even
+    pool layouts) match bit-for-bit.
+
+    ``drain_done`` is the active-set compaction: finished (DONE/FAULT/MAXED)
+    records retire *in place* instead of being routed to their home shard --
+    the final gather collects them from wherever they stopped, so shipping
+    them home only burned link capacity (exactly the waste the paper's switch
+    design avoids by keeping only live traversals in the fabric).
+    """
+    L = pool.shape[0]
+    kept, send, n_routed = _route_decide(
+        pool, bounds, my_shard, num_shards,
+        return_to_cpu=return_to_cpu,
+        link_capacity=link_capacity,
+        phys_capacity=phys_capacity,
+        drain_done=drain_done,
+    )
+    arrivals = _exchange(
+        send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
+    )
+    merged, n_dropped_valid = _merge_pools(kept, arrivals, L)
     return merged, n_routed, n_dropped_valid
 
 
@@ -282,6 +436,8 @@ def make_superstep(
     link_capacity: int | None = None,
     drain_done: bool = False,
     do_route: bool = True,
+    fabric: str = "dense",
+    local_backend: str = "xla",
 ):
     """Builds the jittable per-shard superstep: local run -> switch route.
 
@@ -294,13 +450,14 @@ def make_superstep(
     Returns ``(pool, n_active, n_routed, n_drop, n_remote)`` -- all counters
     globally psum'd.
     """
+    logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
 
     def superstep(pool, arena_rows, bounds, perms):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         pool = _local_superstep(
             it, pool, arena_rows, bounds, perms, my_shard,
-            k_local=k_local, max_iters=max_iters,
+            k_local=k_local, max_iters=max_iters, logic_fn=logic_fn,
         )
         if do_route:
             pool, n_routed, n_drop = _route(
@@ -308,6 +465,7 @@ def make_superstep(
                 return_to_cpu=return_to_cpu,
                 link_capacity=link_capacity,
                 drain_done=drain_done,
+                fabric=fabric,
             )
         else:
             n_routed = jnp.int32(0)
@@ -335,6 +493,24 @@ def _pow2_at_least_traced(n: jnp.ndarray) -> jnp.ndarray:
         (jnp.asarray(n, jnp.int32) - 1) >= (1 << jnp.arange(31, dtype=jnp.int32))
     ).astype(jnp.int32)
     return jnp.left_shift(jnp.int32(1), bl)
+
+
+def _ladder_traced(
+    n_active, n_remote, *, num_shards: int, base_capacity: int,
+    min_link_capacity: int, compact: bool,
+):
+    """The host loop's capacity ladder on traced stale-by-one counts --
+    the ONE definition every device-resident schedule (fused, pipelined)
+    must share, or their wire accounting and pool layouts desync.
+    Returns ``(capacity, do_route)``."""
+    if not compact:
+        return jnp.int32(base_capacity), jnp.bool_(True)
+    demand = (n_active + num_shards - 1) // num_shards
+    capacity = jnp.minimum(
+        jnp.int32(base_capacity),
+        jnp.maximum(jnp.int32(min_link_capacity), _pow2_at_least_traced(demand)),
+    )
+    return capacity, n_remote > 0
 
 
 # Compiled-executable caches, shared by every distributed_execute caller
@@ -387,6 +563,8 @@ def make_fused_loop(
     min_link_capacity: int,
     return_to_cpu: bool,
     compact: bool,
+    fabric: str = "dense",
+    local_backend: str = "xla",
 ):
     """Builds the whole-traversal device-resident loop (one shard's view).
 
@@ -412,6 +590,7 @@ def make_fused_loop(
         base_capacity,
     )
     rungs_arr = jnp.asarray(rungs, jnp.int32)
+    logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
 
     def fused(pool, arena_rows, bounds, perms):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
@@ -428,28 +607,22 @@ def make_fused_loop(
             pool, n_active, steps, n_routed_tot, n_drop_tot, cap_counts, local_only, n_remote = carry
             pool = _local_superstep(
                 it, pool, arena_rows, bounds, perms, my_shard,
-                k_local=k_local, max_iters=max_iters,
+                k_local=k_local, max_iters=max_iters, logic_fn=logic_fn,
             )
-            if compact:
-                # the host loop's ladder, verbatim, on stale-by-one counts
-                demand = (n_active + num_shards - 1) // num_shards
-                capacity = jnp.minimum(
-                    jnp.int32(base_capacity),
-                    jnp.maximum(
-                        jnp.int32(min_link_capacity), _pow2_at_least_traced(demand)
-                    ),
-                )
-                do_route = n_remote > 0
-            else:
-                capacity = jnp.int32(base_capacity)
-                do_route = jnp.bool_(True)
+            # the host loop's ladder on stale-by-one counts (shared with the
+            # pipelined schedule -- see _ladder_traced)
+            capacity, do_route = _ladder_traced(
+                n_active, n_remote, num_shards=num_shards,
+                base_capacity=base_capacity,
+                min_link_capacity=min_link_capacity, compact=compact,
+            )
 
             def routed(p):
                 return _route(
                     p, bounds, my_shard, num_shards, axis_name,
                     return_to_cpu=return_to_cpu,
                     link_capacity=capacity, phys_capacity=base_capacity,
-                    drain_done=drain_done,
+                    drain_done=drain_done, fabric=fabric,
                 )
 
             def local_only_step(p):
@@ -506,6 +679,191 @@ def capacity_rungs(base_capacity: int, min_link_capacity: int) -> tuple:
     )
 
 
+def make_pipelined_loop(
+    it: PulseIterator,
+    num_shards: int,
+    axis_name: str,
+    *,
+    k_local: int,
+    max_iters: int,
+    max_supersteps: int,
+    base_capacity: int,
+    min_link_capacity: int,
+    return_to_cpu: bool,
+    compact: bool,
+    fabric: str = "dense",
+    local_backend: str = "xla",
+):
+    """Wavefront-pipelined whole-traversal loop (one shard's view).
+
+    The fused loop (``make_fused_loop``) still executes each superstep as a
+    strict sequence -- chase, then exchange, then wait -- so the fabric idles
+    while lanes chase pointers and vice versa.  This schedule splits the
+    active set into two wavefronts and double-buffers them across loop
+    ticks:
+
+      * **wavefront A (in flight)** -- the records extracted by superstep
+        s-1's routing decision ride the fabric as carried loop state (the
+        packed send buffer), landing at the *start* of tick s;
+      * **wavefront B (resident)** -- everything still in the local pool
+        runs superstep s's local chase while A is in flight.  The two have
+        no data dependence, so the collective overlaps the chase.
+
+    Then they swap: the landed wavefront chases, merges back, and superstep
+    s's routing decision extracts the next in-flight wavefront.  Because a
+    record's trajectory is elementwise (chase commutes with the merge
+    permutation) and every scheduling decision -- the pow2 capacity ladder,
+    the local-vs-fabric cond, parking -- is re-derived from the same merged
+    stale-by-one counts as the fused loop, results, pool layouts, superstep
+    counts, and wire accounting are bit-identical to the fused schedule and
+    the BSP oracle.
+
+    Fabric-side coordination is also leaner: the four per-superstep psums
+    collapse into one stacked psum of the two counts the scheduler actually
+    needs next tick (active, remote); routed/dropped totals accumulate
+    per-wavefront in local registers and merge in a single psum after the
+    loop exits.  ``RoutingStats`` wire accounting (cap_counts histogram) is
+    identical -- it tracks routing *decisions*, which are schedule-invariant.
+
+    ``fabric="ring"`` carries the in-flight wavefront on ppermute distance
+    classes instead of the dense all_to_all; ``local_backend="kernel"``
+    threads the local chase through the pulse_chase kernel's vectorized
+    iterator body.  Both compose with the overlap schedule.
+    """
+    drain_done = compact
+    rungs = capacity_rungs(base_capacity, min_link_capacity) if compact else (
+        base_capacity,
+    )
+    rungs_arr = jnp.asarray(rungs, jnp.int32)
+    Cp = base_capacity
+    logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
+
+    def pipelined(pool, arena_rows, bounds, perms):
+        CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
+        my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        L, R = pool.shape
+        n0 = jax.lax.psum(
+            (pool[:, F_STATUS] == STATUS_ACTIVE).sum().astype(jnp.int32), axis_name
+        )
+        empty_send = jnp.broadcast_to(
+            empty_records(1, R - F_SCRATCH)[0], (num_shards, Cp, R)
+        ).astype(jnp.int32)
+
+        def chase(p):
+            return _local_superstep(
+                it, p, arena_rows, bounds, perms, my_shard,
+                k_local=k_local, max_iters=max_iters,
+                adaptive=True, logic_fn=logic_fn,
+            )
+
+        def cond(carry):
+            _, _, _, n_active, _, steps, *_ = carry
+            return (n_active > 0) & (steps < max_supersteps)
+
+        def body(carry):
+            (kept, send, did_route, n_active, n_remote, steps,
+             routed_acc, drop_acc, cap_counts, local_only) = carry
+
+            # --- land wavefront A while wavefront B chases ----------------
+            # Inside the routed branch the exchange consumes only the
+            # carried send buffer and the resident chase only the kept
+            # pool: independent dataflow, so the collective and the local
+            # superstep overlap.  Chase commutes with the merge permutation,
+            # so merging after (instead of before, as the fused loop does)
+            # is bit-identical.
+            def land(ops_):
+                kept, send = ops_
+                arrivals = _exchange(
+                    send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
+                )
+                landed = chase(arrivals)  # wavefront A chases where it landed
+                resident = chase(kept)  # wavefront B chases concurrently
+                return _merge_pools(resident, landed, L)
+
+            def stay(ops_):
+                kept, _ = ops_
+                return chase(kept), jnp.int32(0)
+
+            pool_s, n_drop = jax.lax.cond(did_route, land, stay, (kept, send))
+
+            # --- superstep s's routing decision (the shared ladder) -------
+            capacity, do_route = _ladder_traced(
+                n_active, n_remote, num_shards=num_shards,
+                base_capacity=base_capacity,
+                min_link_capacity=min_link_capacity, compact=compact,
+            )
+
+            def extract(p):
+                return _route_decide(
+                    p, bounds, my_shard, num_shards,
+                    return_to_cpu=return_to_cpu,
+                    link_capacity=capacity, phys_capacity=base_capacity,
+                    drain_done=drain_done,
+                )
+
+            def hold(p):
+                return p, empty_send, jnp.int32(0)
+
+            if compact:
+                kept, send, n_routed = jax.lax.cond(do_route, extract, hold, pool_s)
+            else:
+                kept, send, n_routed = extract(pool_s)
+
+            # --- one stacked psum carries both scheduler counts -----------
+            # n_active spans both wavefronts (in-flight records keep their
+            # status in transit); in-flight records head to their owning
+            # shard, so they contribute nothing remote under compaction
+            # (and n_remote is schedule-dead otherwise).
+            inflight = send.reshape(num_shards * Cp, R)
+            na_local = (
+                (kept[:, F_STATUS] == STATUS_ACTIVE).sum()
+                + (inflight[:, F_STATUS] == STATUS_ACTIVE).sum()
+            ).astype(jnp.int32)
+            nr_local = _remote_active(kept, bounds, my_shard).astype(jnp.int32)
+            counts = jax.lax.psum(jnp.stack([na_local, nr_local]), axis_name)
+
+            cap_counts = cap_counts + jnp.where(
+                do_route, (rungs_arr == capacity).astype(jnp.int32), 0
+            )
+            local_only = local_only + jnp.where(do_route, 0, 1).astype(jnp.int32)
+            return (
+                kept, send, do_route, counts[0], counts[1], steps + 1,
+                routed_acc + n_routed, drop_acc + n_drop, cap_counts, local_only,
+            )
+
+        init = (
+            pool, empty_send, jnp.bool_(False), n0, n0, jnp.int32(0),
+            jnp.int32(0), jnp.int32(0), jnp.zeros(len(rungs), jnp.int32),
+            jnp.int32(0),
+        )
+        (kept, send, did_route, n_active, _, steps,
+         routed_acc, drop_acc, cap_counts, local_only) = jax.lax.while_loop(
+            cond, body, init
+        )
+
+        # land the final in-flight wavefront (loop exit leaves the last
+        # routing decision's records on the wire; no chase -- either nothing
+        # is active, or we hit max_supersteps and the host raises anyway)
+        def final_land(ops_):
+            kept, send = ops_
+            arrivals = _exchange(
+                send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
+            )
+            return _merge_pools(kept, arrivals, kept.shape[0])
+
+        def final_stay(ops_):
+            return ops_[0], jnp.int32(0)
+
+        pool_out, n_drop = jax.lax.cond(did_route, final_land, final_stay, (kept, send))
+
+        # per-wavefront accumulators merge in one post-loop psum
+        n_routed = jax.lax.psum(routed_acc, axis_name)
+        n_dropped = jax.lax.psum(drop_acc + n_drop, axis_name)
+        return pool_out, n_active, steps, n_routed, n_dropped, cap_counts, local_only
+
+    return pipelined
+
+
 def get_fused_runner(
     it: PulseIterator,
     mesh: Mesh,
@@ -521,8 +879,12 @@ def get_fused_runner(
     min_link_capacity: int,
     return_to_cpu: bool,
     compact: bool,
+    schedule: str = "fused",
+    fabric: str = "dense",
+    local_backend: str = "xla",
 ):
-    """Cached, jitted, donated whole-traversal executable.
+    """Cached, jitted, donated whole-traversal executable (fused or
+    wavefront-pipelined schedule).
 
     Key = (iterator, mesh, pool shape, record width, schedule knobs); the
     capacity rung is *traced state* inside the loop, so the ladder costs one
@@ -534,20 +896,34 @@ def get_fused_runner(
     key = (
         it, mesh, axis_name, num_shards, pool_rows, scratch_words, k_local,
         max_iters, max_supersteps, base_capacity, min_link_capacity,
-        return_to_cpu, compact,
+        return_to_cpu, compact, schedule, fabric, local_backend,
     )
     fn = _FUSED_CACHE.get(key)
     if fn is None:
         CACHE_STATS.misses += 1
-        fused = make_fused_loop(
-            it, num_shards, axis_name,
-            k_local=k_local, max_iters=max_iters, max_supersteps=max_supersteps,
-            base_capacity=base_capacity, min_link_capacity=min_link_capacity,
-            return_to_cpu=return_to_cpu, compact=compact,
-        )
+        if schedule == "pipelined":
+            loop = make_pipelined_loop(
+                it, num_shards, axis_name,
+                k_local=k_local, max_iters=max_iters,
+                max_supersteps=max_supersteps,
+                base_capacity=base_capacity,
+                min_link_capacity=min_link_capacity,
+                return_to_cpu=return_to_cpu, compact=compact,
+                fabric=fabric, local_backend=local_backend,
+            )
+        else:
+            loop = make_fused_loop(
+                it, num_shards, axis_name,
+                k_local=k_local, max_iters=max_iters,
+                max_supersteps=max_supersteps,
+                base_capacity=base_capacity,
+                min_link_capacity=min_link_capacity,
+                return_to_cpu=return_to_cpu, compact=compact,
+                fabric=fabric, local_backend=local_backend,
+            )
         fn = jax.jit(
             shard_map_unchecked(
-                fused,
+                loop,
                 mesh=mesh,
                 in_specs=(P(axis_name), P(axis_name), P(), P()),
                 out_specs=(P(axis_name), P(), P(), P(), P(), P(), P()),
@@ -575,8 +951,29 @@ def distributed_execute(
     compact: bool = False,
     min_link_capacity: int = 8,
     fused: bool = False,
+    schedule: str | None = None,
+    fabric: str = "dense",
+    local_backend: str = "xla",
 ):
     """Run a batch of traversals over a range-partitioned arena on a mesh.
+
+    ``schedule`` selects the superstep engine (``fused`` is the boolean
+    shorthand kept for callers predating the pipelined schedule):
+
+      * ``"dispatched"`` -- one jitted superstep per hop, scheduling on host;
+      * ``"fused"``      -- whole traversal as one device-resident
+        ``lax.while_loop`` (chase, then exchange, strictly in sequence);
+      * ``"pipelined"``  -- the fused loop's active set split into two
+        wavefronts, double-buffered so the in-flight wavefront's collective
+        overlaps the resident wavefront's local chase
+        (``make_pipelined_loop``), with fabric-side coordination collapsed
+        to one stacked psum per superstep.
+
+    All three produce bit-identical records, pool layouts, superstep counts,
+    and wire accounting.  ``fabric="ring"`` swaps the dense all_to_all for
+    ``lax.ppermute`` distance classes on any schedule (see ``_exchange``);
+    ``local_backend="kernel"`` threads the device-resident local chase
+    through the pulse_chase kernel's vectorized iterator body.
 
     ``fused=True`` runs the *entire* traversal as one device-resident
     program: the superstep loop becomes a ``lax.while_loop`` inside a single
@@ -612,6 +1009,15 @@ def distributed_execute(
 
     Returns (records (B, R) ordered by request id, RoutingStats).
     """
+    if schedule is None:
+        schedule = "fused" if fused else "dispatched"
+    if schedule not in ("dispatched", "fused", "pipelined"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if fabric not in ("dense", "ring"):
+        raise ValueError(f"unknown fabric {fabric!r}")
+    if local_backend not in ("xla", "kernel"):
+        raise ValueError(f"unknown local_backend {local_backend!r}")
+    fused = schedule in ("fused", "pipelined")
     num_shards = arena.num_shards
     P_axis = mesh.shape[axis_name]
     if P_axis != num_shards:
@@ -665,6 +1071,7 @@ def distributed_execute(
             k_local=k_local, max_iters=max_iters, max_supersteps=max_supersteps,
             base_capacity=base_capacity, min_link_capacity=min_link_capacity,
             return_to_cpu=return_to_cpu, compact=compact,
+            schedule=schedule, fabric=fabric, local_backend=local_backend,
         )
         pool_global, n_active, steps, n_routed, n_drop, cap_counts, local_only = (
             runner(pool_global, arena_data, bounds, perms)
@@ -695,6 +1102,9 @@ def distributed_execute(
             local_only_steps=int(local_only),
             wire_words_total=wire_total,
             fused=True,
+            schedule=schedule,
+            fabric=fabric,
+            num_shards=num_shards,
         )
 
     def get_step(capacity: int | None, do_route: bool):
@@ -703,7 +1113,8 @@ def distributed_execute(
         # cache would recompile the shard_map superstep each round
         key = (
             it, mesh, axis_name, num_shards, k_local, max_iters,
-            return_to_cpu, drain_done, capacity, do_route,
+            return_to_cpu, drain_done, capacity, do_route, fabric,
+            local_backend,
         )
         if key not in _STEP_CACHE:
             CACHE_STATS.misses += 1
@@ -712,7 +1123,7 @@ def distributed_execute(
                 k_local=k_local, max_iters=max_iters,
                 return_to_cpu=return_to_cpu,
                 link_capacity=capacity, drain_done=drain_done,
-                do_route=do_route,
+                do_route=do_route, fabric=fabric, local_backend=local_backend,
             )
             _STEP_CACHE[key] = jax.jit(
                 shard_map(
@@ -780,6 +1191,9 @@ def distributed_execute(
         wire_words_per_step=wire_words_per_step,
         capacity_per_step=capacity_per_step,
         local_only_steps=local_only_steps,
+        schedule=schedule,
+        fabric=fabric,
+        num_shards=num_shards,
     )
 
 
@@ -796,6 +1210,9 @@ def _decode_results(
     local_only_steps: int = 0,
     wire_words_total: int | None = None,
     fused: bool = False,
+    schedule: str = "dispatched",
+    fabric: str = "dense",
+    num_shards: int = 0,
 ):
     """Gather the final pools, order records by request id, build stats."""
     all_rec = np.asarray(pool_global).reshape(-1, record_width(scratch_words))
@@ -814,5 +1231,8 @@ def _decode_results(
         local_only_steps=local_only_steps,
         wire_words_total=wire_words_total,
         fused=fused,
+        schedule=schedule,
+        fabric=fabric,
+        _num_shards=num_shards,
     )
     return all_rec, stats

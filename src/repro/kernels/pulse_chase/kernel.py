@@ -40,11 +40,13 @@ def _chase_kernel(
     ptr_ref,  # (B,)   int32  current pointers
     scratch_ref,  # (B, S) int32  scratch pads
     status_ref,  # (B,)   int32  0 active / 1 done
+    iters_ref,  # (B,)   int32  per-lane iteration counts (accumulated)
     arena_ref,  # (cap, Wp) int32 in ANY/HBM -- the disaggregated heap
     # outputs
     out_ptr_ref,  # (B,)
     out_scratch_ref,  # (B, S)
     out_status_ref,  # (B,)
+    out_iters_ref,  # (B,)
     # scratch
     node_buf,  # (NBUF, G, Wp) int32 VMEM -- landed node records
     copy_sem,  # (NBUF,) DMA semaphores
@@ -61,6 +63,7 @@ def _chase_kernel(
     out_ptr_ref[...] = ptr_ref[...]
     out_scratch_ref[...] = scratch_ref[...]
     out_status_ref[...] = status_ref[...]
+    out_iters_ref[...] = iters_ref[...]
 
     def issue_wave(g, step_ptr):
         """Memory pipeline: start DMAs for wave g's node records."""
@@ -100,15 +103,21 @@ def _chase_kernel(
         ptr = jax.lax.dynamic_slice_in_dim(out_ptr_ref[...], lo, G)
         scr = jax.lax.dynamic_slice_in_dim(out_scratch_ref[...], lo, G)
         st = jax.lax.dynamic_slice_in_dim(out_status_ref[...], lo, G)
+        itc = jax.lax.dynamic_slice_in_dim(out_iters_ref[...], lo, G)
         active = st == 0
         done, nptr, nscr = logic_fn(nodes, ptr, scr)
         ptr = jnp.where(active & ~done, nptr, ptr).astype(jnp.int32)
         scr = jnp.where(active[:, None], nscr, scr).astype(jnp.int32)
         st = jnp.where(active & done, 1, st).astype(jnp.int32)
         st = jnp.where((st == 0) & (ptr < 0), 1, st).astype(jnp.int32)
+        # exact per-lane accounting: every step an active lane executes
+        # counts -- including the step that discovers done (the XLA
+        # executor's runnable-gated increment does the same)
+        itc = jnp.where(active, itc + 1, itc).astype(jnp.int32)
         out_ptr_ref[pl.ds(lo, G)] = ptr
         out_scratch_ref[pl.ds(lo, G), :] = scr
         out_status_ref[pl.ds(lo, G)] = st
+        out_iters_ref[pl.ds(lo, G)] = itc
 
     def step(k, _):
         # snapshot pointers for this traversal step: every wave's fetch uses
@@ -154,6 +163,7 @@ def pulse_chase_pallas(
     ptr: jax.Array,  # (B,) int32
     scratch: jax.Array,  # (B, S)
     status: jax.Array,  # (B,)
+    iters: jax.Array,  # (B,) int32 -- accumulated; returned exact per-lane
     *,
     logic_fn,
     num_steps: int,
@@ -180,8 +190,10 @@ def pulse_chase_pallas(
             pl.BlockSpec(memory_space=TPU_ANY),
             pl.BlockSpec(memory_space=TPU_ANY),
             pl.BlockSpec(memory_space=TPU_ANY),
+            pl.BlockSpec(memory_space=TPU_ANY),
         ],
         out_specs=[
+            pl.BlockSpec(memory_space=TPU_ANY),
             pl.BlockSpec(memory_space=TPU_ANY),
             pl.BlockSpec(memory_space=TPU_ANY),
             pl.BlockSpec(memory_space=TPU_ANY),
@@ -190,10 +202,11 @@ def pulse_chase_pallas(
             jax.ShapeDtypeStruct((B,), jnp.int32),
             jax.ShapeDtypeStruct(scratch.shape, jnp.int32),
             jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((NBUF, wave, Wp), jnp.int32),
             pltpu.SemaphoreType.DMA((NBUF,)),
         ],
         interpret=interpret,
-    )(ptr, scratch, status, arena)
+    )(ptr, scratch, status, iters, arena)

@@ -43,13 +43,14 @@ def iterator_logic(it: PulseIterator):
 @partial(
     jax.jit,
     static_argnames=("logic_fn", "num_steps", "wave", "interpret", "use_pallas"),
-    donate_argnames=("ptr", "scratch", "status"),
+    donate_argnames=("ptr", "scratch", "status", "iters"),
 )
 def _pulse_chase_donated(
     arena_data: jax.Array,
     ptr: jax.Array,
     scratch: jax.Array,
     status: jax.Array,
+    iters: jax.Array,
     *,
     logic_fn,
     num_steps: int,
@@ -59,25 +60,27 @@ def _pulse_chase_donated(
 ):
     """The one compiled executable behind both entry points.
 
-    Lane buffers (ptr/scratch/status) are donated: the wave scheduler owns
-    its padded buffers and rebuilds them per chunk, so XLA may alias them in
-    place.  The arena is never donated -- it is the resident state reused
-    across waves.  Callers that do not own their buffers go through
+    Lane buffers (ptr/scratch/status/iters) are donated: the wave scheduler
+    owns its padded buffers and rebuilds them per chunk, so XLA may alias
+    them in place.  The arena is never donated -- it is the resident state
+    reused across waves.  Callers that do not own their buffers go through
     ``pulse_chase``, which copies first.
     """
     CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
     ptr = jnp.asarray(ptr, jnp.int32)
     scratch = jnp.asarray(scratch, jnp.int32)
     status = jnp.asarray(status, jnp.int32)
+    iters = jnp.asarray(iters, jnp.int32)
     if not use_pallas:
         return chase_reference(
-            arena_data, ptr, scratch, status, logic_fn, num_steps
+            arena_data, ptr, scratch, status, iters, logic_fn, num_steps
         )
     return pulse_chase_pallas(
         jnp.asarray(arena_data, jnp.int32),
         ptr,
         scratch,
         status,
+        iters,
         logic_fn=logic_fn,
         num_steps=num_steps,
         wave=wave,
@@ -90,6 +93,7 @@ def pulse_chase(
     ptr: jax.Array,
     scratch: jax.Array,
     status: jax.Array,
+    iters: jax.Array | None = None,
     *,
     logic_fn,
     num_steps: int,
@@ -99,6 +103,12 @@ def pulse_chase(
 ):
     """Run ``num_steps`` traversal iterations for a batch of lanes.
 
+    Returns ``(ptr, scratch, status, iters)`` -- ``iters`` is the exact
+    per-lane iteration count (accumulated on top of the passed-in counts,
+    zeros when omitted): every step an active lane executes counts,
+    including the step that discovers done, matching the XLA executor's
+    runnable-gated accounting bit-for-bit.
+
     ``use_pallas=False`` falls back to the pure-jnp reference (the XLA path
     models use on CPU); ``interpret=True`` runs the Pallas kernel body in
     interpret mode (CPU validation of the TPU kernel).
@@ -106,11 +116,14 @@ def pulse_chase(
     The caller's lane buffers are copied (``jnp.array``) before entering the
     donating executable, so they stay valid after the call.
     """
+    if iters is None:
+        iters = jnp.zeros(jnp.asarray(ptr).shape, jnp.int32)
     return _pulse_chase_donated(
         arena_data,
         jnp.array(ptr, jnp.int32),
         jnp.array(scratch, jnp.int32),
         jnp.array(status, jnp.int32),
+        jnp.array(iters, jnp.int32),
         logic_fn=logic_fn,
         num_steps=num_steps,
         wave=wave,
@@ -137,9 +150,11 @@ class WaveStats:
     dense_lane_steps: int = 0
     steps_per_chunk: list = dataclasses.field(default_factory=list)
     lanes_per_chunk: list = dataclasses.field(default_factory=list)
-    retire_step: np.ndarray | None = None  # (B,) chunk-granular upper bound
-    # on the step at which each lane retired (0 for NULL-entry lanes; the
-    # total step budget for lanes that never finished)
+    retire_step: np.ndarray | None = None  # (B,) EXACT per-lane iteration
+    # count at retirement (0 for NULL-entry lanes; the executed count for
+    # lanes that never finished), accumulated by the kernel itself -- wave
+    # retirement no longer rounds it up to the chunk boundary, so downstream
+    # hop accounting (ServiceMetrics.lane_iters, ExecResult.iters) is exact
     faulted: np.ndarray | None = None  # (B,) lanes retired by fault_fn
     # (or by a NULL/negative pointer) rather than by finishing
 
@@ -204,11 +219,12 @@ def pulse_chase_waves(
     out_scr = np.asarray(scratch, np.int32).copy()
     out_st = np.asarray(status, np.int32).copy()
     B = out_ptr.shape[0]
+    out_it = np.zeros(B, np.int32)  # exact per-lane counts from the kernel
     faulted = np.zeros(B, bool)
     faulted[(out_st == 0) & (out_ptr < 0)] = True  # NULL entry: fault on arrival
 
     stats = WaveStats(dense_lane_steps=B * max_steps)
-    stats.retire_step = np.zeros(B, np.int32)
+    stats.retire_step = out_it
     stats.faulted = faulted
 
     def _apply_faults(idx):
@@ -230,17 +246,20 @@ def pulse_chase_waves(
         p_in = np.full(padded, -1, np.int32)
         s_in = np.zeros((padded, out_scr.shape[1]), np.int32)
         st_in = np.ones(padded, np.int32)  # padding lanes are born retired
+        it_in = np.zeros(padded, np.int32)
         p_in[:n] = out_ptr[live]
         s_in[:n] = out_scr[live]
         st_in[:n] = 0
+        it_in[:n] = out_it[live]  # kernel accumulates on top: counts stay exact
         # chunk buffers are freshly built above, so hand them straight to the
         # donating executable (no defensive copy); the pow2 lane ladder keeps
         # the executable cache at O(log B) entries across waves
-        p1, s1, st1 = _pulse_chase_donated(
+        p1, s1, st1, it1 = _pulse_chase_donated(
             arena_data,
             jnp.asarray(p_in),
             jnp.asarray(s_in),
             jnp.asarray(st_in),
+            jnp.asarray(it_in),
             logic_fn=logic_fn,
             num_steps=q,
             wave=wave,
@@ -250,12 +269,12 @@ def pulse_chase_waves(
         out_ptr[live] = np.asarray(p1)[:n]
         out_scr[live] = np.asarray(s1)[:n]
         out_st[live] = np.asarray(st1)[:n]
+        out_it[live] = np.asarray(it1)[:n]
         steps_done += q
         stats.chunks += 1
         stats.lane_steps += padded * q
         stats.steps_per_chunk.append(q)
         stats.lanes_per_chunk.append(n)
-        stats.retire_step[live] = steps_done  # overwritten while lane survives
         # lanes the kernel retired on a negative pointer are faults too
         faulted[live[(np.asarray(st1)[:n] == 1) & (np.asarray(p1)[:n] < 0)]] = True
         live = _apply_faults(live[np.asarray(st1)[:n] == 0])

@@ -7,12 +7,14 @@ import jax
 import jax.numpy as jnp
 
 
-def chase_reference(arena, ptr, scratch, status, logic_fn, num_steps: int):
+def chase_reference(arena, ptr, scratch, status, iters, logic_fn, num_steps: int):
     """``logic_fn(nodes (B,W), ptr (B,), scratch (B,S)) -> (done, new_ptr,
-    new_scratch)`` vectorized over lanes.  status: 0 active, 1 done."""
+    new_scratch)`` vectorized over lanes.  status: 0 active, 1 done.
+    ``iters`` accumulates exact per-lane iteration counts: every step an
+    active lane executes counts, including the one that discovers done."""
 
     def body(_, st):
-        ptr, scratch, status = st
+        ptr, scratch, status, iters = st
         active = status == 0
         safe = jnp.clip(ptr, 0, arena.shape[0] - 1)
         nodes = jnp.take(arena, jnp.where(active, safe, 0), axis=0)
@@ -22,6 +24,7 @@ def chase_reference(arena, ptr, scratch, status, logic_fn, num_steps: int):
         status = jnp.where(active & done, 1, status).astype(status.dtype)
         # walking off the structure (NULL) terminates too
         status = jnp.where((status == 0) & (ptr < 0), 1, status).astype(status.dtype)
-        return ptr, scratch, status
+        iters = jnp.where(active, iters + 1, iters).astype(iters.dtype)
+        return ptr, scratch, status, iters
 
-    return jax.lax.fori_loop(0, num_steps, body, (ptr, scratch, status))
+    return jax.lax.fori_loop(0, num_steps, body, (ptr, scratch, status, iters))

@@ -33,6 +33,8 @@ class ServeMetrics:
     steps: int = 0
     tokens_out: int = 0
     wall_s: float = 0.0
+    prefill_calls: int = 0  # jitted prefill invocations (batched admission)
+    prefill_tokens: int = 0  # prompt tokens absorbed through prefill
 
     @property
     def tokens_per_s(self):
@@ -40,15 +42,44 @@ class ServeMetrics:
 
 
 class ContinuousBatcher:
-    """Greedy decoding over a fixed slot count with continuous admission."""
+    """Greedy decoding over a fixed slot count with continuous admission.
 
-    def __init__(self, model, *, max_batch: int, max_len: int, eos_id: int = 1):
+    ``prefill_mode="batched"`` (default) absorbs every admission's prompt in
+    one jitted full-sequence ``model.prefill`` call per distinct prompt
+    length -- admitted slots' cache entries merge into the live cache, other
+    slots are untouched.  ``"token"`` is the legacy slot-isolated path that
+    feeds prompt tokens one by one through ``decode_step`` (one full-batch
+    decode per prompt token); it remains the reference/fallback for models
+    without an LM prefill (e.g. encoder-decoder).
+    """
+
+    def __init__(
+        self,
+        model,
+        *,
+        max_batch: int,
+        max_len: int,
+        eos_id: int = 1,
+        prefill_mode: str = "batched",
+    ):
+        if prefill_mode not in ("batched", "token"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if getattr(model.cfg, "family", None) == "encdec":
+            # encoder-decoder prefill needs acoustic frames, not a token
+            # batch -- keep the slot-isolated decode_step path
+            prefill_mode = "token"
         self.model = model
         self.cfg = model.cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.prefill_mode = prefill_mode
         self._decode = jax.jit(model.decode_step)
+        # one compiled prefill per distinct prompt length; exact lengths (no
+        # padding) keep recurrent-state families (SSM/hybrid) bit-correct
+        self._prefill = jax.jit(
+            lambda params, toks: model.prefill(params, {"tokens": toks}, max_len)
+        )
 
     def serve(self, requests: list[Request]) -> ServeMetrics:
         t0 = time.perf_counter()
@@ -60,25 +91,54 @@ class ContinuousBatcher:
         cur_tok = np.zeros(B, np.int32)
         metrics = ServeMetrics()
 
+        def admit_token(s: int, req: Request):
+            # legacy per-slot prefill: one full-batch decode per prompt token
+            nonlocal cache
+            for t, tok in enumerate(req.prompt):
+                logits, cache2 = self._decode(
+                    self.model_params, cache,
+                    jnp.asarray(np.full(B, tok, np.int32)),
+                    jnp.asarray(np.full(B, t, np.int32)),
+                )
+                cache = _merge_slot(cache, cache2, s)
+            pos[s] = len(req.prompt)
+            lg = np.asarray(logits)[s]
+            cur_tok[s] = int(lg.argmax())
+            req.output.append(int(cur_tok[s]))
+
         def admit():
             nonlocal cache
+            admitted: list[tuple[int, Request]] = []
             for s in range(B):
                 if slot_req[s] is None and queue:
                     req = queue.pop(0)
                     slot_req[s] = req
-                    # per-slot prefill: feed prompt tokens one by one through
-                    # decode_step (slot-isolated; batched prefill is the
-                    # benchmark path)
-                    for t, tok in enumerate(req.prompt):
-                        logits, cache2 = self._decode(
-                            self.model_params, cache,
-                            jnp.asarray(np.full(B, tok, np.int32)),
-                            jnp.asarray(np.full(B, t, np.int32)),
-                        )
-                        cache = _merge_slot(cache, cache2, s)
-                    pos[s] = len(req.prompt)
-                    lg = np.asarray(logits)[s]
-                    cur_tok[s] = int(lg.argmax())
+                    admitted.append((s, req))
+            if not admitted:
+                return
+            if self.prefill_mode == "token":
+                for s, req in admitted:
+                    admit_token(s, req)
+                return
+            # batched prefill: one jitted call per distinct prompt length in
+            # this admission; non-admitted rows carry zeros and their cache
+            # entries are discarded by the slot-wise merge
+            by_len: dict[int, list[tuple[int, Request]]] = {}
+            for s, req in admitted:
+                by_len.setdefault(len(req.prompt), []).append((s, req))
+            for Lp, group in sorted(by_len.items()):
+                toks = np.zeros((B, Lp), np.int32)
+                for s, req in group:
+                    toks[s] = req.prompt
+                logits, cache2 = self._prefill(self.model_params, jnp.asarray(toks))
+                slots = np.array([s for s, _ in group])
+                cache = _merge_slots(cache, cache2, slots)
+                metrics.prefill_calls += 1
+                metrics.prefill_tokens += Lp * len(group)
+                lg = np.asarray(logits)[slots, Lp - 1]
+                for j, (s, req) in enumerate(group):
+                    pos[s] = Lp
+                    cur_tok[s] = int(lg[j].argmax())
                     req.output.append(int(cur_tok[s]))
 
         self.model_params = getattr(self, "model_params", None)
@@ -126,5 +186,17 @@ def _merge_slot(cache_old, cache_new, slot: int):
         idx = [slice(None)] * a.ndim
         idx[1] = slot
         return a.at[tuple(idx)].set(b[tuple(idx)])
+
+    return jax.tree.map(merge, cache_old, cache_new)
+
+
+def _merge_slots(cache_old, cache_new, slots: np.ndarray):
+    """Batched ``_merge_slot``: take every slot in ``slots`` from cache_new,
+    everything else from cache_old (one gather/scatter per cache leaf)."""
+    idx = jnp.asarray(slots)
+
+    def merge(a, b):
+        sel = (slice(None), idx)
+        return a.at[sel].set(b[sel])
 
     return jax.tree.map(merge, cache_old, cache_new)

@@ -150,6 +150,8 @@ class PulseService:
         backend: str = "xla",
         compact: bool = True,
         fused: bool = True,
+        schedule: str = "auto",
+        fabric: str = "dense",
     ):
         if quantum < 1:
             raise ValueError("quantum must be >= 1")
@@ -160,6 +162,11 @@ class PulseService:
         # (structure, slot shape) and reuse the device-resident arena, so
         # steady-state rounds neither retrace nor re-upload the heap
         self.fused = fused
+        # "auto" resolves per-iterator through the dispatch engine's overlap
+        # model -- normally the wavefront-pipelined schedule, which overlaps
+        # the in-flight wavefront's collective with resident local chasing
+        self.schedule = schedule
+        self.fabric = fabric
         self.quantum = quantum
         self.max_request_iters = max_request_iters
         self.groups = {
@@ -252,6 +259,8 @@ class PulseService:
             backend=self.backend,
             compact=self.compact,
             fused=self.fused,
+            schedule=self.schedule,
+            fabric=self.fabric,
         )
         self.metrics.engine_calls += 1
         stats = res.stats

@@ -162,6 +162,92 @@ def check_fused_equivalence_all_structures():
         )
 
 
+def check_pipelined_equivalence_all_structures():
+    """The wavefront-pipelined schedule (and its ppermute-ring fabric) must
+    be bit-identical to the fused serialized schedule AND the BSP oracle for
+    all five structure families: full wire records (id/home/ptr/status/iters/
+    hops/scratch), superstep counts, wire words, and local-only counts.  The
+    pipelined loop re-derives the exact same ladder decisions from the same
+    stale-by-one merged counts; overlap only reorders independent dataflow."""
+    mesh = jax.make_mesh((P,), ("mem",))
+    for name, it, ar, p0, s0, max_iters in _five_structures():
+        o_ptr, o_scr, o_status, o_iters = execute_batched(
+            it, ar, p0, s0, max_iters=max_iters
+        )
+        rec_f, st_f = routing.distributed_execute(
+            it, ar, p0, s0, mesh=mesh, max_iters=max_iters, compact=True,
+            schedule="fused",
+        )
+        for fabric in ("dense", "ring"):
+            rec_p, st_p = routing.distributed_execute(
+                it, ar, p0, s0, mesh=mesh, max_iters=max_iters, compact=True,
+                schedule="pipelined", fabric=fabric,
+            )
+            tag = f"{name}/{fabric}"
+            np.testing.assert_array_equal(rec_p, rec_f, err_msg=tag)
+            np.testing.assert_array_equal(
+                rec_p[:, routing.F_SCRATCH:], np.asarray(o_scr), err_msg=tag
+            )
+            np.testing.assert_array_equal(
+                rec_p[:, routing.F_STATUS], np.asarray(o_status), err_msg=tag
+            )
+            np.testing.assert_array_equal(
+                rec_p[:, routing.F_ITERS], np.asarray(o_iters), err_msg=tag
+            )
+            assert st_p.supersteps == st_f.supersteps, (tag, st_p, st_f)
+            assert st_p.total_wire_words == st_f.total_wire_words, (tag, st_p, st_f)
+            assert st_p.local_only_steps == st_f.local_only_steps, (tag, st_p, st_f)
+            assert st_p.schedule == "pipelined" and st_p.fabric == fabric
+        print(
+            f"pipelined {name} ok (dense+ring): steps={st_p.supersteps} "
+            f"wire={st_p.total_wire_words} local_only={st_p.local_only_steps}"
+        )
+
+
+def check_pipelined_kernel_local_backend():
+    """Threading the local chase through the pulse_chase kernel's vectorized
+    iterator body must not change a bit (list exercises the next/end pair,
+    btree the step_fn ISA path)."""
+    mesh = jax.make_mesh((P,), ("mem",))
+    for name, it, ar, p0, s0, max_iters in _five_structures()[:3]:
+        rec_x, st_x = routing.distributed_execute(
+            it, ar, p0, s0, mesh=mesh, max_iters=max_iters, compact=True,
+            schedule="pipelined", local_backend="xla",
+        )
+        rec_k, st_k = routing.distributed_execute(
+            it, ar, p0, s0, mesh=mesh, max_iters=max_iters, compact=True,
+            schedule="pipelined", local_backend="kernel",
+        )
+        np.testing.assert_array_equal(rec_k, rec_x, err_msg=name)
+        assert st_k.supersteps == st_x.supersteps, name
+    print("pipelined kernel local-backend ok (3 structures)")
+
+
+def check_pipelined_handles_faults():
+    """Switch-level faults retire identically on the pipelined path."""
+    n, B = 64, 16
+    keys = np.arange(n, dtype=np.int32)
+    values = RNG.integers(0, 100, n).astype(np.int32)
+    ar, head = linked_list.build(keys, values, num_shards=P)
+    it = linked_list.find_iterator()
+    q = keys[RNG.integers(0, n, B)].astype(np.int32)
+    ptr0, scr0 = it.init(jnp.asarray(q), head)
+    ptr0 = jnp.asarray(np.where(np.arange(B) % 2 == 0, 10**6, np.asarray(ptr0)))
+    mesh = jax.make_mesh((P,), ("mem",))
+    rec_f, _ = routing.distributed_execute(
+        it, ar, ptr0, scr0, mesh=mesh, max_iters=256, compact=True, schedule="fused"
+    )
+    rec_p, _ = routing.distributed_execute(
+        it, ar, ptr0, scr0, mesh=mesh, max_iters=256, compact=True,
+        schedule="pipelined",
+    )
+    np.testing.assert_array_equal(rec_p, rec_f)
+    from repro.core.iterator import STATUS_FAULT
+
+    assert (rec_p[::2, routing.F_STATUS] == STATUS_FAULT).all()
+    print("pipelined fault ok")
+
+
 def check_fused_handles_faults():
     """Switch-level faults retire identically on the fused path."""
     n, B = 64, 16
@@ -192,4 +278,7 @@ if __name__ == "__main__":
     check_compact_handles_faults()
     check_fused_equivalence_all_structures()
     check_fused_handles_faults()
+    check_pipelined_equivalence_all_structures()
+    check_pipelined_kernel_local_backend()
+    check_pipelined_handles_faults()
     print("ALL COMPACTION CHECKS PASSED")

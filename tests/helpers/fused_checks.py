@@ -136,10 +136,93 @@ def check_donated_pool_consumed():
     print("donation ok: pool consumed, arena resident")
 
 
+def check_pipelined_compiles_once_and_donates():
+    """The wavefront-pipelined executable obeys the same cache + donation
+    contract as the fused one: repeated same-shaped runs are pure cache hits
+    (zero retraces), the handed-in pool buffer is consumed, and the resident
+    arena survives.  Fused and pipelined runners coexist in the cache under
+    distinct schedule keys."""
+    it, ar, ptr0, scr0 = _list_setup()
+    mesh = jax.make_mesh((P,), ("mem",))
+    routing.reset_executable_caches()
+    first, _ = routing.distributed_execute(
+        it, ar, ptr0, scr0, mesh=mesh, max_iters=4096, compact=True,
+        schedule="pipelined",
+    )
+    assert routing.CACHE_STATS.misses == 1
+    routing.CACHE_STATS.reset()
+    for _ in range(3):
+        rec, _ = routing.distributed_execute(
+            it, ar, ptr0, scr0, mesh=mesh, max_iters=4096, compact=True,
+            schedule="pipelined",
+        )
+        np.testing.assert_array_equal(rec, first)
+    assert routing.CACHE_STATS.traces == 0, routing.CACHE_STATS
+    assert routing.CACHE_STATS.misses == 0, routing.CACHE_STATS
+    assert routing.CACHE_STATS.hits == 3, routing.CACHE_STATS
+    # a fused run afterwards compiles its own executable (distinct key),
+    # leaving the pipelined one cached
+    routing.distributed_execute(
+        it, ar, ptr0, scr0, mesh=mesh, max_iters=4096, compact=True,
+        schedule="fused",
+    )
+    assert len(routing._FUSED_CACHE) == 2, list(routing._FUSED_CACHE)
+
+    # donation: call the cached pipelined runner directly with our own pool
+    key = next(k for k in routing._FUSED_CACHE if "pipelined" in k)
+    runner = routing._FUSED_CACHE[key]
+    data, bounds, perms = routing._resident_arena(ar, mesh, "mem")
+    L = 16
+    pool = jax.device_put(
+        routing.empty_records(P * L, it.scratch_words),
+        NamedSharding(mesh, Spec("mem")),
+    )
+    out = runner(pool, data, bounds, perms)
+    jax.block_until_ready(out[0])
+    assert pool.is_deleted(), "pipelined runner must donate the pool buffer"
+    assert not data.is_deleted(), "resident arena must not be donated"
+    print("pipelined cache+donation ok")
+
+
+def check_pipelined_service_quanta_compile_once():
+    """PulseService quanta on the pipelined schedule (the auto default for
+    a meshed engine): one compile, then zero retraces across rounds."""
+    n = 96
+    lkeys = np.arange(n, dtype=np.int32)
+    lvals = RNG.integers(0, 10**6, n).astype(np.int32)
+    ar, head = linked_list.build(lkeys, lvals, num_shards=P, policy="interleaved")
+    mesh = jax.make_mesh((P,), ("mem",))
+    eng = PulseEngine(ar, mesh=mesh)
+    svc = PulseService(
+        eng,
+        {"list": StructureSpec(linked_list.find_iterator(), (head,))},
+        slots_per_structure=8,
+        quantum=4,
+        schedule="pipelined",
+    )
+    svc.run([TraversalRequest(0, "list", int(lkeys[1]))])
+    svc.metrics = type(svc.metrics)()
+    routing.CACHE_STATS.reset()
+    reqs = [
+        TraversalRequest(1 + i, "list", int(lkeys[RNG.integers(0, n)]))
+        for i in range(24)
+    ]
+    m = svc.run(reqs)
+    assert m.completed == 24
+    assert routing.CACHE_STATS.traces == 0, routing.CACHE_STATS
+    assert routing.CACHE_STATS.misses == 0, routing.CACHE_STATS
+    print(
+        f"pipelined service quanta ok: rounds={m.rounds} "
+        f"engine_calls={m.engine_calls} {routing.CACHE_STATS}"
+    )
+
+
 if __name__ == "__main__":
     assert jax.device_count() == P, jax.devices()
     check_repeated_execute_compiles_once()
     check_service_quanta_compile_once()
     check_resident_arena_uploaded_once()
     check_donated_pool_consumed()
+    check_pipelined_compiles_once_and_donates()
+    check_pipelined_service_quanta_compile_once()
     print("ALL FUSED CHECKS PASSED")

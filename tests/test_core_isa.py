@@ -148,6 +148,27 @@ def test_dispatch_offloads_memory_bound_only():
     assert not d2.offload, d2.reason
 
 
+def test_schedule_decision_overlap_model():
+    from repro.core import dispatch
+
+    lst = linked_list.find_iterator()
+    # single node: nothing to overlap
+    d = dispatch.schedule_decision(lst, linked_list.NODE_WORDS, 1)
+    assert d.schedule == "local"
+    # multi-shard: neither the chase nor the fabric phase dominates, so the
+    # wavefront-pipelined schedule hides min(t_local, t_fabric)
+    d = dispatch.schedule_decision(lst, linked_list.NODE_WORDS, 8)
+    assert d.schedule == "pipelined", d.reason
+    assert 0.0 < d.overlap_frac <= 0.5
+    assert d.t_local_ns > 0 and d.t_fabric_ns > 0
+    # when one phase fully dominates, serialized fused wins (no overlap to
+    # harvest): force it via the min_overlap knob
+    d = dispatch.schedule_decision(
+        lst, linked_list.NODE_WORDS, 8, min_overlap=0.99
+    )
+    assert d.schedule == "fused"
+
+
 def test_dispatch_isa_count_is_longest_path():
     from repro.core import dispatch, isa as isa_mod
 

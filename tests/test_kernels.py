@@ -41,7 +41,7 @@ def test_pulse_chase_btree_matches_ref(wave, n_keys, n_queries):
         ar.data, ptr0, scr0, status0, logic_fn=logic, num_steps=height,
         wave=wave, use_pallas=True, interpret=True,
     )
-    for a, b, nm in zip(r_ref, r_pal, ["ptr", "scratch", "status"]):
+    for a, b, nm in zip(r_ref, r_pal, ["ptr", "scratch", "status", "iters"]):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=nm)
     assert (np.asarray(r_pal[2]) == 1).all()  # all done within height steps
     found = np.asarray(r_pal[1])[:, 2]
@@ -66,6 +66,45 @@ def test_pulse_chase_hash_chain(
                             num_steps=32, use_pallas=True, interpret=True)
     np.testing.assert_array_equal(np.asarray(r_ref[1]), np.asarray(r_pal[1]))
     assert np.asarray(r_pal[1])[:, 2].all()
+
+
+def test_pulse_chase_wave_iters_exact_vs_xla():
+    """The wave-scheduled kernel path must report EXACT per-lane iteration
+    counts (not chunk-granular upper bounds): engine backend="kernel" and
+    the XLA executor agree bit-for-bit on iters for done and NULL-terminated
+    lanes, so downstream hop accounting stops over-counting."""
+    from repro.core.engine import PulseEngine
+    from repro.core.iterator import STATUS_DONE
+    from repro.core.structures import hash_table, linked_list
+
+    keys = RNG.choice(np.arange(10**5), size=256, replace=False).astype(np.int32)
+    values = RNG.integers(0, 10**6, 256).astype(np.int32)
+    ar, heads = hash_table.build(keys, values, 8)
+    it = hash_table.find_iterator(8)
+    q = np.concatenate(
+        [keys[:24], RNG.integers(10**5, 10**6, 8).astype(np.int32)]
+    )
+    ptr0, scr0 = it.init(jnp.asarray(q), jnp.asarray(heads))
+    eng = PulseEngine(ar)
+    rx = eng.execute(it, ptr0, scr0, max_iters=256, backend="xla")
+    rk = eng.execute(it, ptr0, scr0, max_iters=256, backend="kernel")
+    np.testing.assert_array_equal(np.asarray(rk.scratch), np.asarray(rx.scratch))
+    np.testing.assert_array_equal(np.asarray(rk.status), np.asarray(rx.status))
+    np.testing.assert_array_equal(
+        np.asarray(rk.iters), np.asarray(rx.iters), err_msg="exact per-lane iters"
+    )
+    # skewed depths actually exercise multiple retirement waves
+    assert rk.stats.chunks > 1 and np.unique(np.asarray(rk.iters)).size > 2
+
+    keys = np.arange(64, dtype=np.int32)
+    ar, head = linked_list.build(keys, keys * 7)
+    it = linked_list.find_iterator()
+    ptr0, scr0 = it.init(jnp.asarray(keys[::4]), head)
+    eng = PulseEngine(ar)
+    rx = eng.execute(it, ptr0, scr0, max_iters=4096, backend="xla")
+    rk = eng.execute(it, ptr0, scr0, max_iters=4096, backend="kernel")
+    assert (np.asarray(rx.status) == STATUS_DONE).all()
+    np.testing.assert_array_equal(np.asarray(rk.iters), np.asarray(rx.iters))
 
 
 # --------------------------- flash_attention --------------------------------
