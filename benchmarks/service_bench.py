@@ -22,6 +22,10 @@ Three experiments:
 
 Run:  PYTHONPATH=src python benchmarks/service_bench.py
       PYTHONPATH=src python benchmarks/service_bench.py --small --json BENCH_service.json
+      PYTHONPATH=src python benchmarks/service_bench.py --arrival poisson:500
+      # open-loop Poisson arrivals (offered rate in req/s) instead of the
+      # closed-loop logical rounds; the realized arrival process is emitted
+      # into the JSON (first step toward the Fig. 7 tail-latency runs)
 """
 
 from __future__ import annotations
@@ -141,7 +145,20 @@ def build_mixed_heap(n_per=2048):
     return arena, structures, keysets
 
 
-def bench_service(n_requests=600, slots=64, quantum=16):
+def parse_arrival(spec: str | None):
+    """``--arrival=poisson:<rps>`` -> ("poisson", rps); None -> closed loop."""
+    if spec is None:
+        return None
+    kind, _, rate = spec.partition(":")
+    if kind != "poisson" or not rate:
+        raise ValueError(f"unknown arrival spec {spec!r} (want poisson:<rps>)")
+    rps = float(rate)
+    if rps <= 0:
+        raise ValueError("poisson rate must be > 0")
+    return ("poisson", rps)
+
+
+def bench_service(n_requests=600, slots=64, quantum=16, arrival=None):
     arena, structures, keysets = build_mixed_heap()
     engine = PulseEngine(arena)
     svc = PulseService(
@@ -167,7 +184,7 @@ def bench_service(n_requests=600, slots=64, quantum=16):
                 query=key,
                 tenant=tenants[i % len(tenants)],
                 deadline_ms=2000.0 if i % 3 == 0 else None,
-                arrive_round=i // (2 * slots),  # open-loop trickle
+                arrive_round=i // (2 * slots),  # closed-loop trickle default
             )
         )
 
@@ -179,8 +196,47 @@ def bench_service(n_requests=600, slots=64, quantum=16):
     svc.run(warm)
     svc.metrics = type(svc.metrics)()  # reset accounting after warmup
 
-    m = svc.run(reqs)
+    arrival_info = {"process": "closed-loop", "rounds_per_wave": 1}
+    if arrival is None:
+        m = svc.run(reqs)
+    else:
+        # open-loop Poisson: exponential inter-arrivals in *wall-clock* time,
+        # submitted when due regardless of service backlog (the Fig. 7
+        # tail-latency regime: the arrival process never waits for the server)
+        _, rps = arrival
+        gaps = RNG.exponential(1.0 / rps, n_requests)
+        t_arr = np.cumsum(gaps)
+        for r in reqs:
+            r.arrive_round = 0
+        t0 = time.perf_counter()
+        nxt = 0
+        while nxt < n_requests or svc._busy():
+            now = time.perf_counter() - t0
+            while nxt < n_requests and t_arr[nxt] <= now:
+                svc.submit(reqs[nxt])
+                nxt += 1
+            if nxt < n_requests and not svc._busy():
+                # idle server, next arrival in the future: wait for it
+                time.sleep(max(0.0, t_arr[nxt] - (time.perf_counter() - t0)))
+                continue
+            svc.step()
+        m = svc.metrics
+        m.wall_s += time.perf_counter() - t0
+        arrival_info = {
+            "process": "poisson",
+            "offered_rps": rps,
+            "achieved_arrival_rps": float(n_requests / t_arr[-1]),
+            "interarrival_mean_ms": float(np.mean(gaps) * 1e3),
+            "interarrival_p99_ms": float(np.percentile(gaps, 99) * 1e3),
+            "arrival_span_s": float(t_arr[-1]),
+        }
     print(f"  {m.summary()}")
+    if arrival is not None:
+        print(
+            f"  open-loop poisson: offered={arrival_info['offered_rps']:.0f} rps "
+            f"achieved={arrival_info['achieved_arrival_rps']:.0f} rps "
+            f"span={arrival_info['arrival_span_s']:.2f}s"
+        )
     for t, d in sorted(m.per_tenant.items()):
         lat = np.asarray(d["latencies_ms"])
         print(
@@ -199,6 +255,7 @@ def bench_service(n_requests=600, slots=64, quantum=16):
         "p99_ms": m.p99_ms,
         "throughput_rps": m.throughput_rps,
         "utilization": m.utilization,
+        "arrival": arrival_info,
     }
 
 
@@ -274,15 +331,27 @@ def main(argv=None):
         action="store_true",
         help="CI smoke sizes (faster, same assertions)",
     )
+    ap.add_argument(
+        "--arrival",
+        default=None,
+        metavar="SPEC",
+        help="open-loop arrival process for the service experiment, e.g. "
+        "'poisson:500' (500 req/s offered); default is closed-loop rounds",
+    )
     args = ap.parse_args(argv)
+    arrival = parse_arrival(args.arrival)
 
     print("[1/3] compacted supersteps vs bulk-synchronous baseline")
     r1 = bench_compacted_routing(
         **({"n": 512, "B": 128} if args.small else {})
     )
-    print("[2/3] PulseService: mixed 4-structure workload")
+    print(
+        "[2/3] PulseService: mixed 4-structure workload"
+        + (f" (open-loop {args.arrival})" if arrival else "")
+    )
     r2 = bench_service(
-        **({"n_requests": 150, "slots": 32} if args.small else {})
+        arrival=arrival,
+        **({"n_requests": 150, "slots": 32} if args.small else {}),
     )
     print("[3/3] LM admission: batched prefill vs token-by-token")
     r3 = bench_batched_prefill(

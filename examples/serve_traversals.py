@@ -5,7 +5,10 @@ server):
 
   * four structure families live in ONE pooled arena (the disaggregated
     heap);
-  * three tenants submit find() traffic, one with tight deadlines;
+  * tenants submit find() traffic, one with tight deadlines -- and a writer
+    tenant inserts fresh list keys through the write path (staged mutations
+    + commit supersteps), barriered per structure group so its batch owns
+    the "list" group exclusively while it runs;
   * PulseService admits requests into per-structure slot groups, runs each
     group a quantum of iterations per round, retires finished traversals
     (backfilling the slot), and resumes the rest as continuations.
@@ -41,7 +44,10 @@ arena = b.finish()
 service = PulseService(
     PulseEngine(arena),
     {
-        "list": StructureSpec(linked_list.find_iterator(), (head,)),
+        "list": StructureSpec(linked_list.find_iterator(), (head,), group="list"),
+        "list_insert": StructureSpec(
+            linked_list.insert_iterator(), (head,), group="list", takes_value=True
+        ),
         "btree": StructureSpec(btree.find_iterator(), (root,)),
         "hash": StructureSpec(hash_table.find_iterator(128), (jnp.asarray(heads),)),
         "skip": StructureSpec(skiplist.find_iterator(), (shead,)),
@@ -66,10 +72,33 @@ for i in range(200):
         )
     )
 
-metrics = service.run(requests)
+# a writer tenant appends fresh keys, then reads them back in the same run
+inserts = [
+    TraversalRequest(
+        req_id=1000 + j, structure="list_insert", query=10**7 + j,
+        value=j * 11, tenant="writer",
+    )
+    for j in range(16)
+]
+readbacks = [
+    TraversalRequest(
+        req_id=2000 + j, structure="list", query=10**7 + j, tenant="writer"
+    )
+    for j in range(16)
+]
+
+metrics = service.run(requests + inserts + readbacks)
 print(metrics.summary())
-found = sum(int(r.result[2]) for r in requests if r.structure != "btree")
-print(f"found flags set on {found} non-btree requests")
+found = sum(
+    int(r.result[2]) for r in requests if r.structure != "btree"
+)
+print(f"found flags set on {found} non-btree find requests")
+print(
+    f"write path: {metrics.writes_retired} inserts retired, "
+    f"{metrics.commits} mutations committed"
+)
+ok = sum(int(r.result[1] == (r.req_id - 2000) * 11) for r in readbacks)
+print(f"read-your-writes: {ok}/16 readbacks saw the inserted value")
 for tenant, d in sorted(metrics.per_tenant.items()):
     lat = np.asarray(d["latencies_ms"])
     print(f"  {tenant}: {d['completed']} done, p50 {np.percentile(lat, 50):.1f} ms")

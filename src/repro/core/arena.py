@@ -38,6 +38,39 @@ MAX_NODE_WORDS = 64  # 256 B of int32 words: the paper's max aggregated LOAD.
 PERM_READ = 1
 PERM_WRITE = 2
 
+# ---------------------------------------------------------------------------
+# Write path: staged-mutation opcodes (S4.1 footnote 4 / the modification
+# iterators).  A mutating traversal never writes the heap directly -- it
+# *stages* one mutation per iteration into its request record and stalls; the
+# owning shard applies staged mutations in a serialized per-shard commit
+# phase at the end of each superstep (core.commit), which is how concurrent
+# writers to one shard serialize deterministically while readers in the same
+# superstep still see the pre-commit snapshot.
+M_NONE = 0  # no pending mutation
+M_STORE = 1  # blind masked store: node[m_tgt][w] <- m_data[w] for mask bits w
+M_CAS = 2  # conditional store: applies iff node[m_tgt][lowest mask bit]
+#            == m_expect (the link-swing primitive; failure is observed by
+#            the iterator's validate iteration, never by a status code)
+M_ALLOC = 3  # claim a free-list slot on the record's HOME shard, write the
+#            masked m_data into it, and deposit the new global address into
+#            scratch[m_tgt]
+M_FREE = 4  # push node m_tgt onto its owning shard's free list (slot is
+#            zeroed; word 0 becomes the free-list link)
+
+MUT_EXTRA = 4  # payload words beyond node data: [m_op, m_tgt, m_mask, m_expect]
+
+# Per-shard heap registers carried through mutating supersteps:
+# [free_head (global addr | NULL), bump (next never-used global addr),
+#  epoch (commit phases that applied >=1 mutation -- the paper's per-node
+#  lock generation stand-in), commits (mutations applied)]
+HEAP_WORDS = 4
+H_FREE, H_BUMP, H_EPOCH, H_COMMITS = 0, 1, 2, 3
+
+
+def mut_width(node_words: int) -> int:
+    """Mutation-payload words a write-capable record carries."""
+    return MUT_EXTRA + node_words
+
 
 def f2i(x):
     """Bitcast float32 -> int32 (store a float in an int32 arena/scratch word)."""
@@ -65,6 +98,7 @@ class Arena:
     data: jax.Array  # (capacity, node_words) int32
     bounds: jax.Array  # (num_shards + 1,) int32, sorted; switch base table
     perms: jax.Array  # (num_shards,) int32 permission bitmask
+    heap: jax.Array  # (num_shards, HEAP_WORDS) int32 allocator/commit state
 
     @property
     def capacity(self) -> int:
@@ -84,6 +118,7 @@ def make_arena(
     num_shards: int = 1,
     bounds: Sequence[int] | None = None,
     perms: Sequence[int] | None = None,
+    heap: jax.Array | np.ndarray | None = None,
 ) -> Arena:
     data = jnp.asarray(data, jnp.int32)
     if data.ndim != 2:
@@ -101,10 +136,18 @@ def make_arena(
         bounds = [i * per for i in range(num_shards)] + [cap]
     if perms is None:
         perms = [PERM_READ | PERM_WRITE] * (len(bounds) - 1)
+    if heap is None:
+        # raw arenas are treated as fully occupied: no free list, bump at the
+        # shard end, so ALLOC commits fault instead of clobbering live rows.
+        # Builders that know their occupancy pass real cursors (ArenaBuilder).
+        heap = np.zeros((len(bounds) - 1, HEAP_WORDS), np.int32)
+        heap[:, H_FREE] = NULL
+        heap[:, H_BUMP] = np.asarray(bounds[1:], np.int32)
     return Arena(
         data=data,
         bounds=jnp.asarray(bounds, jnp.int32),
         perms=jnp.asarray(perms, jnp.int32),
+        heap=jnp.asarray(heap, jnp.int32),
     )
 
 
@@ -155,6 +198,7 @@ class ArenaBuilder:
         self.policy = policy
         self.data = np.zeros((capacity, node_words), np.int32)
         self.per_shard = capacity // num_shards
+        self._free: list[int] = []  # LIFO free list (host twin of M_FREE)
         if policy == "sequential":
             self._next = 0
         elif policy == "interleaved":
@@ -165,8 +209,28 @@ class ArenaBuilder:
         else:
             raise ValueError(f"unknown allocation policy {policy!r}")
 
+    def free(self, ptrs) -> None:
+        """Host twin of the device FREE commit: zero the slots and push them
+        onto the free list (LIFO), so a later ``alloc`` reuses them before
+        touching never-used capacity -- exactly the device allocator's
+        pop-free-then-bump order."""
+        for p in np.atleast_1d(np.asarray(ptrs, np.int64)):
+            p = int(p)
+            if not (0 <= p < self.capacity):
+                raise ValueError(f"free of out-of-range slot {p}")
+            self.data[p] = 0
+            self._free.append(p)
+
     def alloc(self, n: int = 1) -> np.ndarray:
         """Returns the global addresses of ``n`` new nodes."""
+        if self._free:
+            take = min(n, len(self._free))
+            out = np.asarray(
+                [self._free.pop() for _ in range(take)], np.int32
+            )
+            if take == n:
+                return out
+            return np.concatenate([out, self.alloc(n - take)])
         if self.policy == "sequential":
             if self._next + n > self.capacity:
                 raise MemoryError("arena exhausted")
@@ -201,4 +265,25 @@ class ArenaBuilder:
             self.data[np.asarray(ptrs), w:] = 0
 
     def finish(self, perms: Sequence[int] | None = None) -> Arena:
-        return make_arena(self.data, num_shards=self.num_shards, perms=perms)
+        """Freeze into an Arena, threading the allocator state into the
+        per-shard heap registers so device-side ALLOC/FREE commits continue
+        exactly where host-side construction stopped."""
+        heap = np.zeros((self.num_shards, HEAP_WORDS), np.int32)
+        heap[:, H_FREE] = NULL
+        for s in range(self.num_shards):
+            lo, hi = s * self.per_shard, (s + 1) * self.per_shard
+            if self.policy == "sequential":
+                heap[s, H_BUMP] = min(max(self._next, lo), hi)
+            else:
+                heap[s, H_BUMP] = int(self._cursor[s])
+        # thread outstanding host frees into the intrusive per-shard chains
+        # (word 0 of a freed slot is the next-free link); LIFO order is
+        # preserved so device pops mirror host pops
+        for p in self._free:
+            s = p // self.per_shard
+            self.data[p] = 0
+            self.data[p, 0] = heap[s, H_FREE]
+            heap[s, H_FREE] = p
+        return make_arena(
+            self.data, num_shards=self.num_shards, perms=perms, heap=heap
+        )

@@ -1,0 +1,407 @@
+"""Sequential-commit oracle for the write path (the determinism contract).
+
+``sequential_commit_execute`` re-implements the distributed superstep
+schedule -- placement, local chase, commit, capacity ladder, parking,
+exchange, merge -- as a *sequential* host program: shards are visited one at
+a time and every staged mutation is applied strictly one-at-a-time in the
+canonical (class, slot, id) order with plain numpy stores.  No mesh, no
+collectives, no vectorized scatter.
+
+This is the bar every device schedule must clear: dispatched, fused, and
+wavefront-pipelined supersteps, on the dense all_to_all or the ppermute
+ring, must match this executor **bit for bit** -- records (ptr / scratch /
+status / iters / hops), superstep counts, wire accounting, and the final
+arena contents including the per-shard heap registers.  The iterator *body*
+is shared (it defines the traversal semantics); the schedule, routing, and
+commit logic here are written independently of ``core.routing``'s traced
+implementations, so agreement actually checks the device-side serialization.
+
+It doubles as the single-memory-node write executor: ``PulseEngine.execute``
+runs mutating iterators through it when no mesh is configured (num_shards
+== 1 degenerates to chase-k / commit-in-id-order rounds).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import routing
+from repro.core.arena import (
+    H_BUMP,
+    H_COMMITS,
+    H_EPOCH,
+    H_FREE,
+    M_ALLOC,
+    M_CAS,
+    M_FREE,
+    M_NONE,
+    M_STORE,
+    NULL,
+    PERM_READ,
+    PERM_WRITE,
+    Arena,
+    mut_width,
+)
+from repro.core.iterator import (
+    STATUS_ACTIVE,
+    STATUS_EMPTY,
+    STATUS_FAULT,
+    PulseIterator,
+    mut_step_batch,
+    step_batch,
+)
+
+F_ID = routing.F_ID
+F_HOME = routing.F_HOME
+F_PTR = routing.F_PTR
+F_STATUS = routing.F_STATUS
+F_ITERS = routing.F_ITERS
+F_HOPS = routing.F_HOPS
+F_SCRATCH = routing.F_SCRATCH
+
+# jitted per-(iterator, max_iters) chase step: the iterator body is the one
+# piece deliberately shared with the device path (it IS the semantics)
+_CHASE_JIT: dict = {}
+
+
+def _chase_step(it: PulseIterator, max_iters: int):
+    key = (it, max_iters, it.mutates)
+    fn = _CHASE_JIT.get(key)
+    if fn is None:
+        if it.mutates:
+            def fn(rows, ptr, scr, st, iters, mut, lo, hi, perm):
+                return mut_step_batch(
+                    it, rows, ptr, scr, st, iters, mut, max_iters=max_iters,
+                    local_lo=lo, local_hi=hi, perm_ok=perm,
+                )
+        else:
+            def fn(rows, ptr, scr, st, iters, lo, hi, perm):
+                return step_batch(
+                    it, rows, ptr, scr, st, iters, max_iters=max_iters,
+                    local_lo=lo, local_hi=hi, perm_ok=perm,
+                )
+        fn = _CHASE_JIT[key] = jax.jit(fn)
+    return fn
+
+
+def _owner_of(bounds: np.ndarray, ptr: np.ndarray) -> np.ndarray:
+    shard = np.searchsorted(bounds, ptr, side="right").astype(np.int64) - 1
+    P = len(bounds) - 1
+    valid = (ptr >= 0) & (ptr < bounds[-1]) & (shard >= 0) & (shard < P)
+    return np.where(valid, shard, NULL).astype(np.int32)
+
+
+def _commit_shard(pool, data, heap, s, lo, hi, perm_w, *, S, W, MB):
+    """Apply shard ``s``'s eligible commits one at a time, in the canonical
+    (class, slot, id) order.  Mutates pool/data/heap in place; returns the
+    number of commit slots consumed (CAS misses included)."""
+    m_op = pool[:, MB]
+    m_tgt = pool[:, MB + 1]
+    status = pool[:, F_STATUS]
+    pend = (m_op != M_NONE) & (status != STATUS_EMPTY)
+    is_alloc = m_op == M_ALLOC
+    eligible = pend & np.where(
+        is_alloc, pool[:, F_HOME] == s, (m_tgt >= lo) & (m_tgt < hi)
+    )
+    if not eligible.any():
+        return 0
+    if not perm_w:
+        pool[eligible, F_STATUS] = STATUS_FAULT
+        pool[eligible, MB] = M_NONE
+        return 0
+    klass = np.where(is_alloc, 2, np.where(m_op == M_FREE, 1, 0))
+    slot_key = np.where(is_alloc, 0, m_tgt)
+    order = np.lexsort(
+        (pool[:, F_ID], slot_key, klass, (~eligible).astype(np.int32))
+    )
+    applied = 0
+    for r in order:
+        if not eligible[r]:
+            break  # eligible records sort first
+        op = int(pool[r, MB])
+        tgt = int(pool[r, MB + 1])
+        mask = int(pool[r, MB + 2])
+        expect = int(pool[r, MB + 3])
+        mdata = pool[r, MB + 4 : MB + 4 + W]
+        maskb = ((mask >> np.arange(W)) & 1).astype(bool)
+        if op in (M_STORE, M_CAS):
+            old = data[tgt]
+            if op == M_STORE or int(old[int(np.argmax(maskb))]) == expect:
+                data[tgt] = np.where(maskb, mdata, old)
+        elif op == M_FREE:
+            row = np.zeros(W, np.int32)
+            row[0] = heap[s, H_FREE]
+            data[tgt] = row
+            heap[s, H_FREE] = tgt
+        elif op == M_ALLOC:
+            if heap[s, H_FREE] != NULL:
+                slot = int(heap[s, H_FREE])
+                heap[s, H_FREE] = data[slot, 0]
+            elif heap[s, H_BUMP] < hi:
+                slot = int(heap[s, H_BUMP])
+                heap[s, H_BUMP] += 1
+            else:
+                pool[r, F_STATUS] = STATUS_FAULT
+                pool[r, MB] = M_NONE
+                applied += 1
+                continue
+            data[slot] = np.where(maskb, mdata, 0)
+            pool[r, F_SCRATCH + min(max(tgt, 0), S - 1)] = slot
+        pool[r, MB] = M_NONE
+        applied += 1
+    heap[s, H_EPOCH] += int(applied > 0)
+    heap[s, H_COMMITS] += applied
+    return applied
+
+
+def _decide_and_send(pool, bounds, s, P, *, capacity, drain_done, MB):
+    """Numpy port of the switch decision (``_route_decide``): fault-mark,
+    compute destinations (staged mutations route to their commit shard),
+    park overflow, extract leavers.  Returns the per-destination send lists
+    and blanks leavers in place."""
+    status = pool[:, F_STATUS]
+    valid = status != STATUS_EMPTY
+    active = status == STATUS_ACTIVE
+
+    if MB is not None:
+        m_op = pool[:, MB]
+        pendm = m_op != M_NONE
+        is_alloc = m_op == M_ALLOC
+        towner = _owner_of(bounds, pool[:, MB + 1])
+    else:
+        pendm = np.zeros(len(pool), bool)
+
+    owner = _owner_of(bounds, pool[:, F_PTR])
+    bad = active & (owner == NULL) & ~pendm
+    if MB is not None:
+        bad_mut = active & pendm & ~is_alloc & (towner == NULL)
+        bad = bad | bad_mut
+        pool[bad_mut, MB] = M_NONE
+        pendm = pendm & ~bad_mut
+    pool[bad, F_STATUS] = STATUS_FAULT
+    status = pool[:, F_STATUS]
+    active = status == STATUS_ACTIVE
+
+    if drain_done:
+        dest = np.where(active, owner, s)
+    else:
+        dest = np.where(active, owner, pool[:, F_HOME])
+    if MB is not None:
+        cdest = np.where(is_alloc, pool[:, F_HOME], towner)
+        dest = np.where(active & pendm, cdest, dest)
+    dest = np.where(valid, dest, s).astype(np.int32)
+
+    moves = valid & (dest != s)
+    send = [[] for _ in range(P)]
+    n_routed = 0
+    fill = np.zeros(P, np.int64)
+    for r in range(len(pool)):
+        if not moves[r]:
+            continue
+        d = int(dest[r])
+        if fill[d] < capacity:  # fits under the link budget
+            pool[r, F_HOPS] += 1
+            send[d].append(pool[r].copy())
+            pool[r, F_STATUS] = STATUS_EMPTY
+            fill[d] += 1
+            n_routed += 1
+        # overflow parks in place for the next superstep
+    return send, n_routed
+
+
+def _merge(kept, arrivals, L):
+    both = np.concatenate([kept, arrivals], axis=0) if len(arrivals) else kept
+    is_empty = both[:, F_STATUS] == STATUS_EMPTY
+    order = np.argsort(is_empty, kind="stable")
+    merged = both[order][:L]
+    dropped = int((~is_empty).sum()) - int(
+        (merged[:, F_STATUS] != STATUS_EMPTY).sum()
+    )
+    return merged, dropped
+
+
+def _remote_count(pool, bounds, s, MB):
+    active = pool[:, F_STATUS] == STATUS_ACTIVE
+    owner = _owner_of(bounds, pool[:, F_PTR])
+    if MB is not None:
+        m_op = pool[:, MB]
+        pendm = m_op != M_NONE
+        towner = np.where(
+            m_op == M_ALLOC, pool[:, F_HOME], _owner_of(bounds, pool[:, MB + 1])
+        )
+        owner = np.where(pendm, towner, owner)
+    return int((active & (owner != s)).sum())
+
+
+def sequential_commit_execute(
+    it: PulseIterator,
+    arena: Arena,
+    ptr0,
+    scratch0,
+    *,
+    max_iters: int = 1 << 30,
+    k_local: int = 4,
+    max_supersteps: int = 1 << 16,
+    compact: bool = True,
+    min_link_capacity: int = 8,
+):
+    """Run a batch to completion under the sequential-commit schedule.
+
+    Returns ``(records (B, R) ordered by id, RoutingStats, new Arena)`` for
+    mutating iterators, or ``(records, RoutingStats)`` for read-only ones --
+    mirroring ``routing.distributed_execute``'s contract so tests can
+    compare the two outputs directly.  The input arena is never modified.
+    """
+    P = arena.num_shards
+    bounds = np.asarray(arena.bounds)
+    perms = np.asarray(arena.perms)
+    data = np.array(arena.data)  # private copy: the mutated heap
+    heap = np.array(arena.heap)
+    commits0 = int(heap[:, H_COMMITS].sum())
+    epochs0 = int(heap[:, H_EPOCH].sum())
+    mutate = it.mutates
+    S = it.scratch_words
+    W = data.shape[1]
+    MW = mut_width(W) if mutate else 0
+    MB = F_SCRATCH + S if mutate else None
+    R = routing.record_width(S, MW)
+
+    ptr0 = np.asarray(ptr0, np.int32)
+    scratch0 = np.asarray(scratch0, np.int32).reshape(len(ptr0), S)
+    B = len(ptr0)
+    Bp = ((B + P - 1) // P) * P
+    L = Bp
+    rec = np.zeros((Bp, R), np.int32)
+    rec[:, F_STATUS] = STATUS_EMPTY
+    rec[:B, F_ID] = np.arange(B)
+    rec[:B, F_PTR] = ptr0
+    rec[:B, F_STATUS] = STATUS_ACTIVE
+    rec[:B, F_SCRATCH : F_SCRATCH + S] = scratch0
+    home = np.arange(Bp, dtype=np.int32) % P
+    rec[:, F_HOME] = home
+    order = np.argsort(home, kind="stable")
+    rec_sorted = rec[order]
+    counts = np.bincount(home, minlength=P)
+    pools = np.zeros((P, L, R), np.int32)
+    pools[:, :, F_STATUS] = STATUS_EMPTY
+    off = 0
+    for s in range(P):
+        c = int(counts[s])
+        pools[s, :c] = rec_sorted[off : off + c]
+        off += c
+
+    base_capacity = L // P
+    chase = _chase_step(it, max_iters)
+    readable = (perms & PERM_READ) == PERM_READ
+    writable = (perms & PERM_WRITE) == PERM_WRITE
+
+    routed_per_step, active_per_step = [], []
+    wire_words_per_step, capacity_per_step = [], []
+    local_only_steps = 0
+    steps = 0
+    n_active, n_remote = B, B
+    for _ in range(max_supersteps):
+        # ---- local phase: chase then commit, shard by shard ---------------
+        for s in range(P):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            pool = pools[s]
+            args = [
+                jnp.asarray(data[lo:hi]),
+                jnp.asarray(pool[:, F_PTR]),
+                jnp.asarray(pool[:, F_SCRATCH : F_SCRATCH + S]),
+                jnp.asarray(pool[:, F_STATUS]),
+                jnp.asarray(pool[:, F_ITERS]),
+            ]
+            if mutate:
+                args.append(jnp.asarray(pool[:, MB:]))
+            args += [jnp.int32(lo), jnp.int32(hi), jnp.asarray(bool(readable[s]))]
+            for _k in range(k_local):
+                out = chase(*args[:1], *args[1:])
+                args[1 : 1 + len(out)] = [*out]
+            pool[:, F_PTR] = np.asarray(args[1])
+            pool[:, F_SCRATCH : F_SCRATCH + S] = np.asarray(args[2])
+            pool[:, F_STATUS] = np.asarray(args[3])
+            pool[:, F_ITERS] = np.asarray(args[4])
+            if mutate:
+                pool[:, MB:] = np.asarray(args[5])
+                _commit_shard(
+                    pool, data, heap, s, lo, hi, bool(writable[s]),
+                    S=S, W=W, MB=MB,
+                )
+
+        # ---- switch phase: the same ladder, sequentially ------------------
+        if compact:
+            demand = (n_active + P - 1) // P
+            capacity = min(
+                base_capacity,
+                max(min_link_capacity, routing._pow2_at_least(demand)),
+            )
+            do_route = n_remote > 0
+        else:
+            capacity, do_route = base_capacity, True
+        if do_route:
+            sends = []
+            n_routed = 0
+            for s in range(P):
+                send, routed = _decide_and_send(
+                    pools[s], bounds, s, P,
+                    capacity=capacity, drain_done=compact, MB=MB,
+                )
+                sends.append(send)
+                n_routed += routed
+            for d in range(P):
+                arrivals = [row for s in range(P) for row in sends[s][d]]
+                arrivals = (
+                    np.asarray(arrivals, np.int32).reshape(-1, R)
+                    if arrivals else np.zeros((0, R), np.int32)
+                )
+                pools[d], dropped = _merge(pools[d], arrivals, L)
+                if dropped:
+                    raise RuntimeError(f"oracle pool overflow: {dropped}")
+        else:
+            n_routed = 0
+
+        steps += 1
+        n_active = int((pools[:, :, F_STATUS] == STATUS_ACTIVE).sum())
+        n_remote = sum(_remote_count(pools[s], bounds, s, MB) for s in range(P))
+        routed_per_step.append(n_routed)
+        active_per_step.append(n_active)
+        capacity_per_step.append(capacity if do_route else 0)
+        wire_words_per_step.append(P * (P - 1) * capacity * R if do_route else 0)
+        local_only_steps += int(not do_route)
+        if n_active == 0:
+            break
+    else:
+        raise RuntimeError(
+            f"sequential_commit_execute: {n_active} records still ACTIVE "
+            f"after max_supersteps={max_supersteps}"
+        )
+
+    all_rec = pools.reshape(-1, R)
+    all_rec = all_rec[all_rec[:, F_STATUS] != STATUS_EMPTY]
+    all_rec = all_rec[all_rec[:, F_ID] < B]
+    all_rec = all_rec[np.argsort(all_rec[:, F_ID], kind="stable")]
+    stats = routing.RoutingStats(
+        supersteps=steps,
+        crossings=all_rec[:, F_HOPS].copy(),
+        routed_per_step=routed_per_step,
+        active_per_step=active_per_step,
+        wire_words_per_step=wire_words_per_step,
+        capacity_per_step=capacity_per_step,
+        local_only_steps=local_only_steps,
+        schedule="sequential-oracle",
+        commits=int(heap[:, H_COMMITS].sum()) - commits0,
+        epochs=int(heap[:, H_EPOCH].sum()) - epochs0,
+        _num_shards=P,
+    )
+    if not mutate:
+        return all_rec, stats
+    new_arena = Arena(
+        data=jnp.asarray(data),
+        bounds=arena.bounds,
+        perms=arena.perms,
+        heap=jnp.asarray(heap),
+    )
+    return all_rec, stats, new_arena

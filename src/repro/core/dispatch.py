@@ -88,8 +88,9 @@ def count_instructions(it: PulseIterator, node_words: int) -> int:
     Traced iterators: weighted jaxpr op count (see _op_cost).
     """
     # ISA path: exact DAG longest path.
-    if getattr(it, "step_fn", None) is not None and hasattr(it.step_fn, "__wrapped_program__"):
-        return isa_longest_path(it.step_fn.__wrapped_program__)
+    for fn in (getattr(it, "step_fn", None), getattr(it, "mut_fn", None)):
+        if fn is not None and hasattr(fn, "__wrapped_program__"):
+            return isa_longest_path(fn.__wrapped_program__)
 
     node = jax.ShapeDtypeStruct((node_words,), jnp.int32)
     ptr = jax.ShapeDtypeStruct((), jnp.int32)
@@ -98,6 +99,10 @@ def count_instructions(it: PulseIterator, node_words: int) -> int:
     def depth(fn) -> int:
         jaxpr = jax.make_jaxpr(fn)(node, ptr, scratch)
         return _critical_path(jaxpr.jaxpr)
+
+    # mutating iterators: the fused read-modify-stage body is the circuit
+    if getattr(it, "mut_fn", None) is not None:
+        return depth(it.mut_fn) + 2
 
     # end() and next() share the fetched node: the circuit evaluates them
     # side by side; latency adds only along the dependency chain.  We charge

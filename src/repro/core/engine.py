@@ -120,6 +120,10 @@ class ExecResult:
     iters: np.ndarray
     stats: object | None = None
     offloaded: bool = True
+    # write path: the post-commit arena (mutating iterators only).  The
+    # engine already swapped its own resident arena to this value; callers
+    # holding the pre-call Arena object keep an intact snapshot.
+    arena: Arena | None = None
 
 
 class PulseEngine:
@@ -196,6 +200,29 @@ class PulseEngine:
         ``fused`` is the pre-pipelined boolean knob, still honored when
         ``schedule="auto"`` resolves away from it only by the overlap model.
         """
+        if it.mutates:
+            # write iterators always run near-memory: the commit machinery
+            # (per-shard serialization, free-list allocator) lives with the
+            # data, so there is no CPU-node fallback to dispatch them to --
+            # and the knobs that would bypass it are errors, not no-ops
+            if return_to_cpu:
+                raise ValueError(
+                    "mutating iterators cannot run the return_to_cpu ablation"
+                )
+            if backend == "kernel":
+                raise ValueError(
+                    "mutating iterators are not supported on the pulse_chase "
+                    "kernel backend yet; use backend='xla'"
+                )
+            if force_offload is False:
+                raise ValueError(
+                    "mutating iterators cannot run at the CPU node "
+                    "(force_offload=False): commits live with the data"
+                )
+            return self._execute_mut(
+                it, ptr0, scratch0, max_iters=max_iters, k_local=k_local,
+                compact=compact, fused=fused, schedule=schedule, fabric=fabric,
+            )
         decision = self.dispatch(it)
         offload = decision.offload if force_offload is None else force_offload
         if not offload:
@@ -207,18 +234,7 @@ class PulseEngine:
             return ExecResult(ptr, scratch, status, np.asarray(iters), trace, False)
 
         if self.mesh is not None and self.arena.num_shards > 1:
-            if schedule == "auto":
-                if not fused:  # explicit opt-out of device-resident loops
-                    schedule = "dispatched"
-                else:
-                    sk = (it, k_local)
-                    sd = self._schedule_cache.get(sk)
-                    if sd is None:
-                        sd = self._schedule_cache[sk] = dispatch_mod.schedule_decision(
-                            it, self.arena.node_words, self.arena.num_shards,
-                            self.accel, k_local=k_local,
-                        )
-                    schedule = sd.schedule if sd.schedule != "local" else "fused"
+            schedule = self._resolve_schedule(it, schedule, fused, k_local)
             rec, stats = routing.distributed_execute(
                 it, self.arena, ptr0, scratch0,
                 mesh=self.mesh, axis_name=self.axis_name,
@@ -255,6 +271,74 @@ class PulseEngine:
         return ExecResult(
             np.asarray(ptr), np.asarray(scratch), np.asarray(status),
             np.asarray(iters),
+        )
+
+    def _resolve_schedule(
+        self, it: PulseIterator, schedule: str, fused: bool, k_local: int
+    ) -> str:
+        """``schedule="auto"`` -> the dispatch engine's overlap-model pick
+        (cached per iterator); ``fused=False`` is the explicit opt-out of
+        device-resident loops.  Shared by the read and write paths."""
+        if schedule != "auto":
+            return schedule
+        if not fused:
+            return "dispatched"
+        sk = (it, k_local)
+        sd = self._schedule_cache.get(sk)
+        if sd is None:
+            sd = self._schedule_cache[sk] = dispatch_mod.schedule_decision(
+                it, self.arena.node_words, self.arena.num_shards,
+                self.accel, k_local=k_local,
+            )
+        return sd.schedule if sd.schedule != "local" else "fused"
+
+    def _execute_mut(
+        self,
+        it: PulseIterator,
+        ptr0,
+        scratch0,
+        *,
+        max_iters: int,
+        k_local: int,
+        compact: bool,
+        fused: bool,
+        schedule: str,
+        fabric: str,
+    ) -> ExecResult:
+        """Write path: run a mutating iterator and swap the engine's arena to
+        the post-commit state.
+
+        The distributed path threads the arena + heap registers through the
+        superstep loops as carried state; single-node (no mesh / one shard)
+        runs the sequential-commit executor (``core.commit``) -- the same
+        semantics the distributed schedules are verified against bit-for-bit.
+        The *input* arena object is never modified, so callers can replay a
+        snapshot through several schedules.
+        """
+        S = it.scratch_words
+        if self.mesh is not None and self.arena.num_shards > 1:
+            schedule = self._resolve_schedule(it, schedule, fused, k_local)
+            rec, stats, new_arena = routing.distributed_execute(
+                it, self.arena, ptr0, scratch0,
+                mesh=self.mesh, axis_name=self.axis_name,
+                max_iters=max_iters, k_local=k_local,
+                compact=compact, schedule=schedule, fabric=fabric,
+            )
+        else:
+            from repro.core import commit as commit_mod
+
+            rec, stats, new_arena = commit_mod.sequential_commit_execute(
+                it, self.arena, ptr0, scratch0,
+                max_iters=max_iters, k_local=k_local, compact=compact,
+            )
+        self.arena = new_arena
+        return ExecResult(
+            ptr=rec[:, routing.F_PTR],
+            scratch=rec[:, routing.F_SCRATCH : routing.F_SCRATCH + S],
+            status=rec[:, routing.F_STATUS],
+            iters=rec[:, routing.F_ITERS],
+            stats=stats,
+            arena=new_arena,
         )
 
     def _execute_kernel(

@@ -30,7 +30,9 @@ import numpy as np
 
 from repro.core.iterator import PulseIterator
 
-# opcodes (Table 2)
+# opcodes (Table 2, extended with the store class -- S4.1 footnote 4's
+# modification iterators).  The dead SELECT stub (op 23, "not in paper") is
+# gone; the write-path opcodes take over the tail of the encoding space.
 HALT = 0  # implicit safety stop
 LOADN = 1  # rd <- NODE[imm]          (Memory: the per-iteration LOAD's words)
 LOADS = 2  # rd <- SP[imm]
@@ -43,11 +45,18 @@ JMP = 19  # unconditional forward jump
 NEXT_ITER = 20  # cur_ptr <- rs1; end iteration (Terminal)
 RETURN = 21  # traversal done          (Terminal)
 GETPTR = 22  # rd <- CUR_PTR
-SELECT = 23  # rd <- rs1 if flag(imm-less cmp result reg) ... not in paper; omit
+# store class: each stages one mutation per iteration into the request
+# record's payload; the owning shard's commit phase applies it (core.commit)
+STOREN = 23  # stage NODE[imm] <- rs1 write-back of the current node
+ALLOC = 24  # stage a free-list claim; the staged STOREN image becomes the
+#             new node, and the commit deposits its address in SP[imm]
+SETPTR = 25  # stage link swing (CAS): NODE[imm] <- rs1 iff NODE[imm] == rs2
+FREE = 26  # stage free of the node addressed by rs1
 
 NUM_REGS = 16
 _JUMPS = (JEQ, JNE, JLT, JLE, JGT, JGE, JMP)
 _TERMINALS = (NEXT_ITER, RETURN)
+_MUTATORS = (STOREN, ALLOC, SETPTR, FREE)
 
 OP_NAMES = {
     HALT: "HALT", LOADN: "LOADN", LOADS: "LOADS", STORES: "STORES",
@@ -55,7 +64,10 @@ OP_NAMES = {
     NOT: "NOT", MOVE: "MOVE", MOVI: "MOVI", JEQ: "JEQ", JNE: "JNE",
     JLT: "JLT", JLE: "JLE", JGT: "JGT", JGE: "JGE", JMP: "JMP",
     NEXT_ITER: "NEXT_ITER", RETURN: "RETURN", GETPTR: "GETPTR",
+    STOREN: "STOREN", ALLOC: "ALLOC", SETPTR: "SETPTR", FREE: "FREE",
 }
+ALL_OPS = tuple(range(FREE + 1))  # dense opcode space; OP_NAMES is exhaustive
+assert set(OP_NAMES) == set(ALL_OPS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +81,11 @@ class Program:
 
     def __len__(self) -> int:
         return self.code.shape[0]
+
+    @property
+    def mutates(self) -> bool:
+        """True iff the program uses any store-class opcode."""
+        return bool(np.isin(self.code[:, 0], _MUTATORS).any())
 
     def disasm(self) -> str:
         rows = []
@@ -131,6 +148,19 @@ class Asm:
 
     def getptr(self, rd):
         return self._emit(GETPTR, rd)
+
+    # store class (write path; each stages into the record's mutation payload)
+    def storen(self, idx, rs):
+        return self._emit(STOREN, rs, 0, idx)
+
+    def alloc(self, scratch_idx):
+        return self._emit(ALLOC, 0, 0, scratch_idx)
+
+    def setptr(self, idx, rs_val, rs_expect):
+        return self._emit(SETPTR, rs_val, rs_expect, idx)
+
+    def free(self, rs):
+        return self._emit(FREE, rs)
 
     # control flow -- forward only, via labels resolved at finish()
     def label(self, name: str):
@@ -196,9 +226,9 @@ def validate(code: np.ndarray, scratch_words: int, node_words: int) -> None:
                 )
             if int(imm) > T:
                 raise ValueError(f"jump target out of range at pc={i}")
-        if op == LOADN and not (0 <= int(imm) < node_words):
-            raise ValueError(f"LOADN node index {int(imm)} out of range at pc={i}")
-        if op in (LOADS, STORES) and not (0 <= int(imm) < scratch_words):
+        if op in (LOADN, STOREN, SETPTR) and not (0 <= int(imm) < node_words):
+            raise ValueError(f"node index {int(imm)} out of range at pc={i}")
+        if op in (LOADS, STORES, ALLOC) and not (0 <= int(imm) < scratch_words):
             raise ValueError(f"scratch index {int(imm)} out of range at pc={i}")
         for r in (int(a), int(b)):
             if op != HALT and not (0 <= r < NUM_REGS):
@@ -218,79 +248,113 @@ def max_instructions_per_iteration(prog: Program) -> int:
     return len(prog)
 
 
-def run_iteration(prog_code: jnp.ndarray, node, ptr, scratch):
+def _run_vm(prog_code: jnp.ndarray, node, ptr, scratch):
     """Execute ONE iteration of an encoded program on the logic pipeline.
 
-    Returns (done, new_ptr, new_scratch).  Pure JAX: lax.while_loop over the
-    pc with a lax.switch per opcode, so it jit-compiles and vmaps over a
-    batch of workspaces.
+    Returns ``(done, new_ptr, new_scratch, (m_op, m_tgt, m_mask, m_expect,
+    m_data))`` -- the trailing tuple is the staged mutation (all zeros /
+    M_NONE for read-only programs).  Pure JAX: lax.while_loop over the pc
+    with a lax.switch per opcode, so it jit-compiles and vmaps over a batch
+    of workspaces.
+
+    Store-class staging semantics (one mutation per iteration, applied by
+    the owning shard's commit phase -- core.commit):
+      * STOREN accumulates a masked write-back image of the current node;
+      * ALLOC retargets the accumulated image at a fresh free-list slot
+        (commit deposits the claimed address into SP[imm]);
+      * SETPTR stages the image as a CAS on NODE[imm] (expect rs2);
+      * FREE stages the release of the node addressed by rs1.
     """
+    from repro.core.arena import M_ALLOC, M_CAS, M_FREE, M_NONE, M_STORE
+
     T = prog_code.shape[0]
+    W = node.shape[0]
     regs0 = jnp.zeros((NUM_REGS,), jnp.int32)
 
     def cond(st):
-        pc, regs, scr, out_ptr, done, halted = st
-        return (~halted) & (pc < T)
+        return (~st[5]) & (st[0] < T)
 
     def body(st):
-        pc, regs, scr, out_ptr, done, halted = st
+        pc, regs, scr, out_ptr, done, halted, mop, mtgt, mmask, mexp, mdata = st
         row = jax.lax.dynamic_index_in_dim(prog_code, pc, 0, keepdims=False)
         op, a, b, imm = row[0], row[1], row[2], row[3]
         ra = regs[jnp.clip(a, 0, NUM_REGS - 1)]
         rb = regs[jnp.clip(b, 0, NUM_REGS - 1)]
+        rimm = regs[jnp.clip(imm, 0, NUM_REGS - 1)]
 
         def wr(r, v):
             return regs.at[jnp.clip(r, 0, NUM_REGS - 1)].set(v)
 
-        node_imm = node[jnp.clip(imm, 0, node.shape[0] - 1)]
+        node_imm = node[jnp.clip(imm, 0, W - 1)]
         scr_imm = scr[jnp.clip(imm, 0, scr.shape[0] - 1)]
+        mut = (mop, mtgt, mmask, mexp, mdata)
+
+        def keep(pc2, regs2=None, scr2=None, optr2=None, done2=None, halt2=None,
+                 mut2=None):
+            return (
+                pc2,
+                regs if regs2 is None else regs2,
+                scr if scr2 is None else scr2,
+                out_ptr if optr2 is None else optr2,
+                done if done2 is None else done2,
+                halted if halt2 is None else halt2,
+                *(mut if mut2 is None else mut2),
+            )
+
+        # STOREN: accumulate the write-back image; an already-staged ALLOC
+        # keeps its op/target (the image IS the new node being built)
+        storen_op = jnp.where(mop == M_ALLOC, mop, jnp.int32(M_STORE))
+        storen_tgt = jnp.where(mop == M_ALLOC, mtgt, jnp.asarray(ptr, jnp.int32))
+        storen_mut = (
+            storen_op, storen_tgt,
+            mmask | jnp.left_shift(jnp.int32(1), jnp.clip(imm, 0, W - 1)),
+            mexp,
+            mdata.at[jnp.clip(imm, 0, W - 1)].set(ra),
+        )
+        alloc_mut = (jnp.int32(M_ALLOC), jnp.asarray(imm, jnp.int32), mmask, mexp, mdata)
+        setptr_mut = (
+            jnp.int32(M_CAS), jnp.asarray(ptr, jnp.int32),
+            jnp.left_shift(jnp.int32(1), jnp.clip(imm, 0, W - 1)),
+            rb,
+            mdata.at[jnp.clip(imm, 0, W - 1)].set(ra),
+        )
+        free_mut = (jnp.int32(M_FREE), ra, jnp.int32(0), jnp.int32(0), mdata)
 
         branches = [
-            lambda: (pc + 1, regs, scr, out_ptr, done, jnp.bool_(True)),  # HALT
-            lambda: (pc + 1, wr(a, node_imm), scr, out_ptr, done, halted),  # LOADN
-            lambda: (pc + 1, wr(a, scr_imm), scr, out_ptr, done, halted),  # LOADS
-            lambda: (  # STORES
-                pc + 1,
-                regs,
-                scr.at[jnp.clip(imm, 0, scr.shape[0] - 1)].set(ra),
-                out_ptr,
-                done,
-                halted,
+            lambda: keep(pc + 1, halt2=jnp.bool_(True)),  # HALT
+            lambda: keep(pc + 1, wr(a, node_imm)),  # LOADN
+            lambda: keep(pc + 1, wr(a, scr_imm)),  # LOADS
+            lambda: keep(  # STORES
+                pc + 1, scr2=scr.at[jnp.clip(imm, 0, scr.shape[0] - 1)].set(ra)
             ),
-            lambda: (pc + 1, wr(a, regs[jnp.clip(b, 0, NUM_REGS - 1)] + regs[jnp.clip(imm, 0, NUM_REGS - 1)]), scr, out_ptr, done, halted),  # ADD rd=rb+rimm
-            lambda: (pc + 1, wr(a, regs[jnp.clip(b, 0, NUM_REGS - 1)] - regs[jnp.clip(imm, 0, NUM_REGS - 1)]), scr, out_ptr, done, halted),  # SUB
-            lambda: (pc + 1, wr(a, regs[jnp.clip(b, 0, NUM_REGS - 1)] * regs[jnp.clip(imm, 0, NUM_REGS - 1)]), scr, out_ptr, done, halted),  # MUL
-            lambda: (  # DIV (guarded)
+            lambda: keep(pc + 1, wr(a, rb + rimm)),  # ADD rd=rb+rimm
+            lambda: keep(pc + 1, wr(a, rb - rimm)),  # SUB
+            lambda: keep(pc + 1, wr(a, rb * rimm)),  # MUL
+            lambda: keep(  # DIV (guarded)
                 pc + 1,
-                wr(
-                    a,
-                    jnp.where(
-                        regs[jnp.clip(imm, 0, NUM_REGS - 1)] == 0,
-                        0,
-                        regs[jnp.clip(b, 0, NUM_REGS - 1)]
-                        // jnp.where(regs[jnp.clip(imm, 0, NUM_REGS - 1)] == 0, 1, regs[jnp.clip(imm, 0, NUM_REGS - 1)]),
-                    ),
-                ),
-                scr,
-                out_ptr,
-                done,
-                halted,
+                wr(a, jnp.where(rimm == 0, 0, rb // jnp.where(rimm == 0, 1, rimm))),
             ),
-            lambda: (pc + 1, wr(a, regs[jnp.clip(b, 0, NUM_REGS - 1)] & regs[jnp.clip(imm, 0, NUM_REGS - 1)]), scr, out_ptr, done, halted),  # AND
-            lambda: (pc + 1, wr(a, regs[jnp.clip(b, 0, NUM_REGS - 1)] | regs[jnp.clip(imm, 0, NUM_REGS - 1)]), scr, out_ptr, done, halted),  # OR
-            lambda: (pc + 1, wr(a, ~rb), scr, out_ptr, done, halted),  # NOT
-            lambda: (pc + 1, wr(a, rb), scr, out_ptr, done, halted),  # MOVE
-            lambda: (pc + 1, wr(a, imm), scr, out_ptr, done, halted),  # MOVI
-            lambda: (jnp.where(ra == rb, imm, pc + 1), regs, scr, out_ptr, done, halted),  # JEQ
-            lambda: (jnp.where(ra != rb, imm, pc + 1), regs, scr, out_ptr, done, halted),  # JNE
-            lambda: (jnp.where(ra < rb, imm, pc + 1), regs, scr, out_ptr, done, halted),  # JLT
-            lambda: (jnp.where(ra <= rb, imm, pc + 1), regs, scr, out_ptr, done, halted),  # JLE
-            lambda: (jnp.where(ra > rb, imm, pc + 1), regs, scr, out_ptr, done, halted),  # JGT
-            lambda: (jnp.where(ra >= rb, imm, pc + 1), regs, scr, out_ptr, done, halted),  # JGE
-            lambda: (imm, regs, scr, out_ptr, done, halted),  # JMP
-            lambda: (pc + 1, regs, scr, ra, done, jnp.bool_(True)),  # NEXT_ITER
-            lambda: (pc + 1, regs, scr, out_ptr, jnp.bool_(True), jnp.bool_(True)),  # RETURN
-            lambda: (pc + 1, wr(a, ptr), scr, out_ptr, done, halted),  # GETPTR
+            lambda: keep(pc + 1, wr(a, rb & rimm)),  # AND
+            lambda: keep(pc + 1, wr(a, rb | rimm)),  # OR
+            lambda: keep(pc + 1, wr(a, ~rb)),  # NOT
+            lambda: keep(pc + 1, wr(a, rb)),  # MOVE
+            lambda: keep(pc + 1, wr(a, imm)),  # MOVI
+            lambda: keep(jnp.where(ra == rb, imm, pc + 1)),  # JEQ
+            lambda: keep(jnp.where(ra != rb, imm, pc + 1)),  # JNE
+            lambda: keep(jnp.where(ra < rb, imm, pc + 1)),  # JLT
+            lambda: keep(jnp.where(ra <= rb, imm, pc + 1)),  # JLE
+            lambda: keep(jnp.where(ra > rb, imm, pc + 1)),  # JGT
+            lambda: keep(jnp.where(ra >= rb, imm, pc + 1)),  # JGE
+            lambda: keep(imm),  # JMP
+            lambda: keep(pc + 1, optr2=ra, halt2=jnp.bool_(True)),  # NEXT_ITER
+            lambda: keep(  # RETURN
+                pc + 1, done2=jnp.bool_(True), halt2=jnp.bool_(True)
+            ),
+            lambda: keep(pc + 1, wr(a, ptr)),  # GETPTR
+            lambda: keep(pc + 1, mut2=storen_mut),  # STOREN
+            lambda: keep(pc + 1, mut2=alloc_mut),  # ALLOC
+            lambda: keep(pc + 1, mut2=setptr_mut),  # SETPTR
+            lambda: keep(pc + 1, mut2=free_mut),  # FREE
         ]
         sel = jnp.clip(op, 0, len(branches) - 1)
         return jax.lax.switch(sel, branches)
@@ -302,9 +366,27 @@ def run_iteration(prog_code: jnp.ndarray, node, ptr, scratch):
         jnp.asarray(ptr, jnp.int32),
         jnp.bool_(False),
         jnp.bool_(False),
+        jnp.int32(0),  # m_op (M_NONE)
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.zeros((W,), jnp.int32),
     )
-    pc, regs, scr, out_ptr, done, halted = jax.lax.while_loop(cond, body, st0)
+    pc, regs, scr, out_ptr, done, halted, mop, mtgt, mmask, mexp, mdata = (
+        jax.lax.while_loop(cond, body, st0)
+    )
+    return done, out_ptr, scr, (mop, mtgt, mmask, mexp, mdata)
+
+
+def run_iteration(prog_code: jnp.ndarray, node, ptr, scratch):
+    """Read-path VM entry point: (done, new_ptr, new_scratch)."""
+    done, out_ptr, scr, _ = _run_vm(prog_code, node, ptr, scratch)
     return done, out_ptr, scr
+
+
+def run_iteration_mut(prog_code: jnp.ndarray, node, ptr, scratch):
+    """Write-path VM entry point: also returns the staged mutation tuple."""
+    return _run_vm(prog_code, node, ptr, scratch)
 
 
 # NOTE on ALU encoding: rows are [op, rd, rs1, rs2-as-imm-field]; the
@@ -317,17 +399,14 @@ def run_iteration(prog_code: jnp.ndarray, node, ptr, scratch):
 def as_pulse_iterator(prog: Program) -> PulseIterator:
     """Wrap an encoded program as a PulseIterator (the accelerator path).
 
-    Supplies the fused ``step_fn`` -- one VM pass yields (done, new_ptr,
-    scratch), matching the hardware where a single logic-pipeline activation
-    ends in either NEXT_ITER or RETURN.
+    Read-only programs supply the fused ``step_fn`` -- one VM pass yields
+    (done, new_ptr, scratch), matching the hardware where a single
+    logic-pipeline activation ends in either NEXT_ITER or RETURN.  Programs
+    using the store class supply ``mut_fn`` instead, so the executors route
+    them through the commit machinery (a mutating program on the read path
+    would silently drop its stores).
     """
     code = jnp.asarray(prog.code)
-
-    def step_fn(node, ptr, scratch):
-        done, new_ptr, scr = run_iteration(code, node, ptr, scratch)
-        return done, new_ptr, scr
-
-    step_fn.__wrapped_program__ = prog  # exact N for the dispatch cost model
 
     def next_fn(node, ptr, scratch):
         done, new_ptr, scr = run_iteration(code, node, ptr, scratch)
@@ -336,6 +415,25 @@ def as_pulse_iterator(prog: Program) -> PulseIterator:
     def end_fn(node, ptr, scratch):
         done, new_ptr, scr = run_iteration(code, node, ptr, scratch)
         return done, scr
+
+    if prog.mutates:
+        def mut_fn(node, ptr, scratch):
+            return run_iteration_mut(code, node, ptr, scratch)
+
+        mut_fn.__wrapped_program__ = prog  # exact N for the dispatch model
+        return PulseIterator(
+            scratch_words=prog.scratch_words,
+            next_fn=next_fn,
+            end_fn=end_fn,
+            mut_fn=mut_fn,
+            name=prog.name,
+        )
+
+    def step_fn(node, ptr, scratch):
+        done, new_ptr, scr = run_iteration(code, node, ptr, scratch)
+        return done, new_ptr, scr
+
+    step_fn.__wrapped_program__ = prog  # exact N for the dispatch cost model
 
     return PulseIterator(
         scratch_words=prog.scratch_words,

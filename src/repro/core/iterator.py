@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import translation
-from repro.core.arena import NULL, PERM_READ, Arena, load_node
+from repro.core.arena import M_NONE, NULL, PERM_READ, Arena, load_node
 
 # Request status codes (wire format field; identical for request & response).
 STATUS_ACTIVE = 0  # still traversing
@@ -53,6 +53,15 @@ class PulseIterator:
       init_fn:  optional host-side (query pytree) -> (ptr (B,), scratch (B,S))
       step_fn:  optional fused (node, ptr, scratch) -> (done, new_ptr, scratch)
                 (used by the ISA VM, whose single pass yields both answers).
+      mut_fn:   optional *mutating* fused step:
+                (node, ptr, scratch) -> (done, new_ptr, scratch,
+                                         (m_op, m_tgt, m_mask, m_expect,
+                                          m_data (W,)))
+                -- the write path (core.commit).  A step that stages a
+                mutation (m_op != M_NONE) stalls its record until the owning
+                shard's commit phase applies it; ``done`` is force-gated off
+                while a mutation is staged, so programs terminate only on a
+                clean (no-write) iteration after observing their commit.
       name:     for dispatch-engine reports.
     """
 
@@ -61,7 +70,12 @@ class PulseIterator:
     end_fn: Callable
     init_fn: Callable | None = None
     step_fn: Callable | None = None
+    mut_fn: Callable | None = None
     name: str = "iterator"
+
+    @property
+    def mutates(self) -> bool:
+        return self.mut_fn is not None
 
     def init(self, *args, **kwargs):
         if self.init_fn is None:
@@ -149,6 +163,76 @@ def step_batch(
     return ptr, scratch, status, iters
 
 
+def mut_step_batch(
+    it: PulseIterator,
+    arena_data: jax.Array,
+    ptr: jax.Array,  # (B,) int32 global addresses
+    scratch: jax.Array,  # (B, S) int32
+    status: jax.Array,  # (B,) int32
+    iters: jax.Array,  # (B,) int32
+    mut: jax.Array,  # (B, MUT_EXTRA + W) staged-mutation payload block
+    *,
+    max_iters: int,
+    local_lo: jax.Array | int = 0,
+    local_hi: jax.Array | int | None = None,
+    perm_ok: jax.Array | bool = True,
+):
+    """Advance every runnable request of a *mutating* iterator by one step.
+
+    Write-path twin of ``step_batch`` with three extra rules (core.commit):
+
+      * a record with a staged mutation (``mut[:, 0] != M_NONE``) is
+        **stalled** -- it executes nothing until the owning shard's commit
+        phase applies the mutation and clears the payload;
+      * a step that stages a mutation cannot also terminate: ``done`` is
+        forced off, so programs finish on a clean post-commit iteration
+        (observing their commit -- the validate step of an optimistic
+        insert/delete);
+      * a record never goes MAXED while a mutation is staged, so MAXED
+        continuations are always resumable from ``(cur_ptr, scratch)`` alone
+        (the payload invariant: only ACTIVE records carry staged mutations).
+    """
+    if local_hi is None:
+        local_hi = arena_data.shape[0]
+    stalled = mut[:, 0] != M_NONE
+    local = (ptr >= local_lo) & (ptr < local_hi)
+    null = ptr == NULL
+    active = status == STATUS_ACTIVE
+    fault = active & local & ~jnp.asarray(perm_ok) & ~null & ~stalled
+    runnable = active & local & ~fault & ~null & ~stalled
+
+    offset = jnp.asarray(ptr, jnp.int32) - jnp.asarray(local_lo, jnp.int32)
+    node = load_node(arena_data, jnp.where(runnable, offset, 0))
+    done, nptr, nscr, staged = jax.vmap(it.mut_fn)(node, ptr, scratch)
+    m_op, m_tgt, m_mask, m_expect, m_data = (
+        jnp.asarray(x, jnp.int32) for x in staged
+    )
+    stages = m_op != M_NONE
+    done = done & ~stages  # the commit is part of the traversal
+    new_ptr = jnp.where(done, ptr, nptr).astype(jnp.int32)
+    new_scratch = jnp.asarray(nscr, jnp.int32)
+
+    ptr = jnp.where(runnable, new_ptr, ptr)
+    scratch = jnp.where(runnable[:, None], new_scratch, scratch)
+    iters = jnp.where(runnable, iters + 1, iters)
+    new_payload = jnp.concatenate(
+        [m_op[:, None], m_tgt[:, None], m_mask[:, None], m_expect[:, None], m_data],
+        axis=1,
+    )
+    mut = jnp.where((runnable & stages)[:, None], new_payload, mut)
+    pending = mut[:, 0] != M_NONE
+
+    status = jnp.where(runnable & done, STATUS_DONE, status)
+    status = jnp.where(fault, STATUS_FAULT, status)
+    status = jnp.where(
+        (status == STATUS_ACTIVE) & (iters >= max_iters) & ~pending,
+        STATUS_MAXED,
+        status,
+    )
+    status = jnp.where(active & null & ~stalled, STATUS_FAULT, status)
+    return ptr, scratch, status, iters, mut
+
+
 def execute_batched(
     it: PulseIterator,
     arena: Arena,
@@ -165,6 +249,12 @@ def execute_batched(
 
     Returns ``(ptr, scratch, status, iters)``.
     """
+    if it.mutates:
+        raise ValueError(
+            f"iterator {it.name} mutates: execute_batched is the read-only "
+            f"executor and would silently drop its staged writes -- use "
+            f"commit.sequential_commit_execute or PulseEngine.execute"
+        )
     B = ptr0.shape[0]
     ptr = jnp.asarray(ptr0, jnp.int32)
     scratch = jnp.asarray(scratch0, jnp.int32).reshape(B, it.scratch_words)

@@ -14,8 +14,16 @@ supersteps.  The paper's key properties are preserved exactly:
   * the switch knows only ``bounds`` (hierarchical translation, Fig. 6);
     per-shard translation/protection happens at the owning shard.
 
-Record wire format (R = 6 + S int32 words):
-  [id, home_shard, cur_ptr, status, iters, hops, scratch_pad...]
+Record wire format (R = 6 + S [+ 4 + W] int32 words):
+  [id, home_shard, cur_ptr, status, iters, hops, scratch_pad...,
+   m_op, m_tgt, m_mask, m_expect, m_data...]
+
+The trailing mutation payload exists only for *mutating* iterators (the
+write path): a staged mutation rides the same all_to_all/ring fabric as the
+traversal itself, routed to the shard that owns its commit target, where the
+per-shard commit phase applies it (``_commit_phase``).  Read-only records
+keep the original 6 + S layout, so the read path's wire accounting is
+untouched.
 """
 
 from __future__ import annotations
@@ -30,30 +38,47 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map, shard_map_unchecked
 from repro.core import translation
-from repro.core.arena import NULL, PERM_READ, Arena
+from repro.core.arena import (
+    H_BUMP,
+    H_COMMITS,
+    H_EPOCH,
+    H_FREE,
+    M_ALLOC,
+    M_CAS,
+    M_FREE,
+    M_NONE,
+    M_STORE,
+    NULL,
+    PERM_READ,
+    PERM_WRITE,
+    Arena,
+    mut_width,
+)
 from repro.core.iterator import (
     STATUS_ACTIVE,
     STATUS_DONE,
     STATUS_EMPTY,
+    STATUS_FAULT,
     PulseIterator,
+    mut_step_batch,
     step_batch,
 )
 
 F_ID, F_HOME, F_PTR, F_STATUS, F_ITERS, F_HOPS, F_SCRATCH = 0, 1, 2, 3, 4, 5, 6
 
 
-def record_width(scratch_words: int) -> int:
-    return F_SCRATCH + scratch_words
+def record_width(scratch_words: int, mut_words: int = 0) -> int:
+    return F_SCRATCH + scratch_words + mut_words
 
 
-def pack_requests(ids, home, ptr, scratch) -> jnp.ndarray:
+def pack_requests(ids, home, ptr, scratch, mut_words: int = 0) -> jnp.ndarray:
     B, S = scratch.shape
-    rec = jnp.zeros((B, record_width(S)), jnp.int32)
+    rec = jnp.zeros((B, record_width(S, mut_words)), jnp.int32)
     rec = rec.at[:, F_ID].set(ids)
     rec = rec.at[:, F_HOME].set(home)
     rec = rec.at[:, F_PTR].set(ptr)
     rec = rec.at[:, F_STATUS].set(STATUS_ACTIVE)
-    rec = rec.at[:, F_SCRATCH:].set(scratch)
+    rec = rec.at[:, F_SCRATCH : F_SCRATCH + S].set(scratch)
     return rec
 
 
@@ -93,6 +118,12 @@ class RoutingStats:
     # bit-identical to the fused schedule.
     schedule: str = "dispatched"
     fabric: str = "dense"
+    # write path: mutations applied by per-shard commit phases during this
+    # execution (CAS misses included -- they consumed a serialized commit
+    # slot), and commit epochs advanced (the per-shard lock-generation
+    # counter; one per superstep that applied >= 1 mutation on some shard)
+    commits: int = 0
+    epochs: int = 0
 
     @property
     def total_wire_words(self) -> int:
@@ -228,6 +259,196 @@ def _local_superstep(
     return pool
 
 
+def _commit_phase(pool, rows, heap_row, lo, hi, my_shard, perm_w, *, S, W):
+    """Per-shard commit phase: apply every locally-committable staged
+    mutation, one at a time, in deterministic (class, slot, id) order.
+
+    This is the write path's serialization point -- the stand-in for the
+    paper's per-node lock.  All chases in a superstep ran *before* this
+    phase, so readers see a consistent pre-commit snapshot; concurrent
+    writers to one shard serialize through the sorted scatter below
+    (stores/CAS first by target slot then request id, then frees, then
+    allocs by id -- so a slot freed this phase is immediately reusable by a
+    later alloc, exactly like the sequential oracle).  A shard whose range
+    lost PERM_WRITE faults every eligible commit instead of applying it.
+
+    Returns ``(pool, rows, heap_row)`` -- arena rows and the heap registers
+    [free_head, bump, epoch, commits] are carried state, not loop
+    invariants, from here on.
+    """
+    MB = F_SCRATCH + S
+    L = pool.shape[0]
+    m_op = pool[:, MB]
+    m_tgt = pool[:, MB + 1]
+    status = pool[:, F_STATUS]
+    pend = (m_op != M_NONE) & (status != STATUS_EMPTY)
+    is_alloc = m_op == M_ALLOC
+    tgt_local = (m_tgt >= lo) & (m_tgt < hi)
+    eligible = pend & jnp.where(is_alloc, pool[:, F_HOME] == my_shard, tgt_local)
+    ok = jnp.asarray(perm_w)
+
+    def apply_one(order, i, carry):
+        pool, rows, free_head, bump = carry
+        r = order[i]
+        rec = jax.lax.dynamic_index_in_dim(pool, r, 0, keepdims=False)
+        act = eligible[r] & ok
+        op = rec[MB]
+        tgt = rec[MB + 1]
+        data = jax.lax.dynamic_slice(rec, (MB + 4,), (W,))
+        maskb = ((rec[MB + 2] >> jnp.arange(W, dtype=jnp.int32)) & 1).astype(bool)
+
+        # STORE / CAS: masked write; CAS guards on the lowest masked word
+        toff = jnp.clip(tgt - lo, 0, rows.shape[0] - 1)
+        old = jax.lax.dynamic_index_in_dim(rows, toff, 0, keepdims=False)
+        cas_ok = old[jnp.argmax(maskb).astype(jnp.int32)] == rec[MB + 3]
+        do_store = act & ((op == M_STORE) | ((op == M_CAS) & cas_ok))
+        # FREE: zero the slot, word 0 becomes the free-list link
+        do_free = act & (op == M_FREE)
+        freed = jnp.zeros((W,), jnp.int32).at[0].set(free_head)
+        newrow = jnp.where(do_store, jnp.where(maskb, data, old),
+                           jnp.where(do_free, freed, old))
+        rows = jax.lax.dynamic_update_index_in_dim(rows, newrow, toff, 0)
+        free_head = jnp.where(do_free, tgt, free_head)
+
+        # ALLOC: pop the free list, else bump; exhaustion faults the record
+        do_alloc = act & (op == M_ALLOC)
+        have_free = free_head != NULL
+        slot = jnp.where(have_free, free_head, bump)
+        can = have_free | (bump < hi)
+        aoff = jnp.clip(slot - lo, 0, rows.shape[0] - 1)
+        arow = jax.lax.dynamic_index_in_dim(rows, aoff, 0, keepdims=False)
+        next_free = arow[0]
+        fresh = jnp.where(maskb, data, 0)
+        rows = jax.lax.dynamic_update_index_in_dim(
+            rows, jnp.where(do_alloc & can, fresh, arow), aoff, 0
+        )
+        free_head = jnp.where(do_alloc & can & have_free, next_free, free_head)
+        bump = jnp.where(do_alloc & can & ~have_free, bump + 1, bump)
+        # the claimed global address lands in scratch[m_tgt]
+        sidx = F_SCRATCH + jnp.clip(tgt, 0, S - 1)
+        rec = rec.at[sidx].set(jnp.where(do_alloc & can, slot, rec[sidx]))
+        rec = rec.at[F_STATUS].set(
+            jnp.where(do_alloc & ~can, jnp.int32(STATUS_FAULT), rec[F_STATUS])
+        )
+        rec = rec.at[MB].set(jnp.where(act, jnp.int32(M_NONE), rec[MB]))
+        pool = jax.lax.dynamic_update_index_in_dim(pool, rec, r, 0)
+        return pool, rows, free_head, bump
+
+    # the serialized scatter (and its 4-pass stable lexsort) only runs when
+    # this shard actually has work: commit-free supersteps (most of them, in
+    # mixed batches) skip it entirely, the way the read path's lax.cond
+    # skips the fabric -- applying zero commits is the identity, so results
+    # are unchanged
+    def run_commits(carry):
+        # lexsort via successive stable sorts, least-significant key first:
+        # final order = (ineligible-last, class, slot, id)
+        klass = jnp.where(
+            is_alloc, 2, jnp.where(m_op == M_FREE, 1, 0)
+        ).astype(jnp.int32)
+        slot_key = jnp.where(is_alloc, 0, m_tgt)
+        order = jnp.arange(L, dtype=jnp.int32)
+        for key in (pool[:, F_ID], slot_key, klass, (~eligible).astype(jnp.int32)):
+            order = order[jnp.argsort(key[order], stable=True)]
+        return jax.lax.fori_loop(
+            0, L, lambda i, c: apply_one(order, i, c), carry
+        )
+
+    pool, rows, free_head, bump = jax.lax.cond(
+        eligible.any(),
+        run_commits,
+        lambda carry: carry,
+        (pool, rows, heap_row[H_FREE], heap_row[H_BUMP]),
+    )
+    # write-permission fault: eligible commits on a write-revoked shard
+    denied = eligible & ~ok
+    pool = pool.at[:, F_STATUS].set(
+        jnp.where(denied, jnp.int32(STATUS_FAULT), pool[:, F_STATUS])
+    )
+    pool = pool.at[:, MB].set(jnp.where(denied, jnp.int32(M_NONE), pool[:, MB]))
+    n_applied = (eligible & ok).sum().astype(jnp.int32)
+    heap_row = heap_row.at[H_FREE].set(free_head)
+    heap_row = heap_row.at[H_BUMP].set(bump)
+    heap_row = heap_row.at[H_EPOCH].add((n_applied > 0).astype(jnp.int32))
+    heap_row = heap_row.at[H_COMMITS].add(n_applied)
+    return pool, rows, heap_row
+
+
+def _local_superstep_mut(
+    it: PulseIterator,
+    pool: jnp.ndarray,  # (L, R) local request pool (with mutation payload)
+    arena_rows: jnp.ndarray,  # (rows_per_shard, W): carried state, not invariant
+    heap_row: jnp.ndarray,  # (HEAP_WORDS,) this shard's allocator registers
+    bounds: jnp.ndarray,
+    perms: jnp.ndarray,
+    my_shard: jnp.ndarray,
+    *,
+    k_local: int,
+    max_iters: int,
+    adaptive: bool = False,
+    commit: bool = True,
+):
+    """Write-path twin of ``_local_superstep``: chase with write-stalls, then
+    (optionally) run this shard's commit phase.
+
+    ``commit=False`` runs the chase only -- the wavefront-pipelined schedule
+    chases its two wavefronts separately, merges, and commits the merged
+    pool, which is bit-identical to the fused chase-then-commit because the
+    commit order is keyed on (class, slot, id), never on pool layout.
+    """
+    S = it.scratch_words
+    W = arena_rows.shape[1]
+    MB = F_SCRATCH + S
+    lo = bounds[my_shard]
+    hi = bounds[my_shard + 1]
+    perm_ok = translation.check_access(perms, my_shard, PERM_READ)
+
+    def step(st):
+        ptr, scratch, status, iters, mut = st
+        return mut_step_batch(
+            it, arena_rows, ptr, scratch, status, iters, mut,
+            max_iters=max_iters, local_lo=lo, local_hi=hi, perm_ok=perm_ok,
+        )
+
+    ptr = pool[:, F_PTR]
+    scratch = pool[:, F_SCRATCH:MB]
+    status = pool[:, F_STATUS]
+    iters = pool[:, F_ITERS]
+    mut = pool[:, MB:]
+    if adaptive:
+        def chaseable(ptr, status, mut):
+            return jnp.any(
+                (status == STATUS_ACTIVE) & (ptr >= lo) & (ptr < hi)
+                & (ptr != NULL) & (mut[:, 0] == M_NONE)
+            )
+
+        def cond(st):
+            i, (ptr, _, status, _, mut) = st
+            return (i < k_local) & chaseable(ptr, status, mut)
+
+        def body(st):
+            i, inner = st
+            return i + 1, step(inner)
+
+        _, (ptr, scratch, status, iters, mut) = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), (ptr, scratch, status, iters, mut))
+        )
+    else:
+        ptr, scratch, status, iters, mut = jax.lax.fori_loop(
+            0, k_local, lambda _, st: step(st), (ptr, scratch, status, iters, mut)
+        )
+    pool = pool.at[:, F_PTR].set(ptr)
+    pool = pool.at[:, F_SCRATCH:MB].set(scratch)
+    pool = pool.at[:, F_STATUS].set(status)
+    pool = pool.at[:, F_ITERS].set(iters)
+    pool = pool.at[:, MB:].set(mut)
+    if not commit:
+        return pool
+    perm_w = translation.check_access(perms, my_shard, PERM_WRITE)
+    return _commit_phase(
+        pool, arena_rows, heap_row, lo, hi, my_shard, perm_w, S=S, W=W
+    )
+
+
 def _route_decide(
     pool: jnp.ndarray,  # (L, R)
     bounds: jnp.ndarray,
@@ -238,6 +459,7 @@ def _route_decide(
     link_capacity=None,
     phys_capacity: int | None = None,
     drain_done: bool = False,
+    mut_base: int | None = None,
 ):
     """Switch decision + leaver extraction: the collective-free half of a
     routed superstep.
@@ -249,6 +471,12 @@ def _route_decide(
     The wavefront-pipelined schedule calls this directly so the send buffer
     can stay in flight across a loop tick; ``_route`` composes it with
     ``_exchange`` + ``_merge_pools`` for the bulk-synchronous schedule.
+
+    ``mut_base`` (write path) is the column where the mutation payload
+    starts: a record with a staged mutation routes to the shard that owns
+    its *commit target* (the ALLOC target is the record's home shard), not
+    to ``cur_ptr``'s owner -- the staged write rides the fabric to where it
+    can serialize.  An unmappable commit target is a switch-level fault.
     """
     L, R = pool.shape
     if phys_capacity is None:
@@ -259,10 +487,26 @@ def _route_decide(
     valid = status != STATUS_EMPTY
     active = status == STATUS_ACTIVE
 
+    if mut_base is not None:
+        m_op = pool[:, mut_base]
+        pendm = m_op != M_NONE
+        is_alloc = m_op == M_ALLOC
+        towner = translation.owner_of(bounds, pool[:, mut_base + 1])
+    else:
+        pendm = jnp.zeros((L,), bool)
+
     owner = translation.owner_of(bounds, pool[:, F_PTR])
     # invalid pointer (owner == NULL) on an active request -> the switch
-    # notifies the CPU node (Fig. 6 step 6): mark FAULT, send home.
-    bad = active & (owner == NULL)
+    # notifies the CPU node (Fig. 6 step 6): mark FAULT, send home.  A
+    # write-pending record is judged on its commit target instead.
+    bad = active & (owner == NULL) & ~pendm
+    if mut_base is not None:
+        bad_mut = active & pendm & ~is_alloc & (towner == NULL)
+        bad = bad | bad_mut
+        pool = pool.at[:, mut_base].set(
+            jnp.where(bad_mut, jnp.int32(M_NONE), m_op)
+        )
+        pendm = pendm & ~bad_mut
     status = jnp.where(bad, jnp.int32(3), status)  # STATUS_FAULT
     pool = pool.at[:, F_STATUS].set(status)
     active = status == STATUS_ACTIVE
@@ -280,6 +524,10 @@ def _route_decide(
         dest = jnp.where(active, owner, my_shard)
     else:
         dest = jnp.where(active, owner, pool[:, F_HOME])
+    if mut_base is not None:
+        # staged mutations route to their commit shard (ALLOC -> home)
+        cdest = jnp.where(is_alloc, pool[:, F_HOME], towner)
+        dest = jnp.where(active & pendm, cdest, dest)
     dest = jnp.where(valid, dest, my_shard).astype(jnp.int32)
 
     moves = valid & (dest != my_shard)
@@ -384,6 +632,7 @@ def _route(
     phys_capacity: int | None = None,
     drain_done: bool = False,
     fabric: str = "dense",
+    mut_base: int | None = None,
 ):
     """Switch routing: deliver records to their next shard in one superstep.
 
@@ -410,6 +659,7 @@ def _route(
         link_capacity=link_capacity,
         phys_capacity=phys_capacity,
         drain_done=drain_done,
+        mut_base=mut_base,
     )
     arrivals = _exchange(
         send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
@@ -418,10 +668,23 @@ def _route(
     return merged, n_routed, n_dropped_valid
 
 
-def _remote_active(pool, bounds, my_shard):
-    """Active records this shard cannot serve (owner elsewhere / invalid)."""
+def _remote_active(pool, bounds, my_shard, mut_base: int | None = None):
+    """Active records this shard cannot serve (owner elsewhere / invalid).
+
+    A write-pending record's effective destination is its commit shard
+    (ALLOC -> home), so a staged remote write keeps the fabric scheduled
+    even when every cur_ptr is local."""
     active = pool[:, F_STATUS] == STATUS_ACTIVE
     owner = translation.owner_of(bounds, pool[:, F_PTR])
+    if mut_base is not None:
+        m_op = pool[:, mut_base]
+        pendm = m_op != M_NONE
+        towner = jnp.where(
+            m_op == M_ALLOC,
+            pool[:, F_HOME],
+            translation.owner_of(bounds, pool[:, mut_base + 1]),
+        )
+        owner = jnp.where(pendm, towner, owner)
     return (active & (owner != my_shard)).sum()
 
 
@@ -438,6 +701,7 @@ def make_superstep(
     do_route: bool = True,
     fabric: str = "dense",
     local_backend: str = "xla",
+    mutate: bool = False,
 ):
     """Builds the jittable per-shard superstep: local run -> switch route.
 
@@ -448,9 +712,14 @@ def make_superstep(
     when to re-enter the routed variant.
 
     Returns ``(pool, n_active, n_routed, n_drop, n_remote)`` -- all counters
-    globally psum'd.
+    globally psum'd.  ``mutate=True`` builds the write-path superstep: the
+    arena rows and heap registers become carried state (chase -> commit ->
+    route), and the step signature grows to
+    ``(pool, arena_rows, heap, bounds, perms) -> (pool, arena_rows, heap,
+    counters...)``.
     """
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
+    mut_base = F_SCRATCH + it.scratch_words if mutate else None
 
     def superstep(pool, arena_rows, bounds, perms):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
@@ -478,7 +747,35 @@ def make_superstep(
         n_remote = jax.lax.psum(n_remote, axis_name)
         return pool, n_active, n_routed, n_drop, n_remote
 
-    return superstep
+    def superstep_mut(pool, arena_rows, heap, bounds, perms):
+        CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
+        my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        pool, arena_rows, heap_row = _local_superstep_mut(
+            it, pool, arena_rows, heap[0], bounds, perms, my_shard,
+            k_local=k_local, max_iters=max_iters,
+        )
+        heap = heap_row[None, :]
+        if do_route:
+            pool, n_routed, n_drop = _route(
+                pool, bounds, my_shard, num_shards, axis_name,
+                return_to_cpu=return_to_cpu,
+                link_capacity=link_capacity,
+                drain_done=drain_done,
+                fabric=fabric,
+                mut_base=mut_base,
+            )
+        else:
+            n_routed = jnp.int32(0)
+            n_drop = jnp.int32(0)
+        n_active = (pool[:, F_STATUS] == STATUS_ACTIVE).sum()
+        n_remote = _remote_active(pool, bounds, my_shard, mut_base)
+        n_active = jax.lax.psum(n_active, axis_name)
+        n_routed = jax.lax.psum(n_routed, axis_name)
+        n_drop = jax.lax.psum(n_drop, axis_name)
+        n_remote = jax.lax.psum(n_remote, axis_name)
+        return pool, arena_rows, heap, n_active, n_routed, n_drop, n_remote
+
+    return superstep_mut if mutate else superstep
 
 
 def _pow2_at_least(n: int) -> int:
@@ -565,6 +862,7 @@ def make_fused_loop(
     compact: bool,
     fabric: str = "dense",
     local_backend: str = "xla",
+    mutate: bool = False,
 ):
     """Builds the whole-traversal device-resident loop (one shard's view).
 
@@ -591,6 +889,79 @@ def make_fused_loop(
     )
     rungs_arr = jnp.asarray(rungs, jnp.int32)
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
+    mut_base = F_SCRATCH + it.scratch_words if mutate else None
+
+    def fused_mut(pool, arena_rows, heap, bounds, perms):
+        """Write-path fused loop: arena rows + heap registers are carried
+        ``lax.while_loop`` state -- each superstep is chase -> commit ->
+        route, with the same ladder decisions as the read path."""
+        CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
+        my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        n0 = jax.lax.psum(
+            (pool[:, F_STATUS] == STATUS_ACTIVE).sum().astype(jnp.int32), axis_name
+        )
+
+        def cond(carry):
+            _, _, _, n_active, steps, _, n_drop, _, _, _ = carry
+            return (n_active > 0) & (steps < max_supersteps) & (n_drop == 0)
+
+        def body(carry):
+            (pool, rows, heap, n_active, steps, n_routed_tot, n_drop_tot,
+             cap_counts, local_only, n_remote) = carry
+            pool, rows, heap_row = _local_superstep_mut(
+                it, pool, rows, heap[0], bounds, perms, my_shard,
+                k_local=k_local, max_iters=max_iters,
+            )
+            heap = heap_row[None, :]
+            capacity, do_route = _ladder_traced(
+                n_active, n_remote, num_shards=num_shards,
+                base_capacity=base_capacity,
+                min_link_capacity=min_link_capacity, compact=compact,
+            )
+
+            def routed(p):
+                return _route(
+                    p, bounds, my_shard, num_shards, axis_name,
+                    return_to_cpu=return_to_cpu,
+                    link_capacity=capacity, phys_capacity=base_capacity,
+                    drain_done=drain_done, fabric=fabric, mut_base=mut_base,
+                )
+
+            def local_only_step(p):
+                return p, jnp.int32(0), jnp.int32(0)
+
+            if compact:
+                pool, n_routed, n_drop = jax.lax.cond(
+                    do_route, routed, local_only_step, pool
+                )
+            else:
+                pool, n_routed, n_drop = routed(pool)
+            n_active = jax.lax.psum(
+                (pool[:, F_STATUS] == STATUS_ACTIVE).sum().astype(jnp.int32),
+                axis_name,
+            )
+            n_remote = jax.lax.psum(
+                _remote_active(pool, bounds, my_shard, mut_base).astype(jnp.int32),
+                axis_name,
+            )
+            n_routed = jax.lax.psum(n_routed.astype(jnp.int32), axis_name)
+            n_drop = jax.lax.psum(n_drop.astype(jnp.int32), axis_name)
+            cap_counts = cap_counts + jnp.where(
+                do_route, (rungs_arr == capacity).astype(jnp.int32), 0
+            )
+            local_only = local_only + jnp.where(do_route, 0, 1).astype(jnp.int32)
+            return (
+                pool, rows, heap, n_active, steps + 1, n_routed_tot + n_routed,
+                n_drop_tot + n_drop, cap_counts, local_only, n_remote,
+            )
+
+        init = (
+            pool, arena_rows, heap, n0, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.zeros(len(rungs), jnp.int32), jnp.int32(0), n0,
+        )
+        (pool, rows, heap, n_active, steps, n_routed, n_drop, cap_counts,
+         local_only, _) = jax.lax.while_loop(cond, body, init)
+        return pool, rows, heap, n_active, steps, n_routed, n_drop, cap_counts, local_only
 
     def fused(pool, arena_rows, bounds, perms):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
@@ -666,7 +1037,7 @@ def make_fused_loop(
         )
         return pool, n_active, steps, n_routed, n_drop, cap_counts, local_only
 
-    return fused
+    return fused_mut if mutate else fused
 
 
 def capacity_rungs(base_capacity: int, min_link_capacity: int) -> tuple:
@@ -693,6 +1064,7 @@ def make_pipelined_loop(
     compact: bool,
     fabric: str = "dense",
     local_backend: str = "xla",
+    mutate: bool = False,
 ):
     """Wavefront-pipelined whole-traversal loop (one shard's view).
 
@@ -737,6 +1109,137 @@ def make_pipelined_loop(
     rungs_arr = jnp.asarray(rungs, jnp.int32)
     Cp = base_capacity
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
+    mut_base = F_SCRATCH + it.scratch_words if mutate else None
+
+    def pipelined_mut(pool, arena_rows, heap, bounds, perms):
+        """Write-path pipelined loop.  The two wavefronts chase separately
+        (stalling on staged writes), merge, and THEN the merged pool runs
+        this shard's commit phase -- bit-identical to the fused
+        chase-then-commit because the commit order is keyed on
+        (class, slot, id), never on pool layout.  The in-flight wavefront
+        can carry staged mutations: they ride the same send buffer and
+        commit where they land."""
+        CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
+        my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        L, R = pool.shape
+        S = it.scratch_words
+        W = arena_rows.shape[1]
+        lo = bounds[my_shard]
+        hi = bounds[my_shard + 1]
+        perm_w = translation.check_access(perms, my_shard, PERM_WRITE)
+        n0 = jax.lax.psum(
+            (pool[:, F_STATUS] == STATUS_ACTIVE).sum().astype(jnp.int32), axis_name
+        )
+        empty_send = jnp.broadcast_to(
+            empty_records(1, R - F_SCRATCH)[0], (num_shards, Cp, R)
+        ).astype(jnp.int32)
+
+        def cond(carry):
+            _, _, _, _, _, n_active, _, steps, *_ = carry
+            return (n_active > 0) & (steps < max_supersteps)
+
+        def body(carry):
+            (kept, send, rows, heap, did_route, n_active, n_remote, steps,
+             routed_acc, drop_acc, cap_counts, local_only) = carry
+
+            def chase(p):
+                return _local_superstep_mut(
+                    it, p, rows, heap[0], bounds, perms, my_shard,
+                    k_local=k_local, max_iters=max_iters,
+                    adaptive=True, commit=False,
+                )
+
+            def land(ops_):
+                kept, send = ops_
+                arrivals = _exchange(
+                    send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
+                )
+                landed = chase(arrivals)
+                resident = chase(kept)
+                return _merge_pools(resident, landed, L)
+
+            def stay(ops_):
+                kept, _ = ops_
+                return chase(kept), jnp.int32(0)
+
+            pool_s, n_drop = jax.lax.cond(did_route, land, stay, (kept, send))
+
+            # the merged pool commits exactly once per tick (the fused
+            # schedule's chase-then-commit, reordered across the overlap)
+            pool_s, rows, heap_row = _commit_phase(
+                pool_s, rows, heap[0], lo, hi, my_shard, perm_w, S=S, W=W
+            )
+            heap = heap_row[None, :]
+
+            capacity, do_route = _ladder_traced(
+                n_active, n_remote, num_shards=num_shards,
+                base_capacity=base_capacity,
+                min_link_capacity=min_link_capacity, compact=compact,
+            )
+
+            def extract(p):
+                return _route_decide(
+                    p, bounds, my_shard, num_shards,
+                    return_to_cpu=return_to_cpu,
+                    link_capacity=capacity, phys_capacity=base_capacity,
+                    drain_done=drain_done, mut_base=mut_base,
+                )
+
+            def hold(p):
+                return p, empty_send, jnp.int32(0)
+
+            if compact:
+                kept, send, n_routed = jax.lax.cond(do_route, extract, hold, pool_s)
+            else:
+                kept, send, n_routed = extract(pool_s)
+
+            inflight = send.reshape(num_shards * Cp, R)
+            na_local = (
+                (kept[:, F_STATUS] == STATUS_ACTIVE).sum()
+                + (inflight[:, F_STATUS] == STATUS_ACTIVE).sum()
+            ).astype(jnp.int32)
+            nr_local = _remote_active(kept, bounds, my_shard, mut_base).astype(
+                jnp.int32
+            )
+            counts = jax.lax.psum(jnp.stack([na_local, nr_local]), axis_name)
+
+            cap_counts = cap_counts + jnp.where(
+                do_route, (rungs_arr == capacity).astype(jnp.int32), 0
+            )
+            local_only = local_only + jnp.where(do_route, 0, 1).astype(jnp.int32)
+            return (
+                kept, send, rows, heap, do_route, counts[0], counts[1], steps + 1,
+                routed_acc + n_routed, drop_acc + n_drop, cap_counts, local_only,
+            )
+
+        init = (
+            pool, empty_send, arena_rows, heap, jnp.bool_(False), n0, n0,
+            jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.zeros(len(rungs), jnp.int32), jnp.int32(0),
+        )
+        (kept, send, rows, heap, did_route, n_active, _, steps,
+         routed_acc, drop_acc, cap_counts, local_only) = jax.lax.while_loop(
+            cond, body, init
+        )
+
+        def final_land(ops_):
+            kept, send = ops_
+            arrivals = _exchange(
+                send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
+            )
+            return _merge_pools(kept, arrivals, kept.shape[0])
+
+        def final_stay(ops_):
+            return ops_[0], jnp.int32(0)
+
+        pool_out, n_drop = jax.lax.cond(did_route, final_land, final_stay, (kept, send))
+
+        n_routed = jax.lax.psum(routed_acc, axis_name)
+        n_dropped = jax.lax.psum(drop_acc + n_drop, axis_name)
+        return (
+            pool_out, rows, heap, n_active, steps, n_routed, n_dropped,
+            cap_counts, local_only,
+        )
 
     def pipelined(pool, arena_rows, bounds, perms):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
@@ -861,7 +1364,7 @@ def make_pipelined_loop(
         n_dropped = jax.lax.psum(drop_acc + n_drop, axis_name)
         return pool_out, n_active, steps, n_routed, n_dropped, cap_counts, local_only
 
-    return pipelined
+    return pipelined_mut if mutate else pipelined
 
 
 def get_fused_runner(
@@ -882,21 +1385,26 @@ def get_fused_runner(
     schedule: str = "fused",
     fabric: str = "dense",
     local_backend: str = "xla",
+    mutate: bool = False,
 ):
     """Cached, jitted, donated whole-traversal executable (fused or
     wavefront-pipelined schedule).
 
-    Key = (iterator, mesh, pool shape, record width, schedule knobs); the
-    capacity rung is *traced state* inside the loop, so the ladder costs one
-    executable instead of O(log L).  ``donate_argnums=(0,)`` hands the request
-    pool's buffer to XLA (it is rebuilt per call, and the while_loop aliases
-    it in place); the resident arena buffers are NOT donated -- they are the
-    cross-call state being kept device-resident.
+    Key = (iterator, mesh, pool shape, record width, schedule knobs,
+    mutability); the capacity rung is *traced state* inside the loop, so the
+    ladder costs one executable instead of O(log L).  ``donate_argnums=(0,)``
+    hands the request pool's buffer to XLA (it is rebuilt per call, and the
+    while_loop aliases it in place); the arena buffers are NOT donated on
+    either path -- read-only runs keep them device-resident across calls,
+    and mutating runs deliberately leave the *input* snapshot intact (the
+    updated rows/heap come back as fresh outputs), so a caller can replay
+    the same pre-state through several schedules (the determinism oracle's
+    contract).
     """
     key = (
         it, mesh, axis_name, num_shards, pool_rows, scratch_words, k_local,
         max_iters, max_supersteps, base_capacity, min_link_capacity,
-        return_to_cpu, compact, schedule, fabric, local_backend,
+        return_to_cpu, compact, schedule, fabric, local_backend, mutate,
     )
     fn = _FUSED_CACHE.get(key)
     if fn is None:
@@ -909,7 +1417,7 @@ def get_fused_runner(
                 base_capacity=base_capacity,
                 min_link_capacity=min_link_capacity,
                 return_to_cpu=return_to_cpu, compact=compact,
-                fabric=fabric, local_backend=local_backend,
+                fabric=fabric, local_backend=local_backend, mutate=mutate,
             )
         else:
             loop = make_fused_loop(
@@ -919,14 +1427,20 @@ def get_fused_runner(
                 base_capacity=base_capacity,
                 min_link_capacity=min_link_capacity,
                 return_to_cpu=return_to_cpu, compact=compact,
-                fabric=fabric, local_backend=local_backend,
+                fabric=fabric, local_backend=local_backend, mutate=mutate,
             )
+        if mutate:
+            in_specs = (P(axis_name), P(axis_name), P(axis_name), P(), P())
+            out_specs = (
+                P(axis_name), P(axis_name), P(axis_name),
+                P(), P(), P(), P(), P(), P(),
+            )
+        else:
+            in_specs = (P(axis_name), P(axis_name), P(), P())
+            out_specs = (P(axis_name), P(), P(), P(), P(), P(), P())
         fn = jax.jit(
             shard_map_unchecked(
-                loop,
-                mesh=mesh,
-                in_specs=(P(axis_name), P(axis_name), P(), P()),
-                out_specs=(P(axis_name), P(), P(), P(), P(), P(), P()),
+                loop, mesh=mesh, in_specs=in_specs, out_specs=out_specs
             ),
             donate_argnums=(0,),
         )
@@ -1007,7 +1521,10 @@ def distributed_execute(
     would strand or delay exactly the hops that ablation measures -- so
     ``compact`` is ignored on that path.
 
-    Returns (records (B, R) ordered by request id, RoutingStats).
+    Returns (records (B, R) ordered by request id, RoutingStats) -- plus the
+    post-commit ``Arena`` as a third element when ``it.mutates`` (the input
+    arena object is left untouched, so the same pre-state can be replayed
+    through several schedules and compared bit-for-bit).
     """
     if schedule is None:
         schedule = "fused" if fused else "dispatched"
@@ -1017,6 +1534,18 @@ def distributed_execute(
         raise ValueError(f"unknown fabric {fabric!r}")
     if local_backend not in ("xla", "kernel"):
         raise ValueError(f"unknown local_backend {local_backend!r}")
+    mutate = it.mutates
+    if mutate and return_to_cpu:
+        raise ValueError(
+            "mutating iterators cannot run under the return_to_cpu ablation: "
+            "the home bounce would reorder commits against the write path's "
+            "superstep contract"
+        )
+    if mutate and local_backend == "kernel":
+        raise ValueError(
+            "mutating iterators are not supported on the pulse_chase kernel "
+            "local backend yet; use local_backend='xla'"
+        )
     fused = schedule in ("fused", "pipelined")
     num_shards = arena.num_shards
     P_axis = mesh.shape[axis_name]
@@ -1029,11 +1558,15 @@ def distributed_execute(
     B = ptr0.shape[0]
     Bp = ((B + num_shards - 1) // num_shards) * num_shards
     S = it.scratch_words
+    MW = mut_width(arena.node_words) if mutate else 0
     ids = jnp.arange(B, dtype=jnp.int32)
     home = ids % num_shards
-    rec = pack_requests(ids, home, jnp.asarray(ptr0, jnp.int32), jnp.asarray(scratch0, jnp.int32))
+    rec = pack_requests(
+        ids, home, jnp.asarray(ptr0, jnp.int32), jnp.asarray(scratch0, jnp.int32),
+        mut_words=MW,
+    )
     if Bp != B:
-        rec = jnp.concatenate([rec, empty_records(Bp - B, S)], axis=0)
+        rec = jnp.concatenate([rec, empty_records(Bp - B, S + MW)], axis=0)
         home_p = jnp.concatenate([home, jnp.arange(Bp - B, dtype=jnp.int32) % num_shards])
     else:
         home_p = home
@@ -1049,7 +1582,7 @@ def distributed_execute(
         c = int(counts[s])
         pools.append(
             jnp.concatenate(
-                [rec_sorted[off : off + c], empty_records(L - c, S)], axis=0
+                [rec_sorted[off : off + c], empty_records(L - c, S + MW)], axis=0
             )
         )
         off += c
@@ -1057,12 +1590,24 @@ def distributed_execute(
 
     sharding = NamedSharding(mesh, P(axis_name))
     pool_global = jax.device_put(pool_global.reshape(num_shards * L, -1), sharding)
-    arena_data, bounds, perms = _resident_arena(arena, mesh, axis_name)
+    if mutate:
+        # no resident-arena cache on the write path: the arena is the value
+        # being transformed, so place this call's snapshot explicitly (a
+        # no-op when the caller chains the returned arena back in) and hand
+        # the updated buffers back as a fresh Arena
+        arena_data = jax.device_put(arena.data, NamedSharding(mesh, P(axis_name, None)))
+        bounds = jax.device_put(arena.bounds, NamedSharding(mesh, P()))
+        perms = jax.device_put(arena.perms, NamedSharding(mesh, P()))
+        heap = jax.device_put(arena.heap, NamedSharding(mesh, P(axis_name, None)))
+        commits0 = int(np.asarray(arena.heap)[:, H_COMMITS].sum())
+        epochs0 = int(np.asarray(arena.heap)[:, H_EPOCH].sum())
+    else:
+        arena_data, bounds, perms = _resident_arena(arena, mesh, axis_name)
 
     base_capacity = L // num_shards
     compact = compact and not return_to_cpu
     drain_done = compact
-    R = record_width(S)
+    R = record_width(S, MW)
 
     if fused:
         runner = get_fused_runner(
@@ -1072,10 +1617,17 @@ def distributed_execute(
             base_capacity=base_capacity, min_link_capacity=min_link_capacity,
             return_to_cpu=return_to_cpu, compact=compact,
             schedule=schedule, fabric=fabric, local_backend=local_backend,
+            mutate=mutate,
         )
-        pool_global, n_active, steps, n_routed, n_drop, cap_counts, local_only = (
-            runner(pool_global, arena_data, bounds, perms)
-        )
+        if mutate:
+            (pool_global, arena_data, heap, n_active, steps, n_routed, n_drop,
+             cap_counts, local_only) = runner(
+                pool_global, arena_data, heap, bounds, perms
+            )
+        else:
+            pool_global, n_active, steps, n_routed, n_drop, cap_counts, local_only = (
+                runner(pool_global, arena_data, bounds, perms)
+            )
         if int(n_drop) != 0:  # not assert: must survive python -O
             raise RuntimeError(
                 f"request records lost in routing (pool overflow): {int(n_drop)}"
@@ -1096,8 +1648,9 @@ def distributed_execute(
             int(c) * num_shards * (num_shards - 1) * cap * R
             for c, cap in zip(np.asarray(cap_counts), rungs)
         )
-        return _decode_results(
+        out = _decode_results(
             pool_global, B, S,
+            mut_words=MW,
             supersteps=int(steps),
             local_only_steps=int(local_only),
             wire_words_total=wire_total,
@@ -1106,6 +1659,15 @@ def distributed_execute(
             fabric=fabric,
             num_shards=num_shards,
         )
+        if mutate:
+            heap_np = np.asarray(heap)
+            out[1].commits = int(heap_np[:, H_COMMITS].sum()) - commits0
+            out[1].epochs = int(heap_np[:, H_EPOCH].sum()) - epochs0
+            new_arena = Arena(
+                data=arena_data, bounds=arena.bounds, perms=arena.perms, heap=heap
+            )
+            return out[0], out[1], new_arena
+        return out
 
     def get_step(capacity: int | None, do_route: bool):
         # cached across calls: the serving loop re-enters distributed_execute
@@ -1114,7 +1676,7 @@ def distributed_execute(
         key = (
             it, mesh, axis_name, num_shards, k_local, max_iters,
             return_to_cpu, drain_done, capacity, do_route, fabric,
-            local_backend,
+            local_backend, mutate,
         )
         if key not in _STEP_CACHE:
             CACHE_STATS.misses += 1
@@ -1124,13 +1686,19 @@ def distributed_execute(
                 return_to_cpu=return_to_cpu,
                 link_capacity=capacity, drain_done=drain_done,
                 do_route=do_route, fabric=fabric, local_backend=local_backend,
+                mutate=mutate,
             )
+            if mutate:
+                in_specs = (P(axis_name), P(axis_name), P(axis_name), P(), P())
+                out_specs = (
+                    P(axis_name), P(axis_name), P(axis_name), P(), P(), P(), P(),
+                )
+            else:
+                in_specs = (P(axis_name), P(axis_name), P(), P())
+                out_specs = (P(axis_name), P(), P(), P(), P())
             _STEP_CACHE[key] = jax.jit(
                 shard_map(
-                    superstep,
-                    mesh=mesh,
-                    in_specs=(P(axis_name), P(axis_name), P(), P()),
-                    out_specs=(P(axis_name), P(), P(), P(), P()),
+                    superstep, mesh=mesh, in_specs=in_specs, out_specs=out_specs
                 )
             )
         else:
@@ -1159,9 +1727,15 @@ def distributed_execute(
         # link_capacity is dead in the local-only step: collapse those cache
         # keys to one so the capacity ladder doesn't compile duplicate steps
         step_capacity = capacity if (compact and do_route) else None
-        pool_global, n_active, n_routed, n_drop, n_remote = get_step(
-            step_capacity, do_route
-        )(pool_global, arena_data, bounds, perms)
+        if mutate:
+            (pool_global, arena_data, heap, n_active, n_routed, n_drop,
+             n_remote) = get_step(step_capacity, do_route)(
+                pool_global, arena_data, heap, bounds, perms
+            )
+        else:
+            pool_global, n_active, n_routed, n_drop, n_remote = get_step(
+                step_capacity, do_route
+            )(pool_global, arena_data, bounds, perms)
         steps += 1
         routed_per_step.append(int(n_routed))
         active_per_step.append(int(n_active))
@@ -1183,8 +1757,9 @@ def distributed_execute(
             f"(records would be returned with partial state otherwise)"
         )
 
-    return _decode_results(
+    out = _decode_results(
         pool_global, B, S,
+        mut_words=MW,
         supersteps=steps,
         routed_per_step=routed_per_step,
         active_per_step=active_per_step,
@@ -1195,6 +1770,15 @@ def distributed_execute(
         fabric=fabric,
         num_shards=num_shards,
     )
+    if mutate:
+        heap_np = np.asarray(heap)
+        out[1].commits = int(heap_np[:, H_COMMITS].sum()) - commits0
+        out[1].epochs = int(heap_np[:, H_EPOCH].sum()) - epochs0
+        new_arena = Arena(
+            data=arena_data, bounds=arena.bounds, perms=arena.perms, heap=heap
+        )
+        return out[0], out[1], new_arena
+    return out
 
 
 def _decode_results(
@@ -1202,6 +1786,7 @@ def _decode_results(
     B: int,
     scratch_words: int,
     *,
+    mut_words: int = 0,
     supersteps: int,
     routed_per_step: list | None = None,
     active_per_step: list | None = None,
@@ -1215,7 +1800,9 @@ def _decode_results(
     num_shards: int = 0,
 ):
     """Gather the final pools, order records by request id, build stats."""
-    all_rec = np.asarray(pool_global).reshape(-1, record_width(scratch_words))
+    all_rec = np.asarray(pool_global).reshape(
+        -1, record_width(scratch_words, mut_words)
+    )
     valid = all_rec[:, F_STATUS] != STATUS_EMPTY
     all_rec = all_rec[valid]
     all_rec = all_rec[all_rec[:, F_ID] < B]

@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.arena import NULL, ArenaBuilder
+from repro.core.arena import M_NONE, M_STORE, NULL, ArenaBuilder
 from repro.core.iterator import PulseIterator
 
 NODE_WORDS = 4
@@ -118,6 +118,69 @@ def find_iterator() -> PulseIterator:
         return done, jnp.where(done, upd, scratch)
 
     return PulseIterator(SCRATCH_WORDS, next_fn, end_fn, init, name="bst_find")
+
+
+# ------------------------------ write path ---------------------------------
+
+# update scratch: [key, new_value, state, found]
+U_KEY, U_VAL, U_ST, U_FOUND = range(4)
+U_WORDS = 4
+
+
+def update_iterator() -> PulseIterator:
+    """``map::operator[]``-style update-in-place: classic BST search descent;
+    on the matching node, stage a masked STORE of the VALUE word, then
+    validate on the post-commit iteration (a racing writer to the same node
+    serializes through the commit phase's (slot, id) order -- the loser
+    observes the foreign value and restages, so the last committed write
+    wins deterministically).  ``init(keys, values, root)``; scratch[U_FOUND]
+    reports whether the key existed."""
+
+    def init(keys, values, root_ptr):
+        keys = jnp.asarray(keys, jnp.int32)
+        B = keys.shape[0]
+        scratch = jnp.zeros((B, U_WORDS), jnp.int32)
+        scratch = scratch.at[:, U_KEY].set(keys)
+        scratch = scratch.at[:, U_VAL].set(jnp.asarray(values, jnp.int32))
+        return jnp.full((B,), root_ptr, jnp.int32), scratch
+
+    def mut_fn(node, ptr, scratch):
+        W = node.shape[0]
+        key = scratch[U_KEY]
+        val = scratch[U_VAL]
+        st = scratch[U_ST]
+        zeros = jnp.zeros((W,), jnp.int32)
+        hit = node[KEY] == key
+        nxt = jnp.where(key < node[KEY], node[LEFT], node[RIGHT])
+        s0, s1 = st == 0, st == 1
+        stage = (s0 & hit) | (s1 & (node[VALUE] != val))  # write or re-stage
+        updated = s1 & (node[VALUE] == val)
+        miss = s0 & ~hit & (nxt == NULL)
+        done = miss | updated
+        advance = s0 & ~hit & ~miss
+        new_ptr = jnp.where(advance, nxt, ptr).astype(jnp.int32)
+        new_scratch = scratch.at[U_ST].set(jnp.where(stage & s0, 1, st))
+        new_scratch = new_scratch.at[U_FOUND].set(
+            jnp.where(updated, 1, jnp.where(miss, 0, scratch[U_FOUND]))
+        )
+        m_op = jnp.where(stage, M_STORE, M_NONE).astype(jnp.int32)
+        m_tgt = jnp.where(stage, ptr, 0).astype(jnp.int32)
+        m_mask = jnp.where(stage, jnp.int32(1 << VALUE), 0)
+        m_data = jnp.where(stage[..., None], zeros.at[VALUE].set(val), zeros)
+        return done, new_ptr, new_scratch, (
+            m_op, m_tgt, m_mask, jnp.int32(0), m_data.astype(jnp.int32)
+        )
+
+    return PulseIterator(
+        scratch_words=U_WORDS,
+        next_fn=lambda node, ptr, scratch: (
+            jnp.where(scratch[U_KEY] < node[KEY], node[LEFT], node[RIGHT]), scratch
+        ),
+        end_fn=lambda node, ptr, scratch: (node[KEY] == scratch[U_KEY], scratch),
+        init_fn=init,
+        mut_fn=mut_fn,
+        name="bst_update",
+    )
 
 
 def result(scratch: jnp.ndarray):

@@ -14,7 +14,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.arena import NULL, ArenaBuilder
+from repro.core.arena import M_NONE, M_STORE, NULL, ArenaBuilder
 from repro.core.iterator import PulseIterator
 
 FANOUT = 8  # kNodeValues in Listing 8
@@ -143,6 +143,80 @@ def find_iterator() -> PulseIterator:
         return leaf, scratch
 
     return PulseIterator(S, next_fn, end_fn, init, name="btree_find")
+
+
+# ------------------------------ write path ---------------------------------
+
+# update scratch: [key, new_value, state, found]
+U_KEY, U_VAL, U_ST, U_FOUND = range(4)
+U_WORDS = 4
+
+
+def update_iterator() -> PulseIterator:
+    """Leaf-slot update-in-place: ``internal_locate`` descent to the leaf,
+    masked STORE of the matching slot's value word, post-commit validation
+    (racing writers to one slot serialize through the commit phase; the last
+    committed write wins and losers restage).  ``init(keys, values, root)``."""
+
+    def init(keys, values, root_ptr):
+        keys = jnp.asarray(keys, jnp.int32)
+        B = keys.shape[0]
+        scratch = jnp.zeros((B, U_WORDS), jnp.int32)
+        scratch = scratch.at[:, U_KEY].set(keys)
+        scratch = scratch.at[:, U_VAL].set(jnp.asarray(values, jnp.int32))
+        return jnp.full((B,), root_ptr, jnp.int32), scratch
+
+    def mut_fn(node, ptr, scratch):
+        W = node.shape[0]
+        key = scratch[U_KEY]
+        val = scratch[U_VAL]
+        st = scratch[U_ST]
+        zeros = jnp.zeros((W,), jnp.int32)
+        leaf = node[IS_LEAF] == 1
+        i = _descend_index(node, key)
+        child = jnp.asarray(node[CHILD0 : CHILD0 + FANOUT + 1])[i]
+        keys = jnp.asarray(node[KEYS0 : KEYS0 + FANOUT])
+        vals = jnp.asarray(node[VAL0 : VAL0 + FANOUT])
+        nk = node[NUM_KEYS]
+        idx = jnp.arange(FANOUT, dtype=jnp.int32)
+        hitvec = (idx < nk) & (keys == key)
+        hit = hitvec.any()
+        slot = jnp.argmax(hitvec).astype(jnp.int32)
+        s0, s1 = st == 0, st == 1
+        at_leaf_hit = leaf & hit
+        stage = (s0 & at_leaf_hit) | (s1 & (vals[slot] != val))
+        updated = s1 & (vals[slot] == val)
+        miss = s0 & leaf & ~hit
+        done = miss | updated
+        advance = s0 & ~leaf
+        new_ptr = jnp.where(advance, child, ptr).astype(jnp.int32)
+        new_scratch = scratch.at[U_ST].set(jnp.where(stage & s0, 1, st))
+        new_scratch = new_scratch.at[U_FOUND].set(
+            jnp.where(updated, 1, jnp.where(miss, 0, scratch[U_FOUND]))
+        )
+        m_op = jnp.where(stage, M_STORE, M_NONE).astype(jnp.int32)
+        m_tgt = jnp.where(stage, ptr, 0).astype(jnp.int32)
+        word = VAL0 + slot
+        m_mask = jnp.where(stage, jnp.left_shift(jnp.int32(1), word), 0)
+        m_data = jnp.where(
+            stage[..., None], zeros.at[word].set(val), zeros
+        )
+        return done, new_ptr, new_scratch, (
+            m_op, m_tgt, m_mask, jnp.int32(0), m_data.astype(jnp.int32)
+        )
+
+    def next_fn(node, ptr, scratch):
+        i = _descend_index(node, scratch[U_KEY])
+        return jnp.asarray(node[CHILD0 : CHILD0 + FANOUT + 1])[i], scratch
+
+    return PulseIterator(
+        scratch_words=U_WORDS,
+        next_fn=next_fn,
+        end_fn=lambda node, ptr, scratch: (node[IS_LEAF] == 1, scratch),
+        init_fn=init,
+        mut_fn=mut_fn,
+        name="btree_update",
+    )
 
 
 # scratch layout for range aggregation (the BTrDB workload: stateful

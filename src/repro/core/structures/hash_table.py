@@ -8,11 +8,14 @@ chain walk is the offloaded traversal.  Node layout (W=4):
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.arena import NULL, ArenaBuilder
 from repro.core.iterator import PulseIterator
+from repro.core.structures import linked_list
 
 NODE_WORDS = 4
 KEY, VALUE, NEXT = 0, 1, 2
@@ -108,6 +111,91 @@ def find_iterator(n_buckets: int) -> PulseIterator:
         end_fn=end_fn,
         init_fn=init,
         name="hash_find",
+    )
+
+
+# ------------------------------ write path ---------------------------------
+
+# sentinel bucket-head key: never matches a real key (real keys are >= 0 in
+# the write-path workloads); the sentinel gives every chain a stable first
+# node, so inserts into empty buckets and deletes of the first real node
+# both have a predecessor to CAS.
+SENTINEL_KEY = -(2**31)
+
+
+def build_writable(
+    b: ArenaBuilder, keys: np.ndarray, values: np.ndarray, n_buckets: int
+) -> np.ndarray:
+    """Writable-table build: every bucket head is an arena-resident sentinel
+    node (key = SENTINEL_KEY) whose NEXT starts the chain.  Returns the
+    sentinel addresses (n_buckets,) -- these never move, so the host-side
+    bucket table stays valid across inserts and deletes."""
+    sent = b.alloc(n_buckets)
+    rec = np.zeros((n_buckets, NODE_WORDS), np.int32)
+    rec[:, KEY] = SENTINEL_KEY
+    rec[:, NEXT] = NULL
+    b.write(sent, rec)
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    n = len(keys)
+    if n:
+        ptrs = b.alloc(n)
+        recs = np.zeros((n, NODE_WORDS), np.int32)
+        recs[:, KEY] = keys
+        recs[:, VALUE] = values
+        buckets = _np_hash(keys, n_buckets)
+        heads = np.asarray(b.data[sent, NEXT])
+        for i in range(n):
+            recs[i, NEXT] = heads[buckets[i]]
+            heads[buckets[i]] = ptrs[i]
+        b.write(ptrs, recs)
+        b.data[sent, NEXT] = heads
+    return sent.astype(np.int32)
+
+
+def _bucket_init(n_buckets, ops, keys, values, sentinels):
+    keys = jnp.asarray(keys, jnp.int32)
+    ptr0 = jnp.take(
+        jnp.asarray(sentinels, jnp.int32), hash_fn(keys, n_buckets), axis=0
+    )
+    _, scratch = linked_list._rw_init(ops, keys, values, 0)
+    return ptr0, scratch
+
+
+def rw_iterator(n_buckets: int) -> PulseIterator:
+    """Mixed find/insert/delete over the writable (sentinel-headed) table:
+    one batch, one iterator program, per-record op in scratch[RW_OP].
+    ``init(ops, keys, values, sentinels)``."""
+    def init(ops, keys, values, sentinels):
+        return _bucket_init(n_buckets, ops, keys, values, sentinels)
+
+    return dataclasses.replace(
+        linked_list.rw_iterator(), init_fn=init, name="hash_rw"
+    )
+
+
+def insert_iterator(n_buckets: int) -> PulseIterator:
+    """``unordered_map::insert`` as chain tail-append under the bucket's
+    sentinel.  ``init(keys, values, sentinels)``."""
+    def init(keys, values, sentinels):
+        ops = jnp.full(jnp.asarray(keys).shape, linked_list.OP_INSERT, jnp.int32)
+        return _bucket_init(n_buckets, ops, keys, values, sentinels)
+
+    return dataclasses.replace(
+        linked_list.rw_iterator(), init_fn=init, name="hash_insert"
+    )
+
+
+def delete_iterator(n_buckets: int) -> PulseIterator:
+    """``unordered_map::erase``: unlink under the sentinel + FREE the slot.
+    ``init(keys, sentinels)``."""
+    def init(keys, sentinels):
+        keys = jnp.asarray(keys, jnp.int32)
+        ops = jnp.full(keys.shape, linked_list.OP_DELETE, jnp.int32)
+        return _bucket_init(n_buckets, ops, keys, jnp.zeros_like(keys), sentinels)
+
+    return dataclasses.replace(
+        linked_list.rw_iterator(), init_fn=init, name="hash_delete"
     )
 
 

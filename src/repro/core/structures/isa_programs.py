@@ -143,10 +143,64 @@ def btree_find_program() -> isa.Program:
     return a.finish()
 
 
+def bst_update_program() -> isa.Program:
+    """Write path: BST update-in-place via the store class (STOREN).
+
+    Same state machine as ``bst.update_iterator``: descend (state 0), stage
+    a STOREN of the VALUE word on the matching node, stall for the commit,
+    then validate on the post-commit iteration (state 1) -- a foreign value
+    means a racing writer won the (slot, id) order, so the program restages.
+    scratch: [key, new_value, state, found].
+    """
+    a = isa.Asm(
+        scratch_words=bst.U_WORDS, node_words=bst.NODE_WORDS, name="bst_update_isa"
+    )
+    # r0=key r1=node.key r2=node.value r3=left r4=right r5=NULL r6=new_value
+    # r7=1 r8=state r9=cur r10=next r11=0
+    a.loads(0, bst.U_KEY)
+    a.loads(6, bst.U_VAL)
+    a.loads(8, bst.U_ST)
+    a.loadn(1, bst.KEY)
+    a.loadn(2, bst.VALUE)
+    a.loadn(3, bst.LEFT)
+    a.loadn(4, bst.RIGHT)
+    a.movi(5, NULL_IMM)
+    a.movi(7, 1)
+    a.getptr(9)
+    a.jeq(8, 7, "validate")
+    # state 0: descend or stage
+    a.jne(0, 1, "descend")
+    a.storen(bst.VALUE, 6)  # stage the write-back; commit applies it
+    a.stores(bst.U_ST, 7)
+    a.next_iter(9)  # stall at the node until the commit lands
+    a.label("descend")
+    a.jlt(0, 1, "left")
+    a.move(10, 4)
+    a.jmp("step")
+    a.label("left")
+    a.move(10, 3)
+    a.label("step")
+    a.jne(10, 5, "cont")
+    a.movi(11, 0)
+    a.stores(bst.U_FOUND, 11)
+    a.ret()  # miss: next hop is NULL
+    a.label("cont")
+    a.next_iter(10)
+    a.label("validate")
+    a.jeq(2, 6, "ok")
+    a.storen(bst.VALUE, 6)  # lost the commit race: restage
+    a.next_iter(9)
+    a.label("ok")
+    a.stores(bst.U_FOUND, 7)
+    a.ret()
+    return a.finish()
+
+
 def all_programs() -> dict[str, isa.Program]:
     return {
         "list_find": list_find_program(),
         "hash_find": hash_find_program(),
         "bst_find": bst_find_program(),
         "btree_find": btree_find_program(),
+        "bst_update": bst_update_program(),
     }

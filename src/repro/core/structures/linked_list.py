@@ -5,10 +5,12 @@ Node layout (W=4): ``[key, value, next, pad]``.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.arena import NULL, ArenaBuilder
+from repro.core.arena import M_ALLOC, M_CAS, M_FREE, M_NONE, NULL, ArenaBuilder
 from repro.core.iterator import PulseIterator
 
 NODE_WORDS = 4
@@ -17,6 +19,19 @@ KEY, VALUE, NEXT = 0, 1, 2
 # scratch layout for find: [search_key, result_value, found_flag]
 SCRATCH_WORDS = 3
 KEY_NOT_FOUND = -(2**31) + 1
+
+# ---------------------------------------------------------------------------
+# Write path (chain structures): optimistic tail-insert and unlink-delete.
+#
+# One scratch layout serves find/insert/delete so a single mutating iterator
+# program (``rw_iterator``) can serve a *mixed* read/write batch -- finds race
+# inserts and deletes inside the same supersteps, and the per-shard commit
+# phase serializes the writers:
+#   [op, key, value, state, result, aux_prev, aux_victim, aux_vnext]
+# op: 0 find / 1 insert / 2 delete.
+RW_OP, RW_KEY, RW_VAL, RW_STATE, RW_RES, RW_A, RW_B, RW_C = range(8)
+RW_WORDS = 8
+OP_FIND, OP_INSERT, OP_DELETE = 0, 1, 2
 
 
 def build_into(b: ArenaBuilder, keys: np.ndarray, values: np.ndarray) -> int:
@@ -102,6 +117,196 @@ def sum_iterator() -> PulseIterator:
         return node[NEXT] == NULL, scratch
 
     return PulseIterator(S, next_fn, end_fn, init, name="list_sum")
+
+
+# ------------------------------ write path ---------------------------------
+
+
+def chain_rw_step(node, ptr, scratch):
+    """One iteration of the chain read/write state machine (shared by
+    linked_list and hash_table -- the node layout is identical).
+
+    Insert appends at the tail: walk to NEXT == NULL, stage ALLOC of the new
+    node (commit deposits its address into scratch[RW_RES]), then CAS the
+    tail's NEXT from NULL to the new address; a lost CAS is observed on the
+    next iteration (NEXT neither NULL nor ours) and the walk resumes toward
+    the new tail.  Delete walks with a carried prev pointer, CASes
+    prev.NEXT from victim to victim.NEXT, validates at prev, then FREEs the
+    victim's slot.  The first node of a chain acts as a sentinel: it is
+    never deleted (hash_table's writable build allocates explicit sentinel
+    bucket heads; list workloads reserve the head key).
+
+    Known limitation (documented, per-node locks are future work): a
+    concurrent delete of the same victim or an ABA on a freed-and-reused
+    slot is not detected -- workloads must not race two deletes of one key.
+    """
+    W = node.shape[0]
+    op = scratch[RW_OP]
+    key = scratch[RW_KEY]
+    val = scratch[RW_VAL]
+    st = scratch[RW_STATE]
+    nkey, nval, nnext = node[KEY], node[VALUE], node[NEXT]
+    zeros = jnp.zeros((W,), jnp.int32)
+
+    is_find = op == OP_FIND
+    is_ins = op == OP_INSERT
+    is_del = op == OP_DELETE
+
+    # ---- find -------------------------------------------------------------
+    f_hit = nkey == key
+    f_done = f_hit | (nnext == NULL)
+    f_scratch = scratch.at[RW_VAL].set(
+        jnp.where(f_hit, nval, jnp.int32(KEY_NOT_FOUND))
+    ).at[RW_RES].set(f_hit.astype(jnp.int32))
+
+    # ---- insert -----------------------------------------------------------
+    at_tail = nnext == NULL
+    linked = nnext == scratch[RW_RES]
+    i0, i1 = st == 0, st == 1
+    ins_done = i1 & linked
+    ins_stage_alloc = i0 & at_tail
+    ins_stage_cas = i1 & at_tail
+    ins_advance = ~at_tail & ~ins_done
+    i_scratch = scratch.at[RW_STATE].set(jnp.where(ins_stage_alloc, 1, st))
+    alloc_data = zeros.at[KEY].set(key).at[VALUE].set(val).at[NEXT].set(NULL)
+    alloc_mask = (1 << KEY) | (1 << VALUE) | (1 << NEXT)
+    ins_cas_data = zeros.at[NEXT].set(scratch[RW_RES])
+
+    # ---- delete -----------------------------------------------------------
+    prev, victim, vnext = scratch[RW_A], scratch[RW_B], scratch[RW_C]
+    d0, d1, d2 = st == 0, st == 1, st == 2
+    d_hit = nkey == key
+    d_hasprev = prev != NULL
+    del_stage_cas = d0 & d_hit & d_hasprev
+    del_miss = d0 & ((d_hit & ~d_hasprev) | (~d_hit & (nnext == NULL)))
+    del_ok = d1 & (nnext == vnext)  # swing took; free the victim
+    del_refind = d1 & ~del_ok  # lost the CAS: re-walk from prev
+    del_done = d2  # free committed
+    d_advance = d0 & ~d_hit & (nnext != NULL)
+    d_scratch = scratch
+    d_scratch = d_scratch.at[RW_A].set(jnp.where(d_advance, ptr, prev))
+    d_scratch = d_scratch.at[RW_B].set(jnp.where(del_stage_cas, ptr, victim))
+    d_scratch = d_scratch.at[RW_C].set(jnp.where(del_stage_cas, nnext, vnext))
+    d_scratch = d_scratch.at[RW_STATE].set(
+        jnp.where(del_stage_cas, 1, jnp.where(del_ok, 2, jnp.where(del_refind, 0, st)))
+    )
+    d_scratch = d_scratch.at[RW_RES].set(jnp.where(del_done, 1, scratch[RW_RES]))
+    # the CAS is staged on the same iteration that discovers the victim, so
+    # its payload uses the live values (ptr/nnext), not the scratch copies
+    # being written this step
+    del_cas_data = zeros.at[NEXT].set(nnext)
+
+    # ---- combine ----------------------------------------------------------
+    done = (
+        (is_find & f_done)
+        | (is_ins & ins_done)
+        | (is_del & (del_miss | del_done))
+    )
+    new_ptr = jnp.where(
+        is_find,
+        nnext,
+        jnp.where(
+            is_ins,
+            jnp.where(ins_advance, nnext, ptr),
+            jnp.where(d_advance, nnext, jnp.where(del_stage_cas, prev, ptr)),
+        ),
+    ).astype(jnp.int32)
+    new_scratch = jnp.where(
+        is_find, f_scratch, jnp.where(is_ins, i_scratch, d_scratch)
+    ).astype(jnp.int32)
+
+    m_op = jnp.where(
+        is_ins & ins_stage_alloc,
+        M_ALLOC,
+        jnp.where(
+            (is_ins & ins_stage_cas) | (is_del & del_stage_cas),
+            M_CAS,
+            jnp.where(is_del & del_ok, M_FREE, M_NONE),
+        ),
+    ).astype(jnp.int32)
+    m_tgt = jnp.where(
+        is_ins & ins_stage_alloc,
+        jnp.int32(RW_RES),
+        jnp.where(
+            is_ins & ins_stage_cas,
+            ptr,
+            jnp.where(is_del & del_stage_cas, prev, victim),
+        ),
+    ).astype(jnp.int32)
+    m_mask = jnp.where(
+        is_ins & ins_stage_alloc,
+        jnp.int32(alloc_mask),
+        jnp.where(
+            (is_ins & ins_stage_cas) | (is_del & del_stage_cas),
+            jnp.int32(1 << NEXT),
+            jnp.int32(0),
+        ),
+    )
+    m_expect = jnp.where(
+        is_ins & ins_stage_cas, jnp.int32(NULL),
+        jnp.where(is_del & del_stage_cas, ptr, jnp.int32(0)),
+    )
+    m_data = jnp.where(
+        (is_ins & ins_stage_alloc)[..., None],
+        alloc_data,
+        jnp.where(
+            (is_ins & ins_stage_cas)[..., None],
+            ins_cas_data,
+            jnp.where((is_del & del_stage_cas)[..., None], del_cas_data, zeros),
+        ),
+    ).astype(jnp.int32)
+    return done, new_ptr, new_scratch, (m_op, m_tgt, m_mask, m_expect, m_data)
+
+
+def _rw_init(ops, keys, values, head_ptr):
+    ops = jnp.asarray(ops, jnp.int32)
+    B = ops.shape[0]
+    scratch = jnp.zeros((B, RW_WORDS), jnp.int32)
+    scratch = scratch.at[:, RW_OP].set(ops)
+    scratch = scratch.at[:, RW_KEY].set(jnp.asarray(keys, jnp.int32))
+    scratch = scratch.at[:, RW_VAL].set(jnp.asarray(values, jnp.int32))
+    scratch = scratch.at[:, RW_A].set(NULL)  # delete's prev pointer
+    ptr0 = jnp.broadcast_to(jnp.asarray(head_ptr, jnp.int32), (B,))
+    return ptr0, scratch
+
+
+def rw_iterator() -> PulseIterator:
+    """Mixed read/write chain iterator: each record's scratch[RW_OP] selects
+    find, tail-insert, or delete -- all racing in the same batch, serialized
+    only by the per-shard commit phases.  ``init(ops, keys, values, head)``."""
+    return PulseIterator(
+        scratch_words=RW_WORDS,
+        next_fn=lambda node, ptr, scratch: (node[NEXT], scratch),
+        end_fn=lambda node, ptr, scratch: (node[NEXT] == NULL, scratch),
+        init_fn=_rw_init,
+        mut_fn=chain_rw_step,
+        name="list_rw",
+    )
+
+
+def insert_iterator() -> PulseIterator:
+    """Tail-insert: ``init(keys, values, head)``; the committed node's global
+    address lands in scratch[RW_RES]."""
+
+    def init(keys, values, head_ptr):
+        keys = jnp.asarray(keys, jnp.int32)
+        return _rw_init(jnp.full(keys.shape, OP_INSERT, jnp.int32), keys, values, head_ptr)
+
+    return dataclasses.replace(rw_iterator(), init_fn=init, name="list_insert")
+
+
+def delete_iterator() -> PulseIterator:
+    """Unlink + free by key: ``init(keys, head)``; scratch[RW_RES] reports
+    success.  The chain's first node is a sentinel and is never deleted."""
+
+    def init(keys, head_ptr):
+        keys = jnp.asarray(keys, jnp.int32)
+        return _rw_init(
+            jnp.full(keys.shape, OP_DELETE, jnp.int32), keys,
+            jnp.zeros_like(keys), head_ptr,
+        )
+
+    return dataclasses.replace(rw_iterator(), init_fn=init, name="list_delete")
 
 
 # ------------------------------- references --------------------------------

@@ -17,7 +17,15 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.arena import NULL, ArenaBuilder
+from repro.core.arena import (
+    M_ALLOC,
+    M_CAS,
+    M_FREE,
+    M_NONE,
+    M_STORE,
+    NULL,
+    ArenaBuilder,
+)
 from repro.core.iterator import PulseIterator
 
 LEVELS = 4
@@ -123,3 +131,212 @@ def find_iterator() -> PulseIterator:
 def ref_find(keys, values, search_keys):
     d = {int(k): int(v) for k, v in zip(keys, values)}
     return [(d.get(int(k), KEY_NOT_FOUND), int(int(k) in d)) for k in search_keys]
+
+
+# ------------------------------ write path ---------------------------------
+#
+# Runtime inserts link at level 0 only: the new node is a full tower record
+# (upper levels empty), reachable through every search path because level 0
+# is the ground truth list; upper levels merely shortcut.  Runtime deletes
+# are therefore valid for level-0 nodes (everything inserted at runtime);
+# deleting a build-time node with a taller tower would leave stale tower
+# links -- per-node lock/tower-repair is future work (see README).
+
+# insert scratch: [key, value, state, new_ptr, succ_ptr]
+SI_KEY, SI_VAL, SI_ST, SI_RES, SI_SUCC = range(5)
+SI_WORDS = 5
+# delete scratch: [key, state, prev, victim, victim_next0, result]
+SD_KEY, SD_ST, SD_PREV, SD_VICTIM, SD_VNEXT, SD_RES = range(6)
+SD_WORDS = 6
+
+_LINK_MASK = (1 << NPTR0) | (1 << (NPTR0 + 1))  # (next_ptr0, next_key0)
+
+
+def _advance_strict(node, key):
+    """Pred walk: longest jump to a node with key strictly below ``key``."""
+    nkeys = jnp.stack([node[NPTR0 + 2 * l + 1] for l in range(LEVELS)])
+    nptrs = jnp.stack([node[NPTR0 + 2 * l] for l in range(LEVELS)])
+    ok = nkeys < key
+    lvl = (LEVELS - 1) - jnp.argmax(ok[::-1]).astype(jnp.int32)
+    return ok.any(), jnp.where(ok.any(), nptrs[lvl], NULL)
+
+
+def insert_iterator() -> PulseIterator:
+    """Optimistic level-0 insert with fat-pointer maintenance: descend to the
+    strict predecessor, ALLOC the new tower (level-0 links copied from the
+    pred's cached fat pointer), then CAS the pred's (next_ptr0, next_key0)
+    pair; a lost race is observed at the pred and repaired by re-fixing the
+    new node's own links (blind STORE -- it is unreachable until linked) and
+    re-CASing.  Duplicate keys free the allocated node and report found=0."""
+
+    def init(keys, values, head_ptr):
+        keys = jnp.asarray(keys, jnp.int32)
+        B = keys.shape[0]
+        scratch = jnp.zeros((B, SI_WORDS), jnp.int32)
+        scratch = scratch.at[:, SI_KEY].set(keys)
+        scratch = scratch.at[:, SI_VAL].set(jnp.asarray(values, jnp.int32))
+        return jnp.full((B,), head_ptr, jnp.int32), scratch
+
+    def mut_fn(node, ptr, scratch):
+        W = node.shape[0]
+        key = scratch[SI_KEY]
+        val = scratch[SI_VAL]
+        st = scratch[SI_ST]
+        zeros = jnp.zeros((W,), jnp.int32)
+        can_adv, nxt = _advance_strict(node, key)
+        next0, nkey0 = node[NPTR0], node[NPTR0 + 1]
+        at_pred = ~can_adv
+        dup = at_pred & (nkey0 == key)
+        s0, s1, s3 = st == 0, st == 1, st == 3
+
+        # state 0: descend; at the pred, ALLOC the tower (or bail on dup)
+        stage_alloc = s0 & at_pred & ~dup
+        tower = zeros.at[KEY].set(key).at[VALUE].set(val)
+        tower = tower.at[NPTR0].set(next0).at[NPTR0 + 1].set(nkey0)
+        for l in range(1, LEVELS):
+            tower = tower.at[NPTR0 + 2 * l].set(NULL)
+            tower = tower.at[NPTR0 + 2 * l + 1].set(INT_MAX)
+        tower_mask = (1 << (2 + 2 * LEVELS)) - 1  # words 0 .. 1+2*LEVELS
+
+        # state 1: at the pred with an allocated node
+        linked = s1 & (next0 == scratch[SI_RES])
+        dup_won = s1 & at_pred & ~linked & dup  # someone linked our key
+        succ_stale = s1 & at_pred & ~linked & ~dup & (next0 != scratch[SI_SUCC])
+        stage_fix = succ_stale  # blind STORE: our node is still unreachable
+        fix_data = zeros.at[NPTR0].set(next0).at[NPTR0 + 1].set(nkey0)
+        stage_cas = s1 & at_pred & ~linked & ~dup & (next0 == scratch[SI_SUCC])
+        cas_data = zeros.at[NPTR0].set(scratch[SI_RES]).at[NPTR0 + 1].set(key)
+        stage_free = dup_won  # give the unused slot back
+        done = (s0 & dup) | linked | s3
+
+        advance = (s0 | s1) & can_adv & ~done
+        new_ptr = jnp.where(advance, nxt, ptr).astype(jnp.int32)
+        new_scratch = scratch
+        new_scratch = new_scratch.at[SI_ST].set(
+            jnp.where(stage_alloc, 1, jnp.where(stage_free, 3, st))
+        )
+        new_scratch = new_scratch.at[SI_SUCC].set(
+            jnp.where(stage_alloc | stage_fix, next0, scratch[SI_SUCC])
+        )
+
+        m_op = jnp.where(
+            stage_alloc, M_ALLOC,
+            jnp.where(stage_cas, M_CAS,
+                      jnp.where(stage_fix, M_STORE,
+                                jnp.where(stage_free, M_FREE, M_NONE))),
+        ).astype(jnp.int32)
+        m_tgt = jnp.where(
+            stage_alloc, jnp.int32(SI_RES),
+            jnp.where(stage_cas, ptr,
+                      jnp.where(stage_fix | stage_free, scratch[SI_RES], 0)),
+        ).astype(jnp.int32)
+        m_mask = jnp.where(
+            stage_alloc, jnp.int32(tower_mask),
+            jnp.where(stage_cas | stage_fix, jnp.int32(_LINK_MASK), 0),
+        )
+        m_expect = jnp.where(stage_cas, scratch[SI_SUCC], jnp.int32(0))
+        m_data = jnp.where(
+            stage_alloc[..., None], tower,
+            jnp.where(stage_cas[..., None], cas_data,
+                      jnp.where(stage_fix[..., None], fix_data, zeros)),
+        ).astype(jnp.int32)
+        return done, new_ptr, new_scratch, (m_op, m_tgt, m_mask, m_expect, m_data)
+
+    return PulseIterator(
+        scratch_words=SI_WORDS,
+        next_fn=lambda node, ptr, scratch: (
+            _advance_strict(node, scratch[SI_KEY])[1], scratch
+        ),
+        end_fn=lambda node, ptr, scratch: (
+            ~_advance_strict(node, scratch[SI_KEY])[0], scratch
+        ),
+        init_fn=init,
+        mut_fn=mut_fn,
+        name="skiplist_insert",
+    )
+
+
+def delete_iterator() -> PulseIterator:
+    """Unlink a level-0 node: descend to the strict pred, hop to the victim
+    to read its level-0 links, CAS the pred's fat pointer past it, validate,
+    then FREE the slot.  ``init(keys, head_ptr)``; scratch[SD_RES] reports
+    success (absent keys report 0)."""
+
+    def init(keys, head_ptr):
+        keys = jnp.asarray(keys, jnp.int32)
+        B = keys.shape[0]
+        scratch = jnp.zeros((B, SD_WORDS), jnp.int32)
+        scratch = scratch.at[:, SD_KEY].set(keys)
+        return jnp.full((B,), head_ptr, jnp.int32), scratch
+
+    def mut_fn(node, ptr, scratch):
+        W = node.shape[0]
+        key = scratch[SD_KEY]
+        st = scratch[SD_ST]
+        zeros = jnp.zeros((W,), jnp.int32)
+        can_adv, nxt = _advance_strict(node, key)
+        next0, nkey0 = node[NPTR0], node[NPTR0 + 1]
+        at_pred = ~can_adv
+        s0, s1, s2, s3 = st == 0, st == 1, st == 2, st == 3
+
+        # state 0: descend to pred; hop to the victim (or miss)
+        found = s0 & at_pred & (nkey0 == key)
+        miss = s0 & at_pred & (nkey0 != key)
+        # state 1: at the victim -- read its links, CAS the pred past it
+        stage_cas = s1
+        cas_data = zeros.at[NPTR0].set(next0).at[NPTR0 + 1].set(nkey0)
+        # state 2: back at the pred -- validate the swing
+        swung = s2 & (next0 == scratch[SD_VNEXT])
+        refind = s2 & ~swung  # lost the race: walk again from the pred
+        stage_free = swung
+        done = miss | s3
+
+        advance = s0 & can_adv
+        new_ptr = jnp.where(
+            advance, nxt,
+            jnp.where(found, next0,  # hop to the victim
+                      jnp.where(stage_cas, scratch[SD_PREV], ptr)),
+        ).astype(jnp.int32)
+        new_scratch = scratch
+        new_scratch = new_scratch.at[SD_PREV].set(
+            jnp.where(found, ptr, scratch[SD_PREV])
+        )
+        new_scratch = new_scratch.at[SD_VICTIM].set(
+            jnp.where(found, next0, scratch[SD_VICTIM])
+        )
+        new_scratch = new_scratch.at[SD_VNEXT].set(
+            jnp.where(stage_cas, next0, scratch[SD_VNEXT])
+        )
+        new_scratch = new_scratch.at[SD_ST].set(
+            jnp.where(found, 1,
+                      jnp.where(stage_cas, 2,
+                                jnp.where(swung, 3, jnp.where(refind, 0, st))))
+        )
+        new_scratch = new_scratch.at[SD_RES].set(
+            jnp.where(s3, 1, scratch[SD_RES])
+        )
+
+        m_op = jnp.where(
+            stage_cas, M_CAS, jnp.where(stage_free, M_FREE, M_NONE)
+        ).astype(jnp.int32)
+        m_tgt = jnp.where(
+            stage_cas, scratch[SD_PREV],
+            jnp.where(stage_free, scratch[SD_VICTIM], 0),
+        ).astype(jnp.int32)
+        m_mask = jnp.where(stage_cas, jnp.int32(_LINK_MASK), 0)
+        m_expect = jnp.where(stage_cas, scratch[SD_VICTIM], jnp.int32(0))
+        m_data = jnp.where(stage_cas[..., None], cas_data, zeros).astype(jnp.int32)
+        return done, new_ptr, new_scratch, (m_op, m_tgt, m_mask, m_expect, m_data)
+
+    return PulseIterator(
+        scratch_words=SD_WORDS,
+        next_fn=lambda node, ptr, scratch: (
+            _advance_strict(node, scratch[SD_KEY])[1], scratch
+        ),
+        end_fn=lambda node, ptr, scratch: (
+            ~_advance_strict(node, scratch[SD_KEY])[0], scratch
+        ),
+        init_fn=init,
+        mut_fn=mut_fn,
+        name="skiplist_delete",
+    )

@@ -43,6 +43,7 @@ class TraversalRequest:
     tenant: str = "default"
     deadline_ms: float | None = None
     arrive_round: int = 0  # logical arrival time (service rounds)
+    value: int = 0  # write payload (inserts/updates; ignored by reads)
 
     # filled in by the service
     arrival_s: float = -1.0
@@ -67,6 +68,70 @@ class TraversalRequest:
         return self.latency_ms <= self.deadline_ms
 
 
+def apply_write_barriers(
+    free_slots: dict[str, int],
+    group_of: dict[str, str],
+    writes: dict[str, bool],
+    occupied: dict[str, bool],
+    pending: dict[str, int],
+) -> dict[str, int]:
+    """Write-path admission barrier: per structure *group*, writers get the
+    group exclusively.
+
+    Rules (G = group of a slot-group; a "writer" runs a mutating iterator):
+
+      * a write slot-group admits only while NO other slot-group of G is
+        occupied -- one write batch owns the group at a time, so its commit
+        supersteps never interleave with that group's reads mid-flight;
+      * a read slot-group admits only while no write slot-group of G is
+        occupied AND no write request for G is queued -- queued writers
+        drain the readers out first (anti-starvation: a write behind a
+        steady read stream would otherwise never see the group empty).
+
+    Readers of *other* groups are untouched: the barrier is per structure
+    group, exactly the scope one per-structure lock would cover.
+    Returns a copy of ``free_slots`` with blocked structures zeroed.
+    """
+    write_occupied = {
+        group_of[n] for n, occ in occupied.items() if occ and writes.get(n)
+    }
+    read_occupied = {
+        group_of[n] for n, occ in occupied.items() if occ and not writes.get(n)
+    }
+    write_pending = {
+        group_of[n] for n in pending if writes.get(n)
+    }
+    # one writer per group per round: the occupied writer keeps the group;
+    # otherwise the pending writer with the OLDEST queued request (arrival
+    # sequence, name as tiebreak) wins the claim -- FIFO-consistent, so the
+    # winner is the writer admission would reach first, and two write
+    # slot-groups of one group are never admitted into the same round
+    write_winner: dict[str, str] = {}
+    claims: dict[str, tuple] = {}
+    for n in sorted(free_slots):
+        if not writes.get(n):
+            continue
+        g = group_of[n]
+        if n in pending:
+            key = (pending[n], n)
+            if g not in claims or key < claims[g]:
+                claims[g] = key
+                write_winner[g] = n
+    for n in free_slots:  # occupied writers override pending claims
+        if writes.get(n) and occupied.get(n):
+            write_winner[group_of[n]] = n
+    out = dict(free_slots)
+    for name in out:
+        g = group_of[name]
+        if writes.get(name):
+            if g in read_occupied or write_winner.get(g) != name:
+                out[name] = 0
+        else:
+            if g in write_occupied or g in write_pending:
+                out[name] = 0
+    return out
+
+
 class AdmissionController:
     """Per-tenant queues + EDF-with-fairness slot assignment."""
 
@@ -84,6 +149,21 @@ class AdmissionController:
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def pending_by_structure(self) -> dict[str, int]:
+        """Earliest queued arrival sequence per structure (presence in the
+        dict == has pending work).  Drives the write barriers: the winning
+        writer of a group is the one whose request has waited longest, which
+        keeps the barrier consistent with FIFO admission order (a name-order
+        winner could deadlock against a tenant whose queue head is the other
+        writer)."""
+        out: dict[str, int] = {}
+        for q in self._queues.values():
+            for r in q:
+                s = getattr(r, "_seq", 0)
+                cur = out.get(r.structure)
+                out[r.structure] = s if cur is None else min(cur, s)
+        return out
 
     def __len__(self) -> int:
         return self.pending()

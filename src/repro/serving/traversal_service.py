@@ -26,6 +26,13 @@ The service runs identically over the engine's local XLA path, the
 pulse_chase kernel path (``backend="kernel"``), and the distributed
 superstep path (engine constructed with a mesh) -- admission is above the
 dispatch decision, like the paper's CPU node.
+
+**Write tenants** -- a spec whose iterator mutates (inserts/deletes/updates,
+``StructureSpec.writes``) is admitted under a per-structure-group barrier
+(``admission.apply_write_barriers``): a write batch owns its group
+exclusively, queued writers drain readers out first, and the engine's
+resident arena is swapped to the post-commit state after every mutating
+quantum -- so the next round's reads (any group) traverse the updated heap.
 """
 
 from __future__ import annotations
@@ -46,17 +53,36 @@ from repro.core.iterator import (
     STATUS_MAXED,
     PulseIterator,
 )
-from repro.serving.admission import AdmissionController, TraversalRequest
+from repro.serving.admission import (
+    AdmissionController,
+    TraversalRequest,
+    apply_write_barriers,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class StructureSpec:
     """A servable structure: the iterator program + its fixed init arguments
     (root pointer, bucket heads, ...).  ``init`` is called per admission
-    batch with the admitted queries."""
+    batch with the admitted queries.
+
+    ``group`` names the structure *family* the spec operates on (defaults to
+    the spec's registered name): a mutating spec ("list_insert") and the
+    read spec over the same heap region ("list") share a group, and the
+    admission barrier gives writers the group exclusively
+    (``admission.apply_write_barriers``).  Mutability is derived from the
+    iterator itself."""
 
     iterator: PulseIterator
     init_args: tuple = ()
+    group: str | None = None
+    # True for specs whose init() takes (keys, values, ...) -- inserts and
+    # updates consume the request's write payload (TraversalRequest.value)
+    takes_value: bool = False
+
+    @property
+    def writes(self) -> bool:
+        return self.iterator.mutates
 
 
 @dataclasses.dataclass
@@ -78,6 +104,9 @@ class ServiceMetrics:
     # engine-side aggregates (distributed path only)
     supersteps: int = 0
     wire_words: int = 0
+    # write path: mutations committed + requests served by mutating specs
+    commits: int = 0
+    writes_retired: int = 0
 
     def _pct(self, p: float) -> float:
         if not self.latencies_ms:
@@ -195,6 +224,14 @@ class PulseService:
         for r in arrivals:
             self.admission.submit(r, now_s)
         free = {name: g.free_slots() for name, g in self.groups.items()}
+        # write-path barrier: writers take their structure group exclusively
+        free = apply_write_barriers(
+            free,
+            {n: g.spec.group or n for n, g in self.groups.items()},
+            {n: g.spec.writes for n, g in self.groups.items()},
+            {n: bool(g.occupied().any()) for n, g in self.groups.items()},
+            self.admission.pending_by_structure(),
+        )
         admitted = self.admission.admit(free)
         by_group: dict[str, list[TraversalRequest]] = {}
         for r in admitted:
@@ -204,7 +241,11 @@ class PulseService:
             queries = jnp.asarray(
                 np.array([r.query for r in reqs], np.int32)
             )
-            ptr0, scr0 = g.spec.iterator.init(queries, *g.spec.init_args)
+            if g.spec.takes_value:
+                values = jnp.asarray(np.array([r.value for r in reqs], np.int32))
+                ptr0, scr0 = g.spec.iterator.init(queries, values, *g.spec.init_args)
+            else:
+                ptr0, scr0 = g.spec.iterator.init(queries, *g.spec.init_args)
             ptr0 = np.asarray(ptr0, np.int32)
             scr0 = np.asarray(scr0, np.int32)
             free_idx = [i for i, r in enumerate(g.req) if r is None]
@@ -229,6 +270,7 @@ class PulseService:
         g.ptr[slot] = NULL
         m = self.metrics
         m.retired += 1
+        m.writes_retired += int(g.spec.writes)
         m.completed += int(status == STATUS_DONE)
         m.faulted += int(status == STATUS_FAULT)
         m.timed_out += int(status == STATUS_MAXED)
@@ -267,6 +309,7 @@ class PulseService:
         if stats is not None and hasattr(stats, "supersteps"):
             self.metrics.supersteps += stats.supersteps
             self.metrics.wire_words += stats.total_wire_words
+            self.metrics.commits += getattr(stats, "commits", 0)
         for s in np.flatnonzero(occ):
             g.ptr[s] = res.ptr[s]
             g.scratch[s] = res.scratch[s]

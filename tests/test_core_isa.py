@@ -56,6 +56,38 @@ def test_verifier_bounds_node_index():
         a.finish()
 
 
+def test_op_names_exhaustive_over_real_opcode_set():
+    """The dead SELECT stub is gone; OP_NAMES/disasm cover every opcode."""
+    assert not hasattr(isa, "SELECT")
+    assert set(isa.OP_NAMES) == set(isa.ALL_OPS)
+    assert isa.ALL_OPS == tuple(range(len(isa.ALL_OPS)))  # dense encoding
+    # disasm of a program touching the store class never prints '?'
+    a = isa.Asm(scratch_words=2, node_words=4)
+    a.movi(0, 1)
+    a.storen(1, 0)
+    a.alloc(1)
+    a.setptr(2, 0, 0)
+    a.free(0)
+    a.ret()
+    text = a.finish().disasm()
+    assert "?" not in text
+    for name in ("STOREN", "ALLOC", "SETPTR", "FREE"):
+        assert name in text
+
+
+def test_verifier_bounds_store_class_indices():
+    for build in (
+        lambda a: a.storen(9, 0),  # node index out of range
+        lambda a: a.setptr(9, 0, 0),
+        lambda a: a.alloc(7),  # scratch index out of range
+    ):
+        a = isa.Asm(scratch_words=2, node_words=4)
+        build(a)
+        a.ret()
+        with pytest.raises(ValueError, match="out of range"):
+            a.finish()
+
+
 # ----------------------- programs vs traced oracles -------------------------
 
 

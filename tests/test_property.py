@@ -169,6 +169,198 @@ def test_interleaved_allocation_balanced(num_shards, n_alloc):
     assert len(np.unique(ptrs)) == len(ptrs)  # no double allocation
 
 
+# ---------------------- ISA VM vs reference interpreter ----------------------
+
+
+def _wrap32(x: int) -> int:
+    return ((int(x) + 2**31) % 2**32) - 2**31
+
+
+def _ref_iteration(code, node, ptr, scratch):
+    """Independent numpy/python reference interpreter for one VM iteration
+    (forward-jump-only ISA): the oracle the JAX lax.switch VM must match."""
+    from repro.core import isa
+
+    regs = [0] * isa.NUM_REGS
+    scratch = list(map(int, scratch))
+    pc, done, out_ptr = 0, False, int(ptr)
+    T = len(code)
+    while pc < T:
+        op, a, b, imm = (int(x) for x in code[pc])
+        ra, rb = regs[a % 16], regs[b % 16]
+        rimm = regs[imm % 16]
+        if op == isa.HALT:
+            break
+        elif op == isa.LOADN:
+            regs[a % 16] = int(node[min(max(imm, 0), len(node) - 1)])
+        elif op == isa.LOADS:
+            regs[a % 16] = scratch[min(max(imm, 0), len(scratch) - 1)]
+        elif op == isa.STORES:
+            scratch[min(max(imm, 0), len(scratch) - 1)] = ra
+        elif op == isa.ADD:
+            regs[a % 16] = _wrap32(rb + rimm)
+        elif op == isa.SUB:
+            regs[a % 16] = _wrap32(rb - rimm)
+        elif op == isa.MUL:
+            regs[a % 16] = _wrap32(rb * rimm)
+        elif op == isa.DIV:
+            regs[a % 16] = 0 if rimm == 0 else _wrap32(rb // rimm)
+        elif op == isa.AND:
+            regs[a % 16] = rb & rimm
+        elif op == isa.OR:
+            regs[a % 16] = rb | rimm
+        elif op == isa.NOT:
+            regs[a % 16] = _wrap32(~rb)
+        elif op == isa.MOVE:
+            regs[a % 16] = rb
+        elif op == isa.MOVI:
+            regs[a % 16] = imm
+        elif op in (isa.JEQ, isa.JNE, isa.JLT, isa.JLE, isa.JGT, isa.JGE):
+            taken = {
+                isa.JEQ: ra == rb, isa.JNE: ra != rb, isa.JLT: ra < rb,
+                isa.JLE: ra <= rb, isa.JGT: ra > rb, isa.JGE: ra >= rb,
+            }[op]
+            pc = imm if taken else pc + 1
+            continue
+        elif op == isa.JMP:
+            pc = imm
+            continue
+        elif op == isa.NEXT_ITER:
+            out_ptr = ra
+            break
+        elif op == isa.RETURN:
+            done = True
+            break
+        elif op == isa.GETPTR:
+            regs[a % 16] = int(ptr)
+        pc += 1
+    return done, out_ptr, scratch
+
+
+@st.composite
+def _random_program(draw):
+    """A random *valid* forward-jump-only program over 4 node words and 3
+    scratch words, always terminated."""
+    from repro.core import isa
+
+    T = draw(st.integers(2, 14))
+    rows = []
+    for i in range(T - 1):
+        op = draw(st.sampled_from([
+            isa.LOADN, isa.LOADS, isa.STORES, isa.ADD, isa.SUB, isa.MUL,
+            isa.DIV, isa.AND, isa.OR, isa.NOT, isa.MOVE, isa.MOVI,
+            isa.JEQ, isa.JNE, isa.JLT, isa.JLE, isa.JGT, isa.JGE, isa.JMP,
+            isa.GETPTR,
+        ]))
+        a = draw(st.integers(0, isa.NUM_REGS - 1))
+        b = draw(st.integers(0, isa.NUM_REGS - 1))
+        if op in (isa.JEQ, isa.JNE, isa.JLT, isa.JLE, isa.JGT, isa.JGE, isa.JMP):
+            imm = draw(st.integers(i + 1, T))  # forward only
+        elif op == isa.LOADN:
+            imm = draw(st.integers(0, 3))
+        elif op in (isa.LOADS, isa.STORES):
+            imm = draw(st.integers(0, 2))
+        elif op == isa.MOVI:
+            imm = draw(st.integers(-(2**20), 2**20))
+        else:
+            imm = draw(st.integers(0, isa.NUM_REGS - 1))
+        rows.append([op, a, b, imm])
+    term = draw(st.sampled_from([isa.RETURN, isa.NEXT_ITER]))
+    rows.append([term, draw(st.integers(0, isa.NUM_REGS - 1)), 0, 0])
+    return np.asarray(rows, np.int32)
+
+
+@SET
+@given(_random_program(), st.data())
+def test_random_isa_program_vm_matches_reference(code, data):
+    """Round-trip random forward-jump-only programs through the JAX VM and
+    the independent python interpreter: identical (done, ptr, scratch)."""
+    from repro.core import isa
+
+    isa.validate(code, scratch_words=3, node_words=4)
+    node = np.asarray(
+        data.draw(st.lists(st.integers(-100, 100), min_size=4, max_size=4)),
+        np.int32,
+    )
+    ptr = data.draw(st.integers(0, 100))
+    scr = np.asarray(
+        data.draw(st.lists(st.integers(-100, 100), min_size=3, max_size=3)),
+        np.int32,
+    )
+    done_v, ptr_v, scr_v = isa.run_iteration(
+        jnp.asarray(code), jnp.asarray(node), jnp.int32(ptr), jnp.asarray(scr)
+    )
+    done_r, ptr_r, scr_r = _ref_iteration(code, node, ptr, scr)
+    assert bool(done_v) == done_r
+    assert int(ptr_v) == _wrap32(ptr_r)
+    assert list(map(int, np.asarray(scr_v))) == [_wrap32(x) for x in scr_r]
+
+
+# ---------------------- write/read linearizability ---------------------------
+
+
+@SET
+@given(st.data())
+def test_interleaved_insert_find_linearizable(data):
+    """Interleaved insert+find racing in one batch on one shard must match a
+    sequential-oracle explanation: pre-existing keys always found with their
+    values, inserted keys' finds see either the pre- or post-insert state
+    (never garbage), and the final heap contains every insert."""
+    from repro.core import commit
+    from repro.core.arena import ArenaBuilder
+    from repro.core.structures import linked_list
+
+    n = data.draw(st.integers(4, 24))
+    n_ins = data.draw(st.integers(1, 8))
+    n_find = data.draw(st.integers(1, 8))
+    k_local = data.draw(st.sampled_from([1, 2, 4, 8]))
+    keys = np.arange(100, 100 + n, dtype=np.int32)
+    b = ArenaBuilder(128, 4)
+    head = linked_list.build_into(b, keys, keys * 2)
+    ar = b.finish()
+    new_keys = np.arange(500, 500 + n_ins, dtype=np.int32)
+    find_of_new = data.draw(st.booleans())
+    find_keys = np.asarray(
+        [
+            int(data.draw(st.sampled_from(
+                list(new_keys) if find_of_new else list(keys)
+            )))
+            for _ in range(n_find)
+        ],
+        np.int32,
+    )
+    ops = np.concatenate(
+        [np.ones(n_ins, np.int32), np.zeros(n_find, np.int32)]
+    )
+    order = data.draw(st.permutations(range(n_ins + n_find)))
+    ops = ops[list(order)]
+    qk = np.concatenate([new_keys, find_keys])[list(order)]
+    qv = (qk * 7).astype(np.int32)
+    it = linked_list.rw_iterator()
+    p0, s0 = it.init(ops, qk, qv, head)
+    rec, _, ar2 = commit.sequential_commit_execute(
+        it, ar, p0, s0, max_iters=2048, k_local=k_local
+    )
+    assert (rec[:, 3] == STATUS_DONE).all()
+    scr = rec[:, 6:]
+    for i in range(len(ops)):
+        if ops[i] != 0:
+            continue
+        found = int(scr[i, linked_list.RW_RES])
+        if int(qk[i]) < 500:  # pre-existing: must be found, exact value
+            assert found == 1 and int(scr[i, linked_list.RW_VAL]) == qk[i] * 2
+        elif found:  # racing find of an insert: if found, value is exact
+            assert int(scr[i, linked_list.RW_VAL]) == qk[i] * 7
+    # post-state: every insert present with its value (sequential witness)
+    from repro.core.iterator import execute_batched
+
+    fit = linked_list.find_iterator()
+    fp, fs = fit.init(jnp.asarray(new_keys), head)
+    _, fscr, _, _ = execute_batched(fit, ar2, fp, fs, max_iters=2048)
+    assert (np.asarray(fscr)[:, 2] == 1).all()
+    np.testing.assert_array_equal(np.asarray(fscr)[:, 1], new_keys * 7)
+
+
 @SET
 @given(st.lists(st.integers(1, 700), min_size=1, max_size=120), st.sampled_from([512, 1024]))
 def test_packing_never_overflows(doc_lens, window):

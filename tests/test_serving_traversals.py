@@ -135,6 +135,119 @@ def test_service_mixed_workload_end_to_end():
             assert r.result[1] == values[list(keys).index(r.query)]
 
 
+def test_service_mixed_read_write_tenants():
+    """Write path end to end through the service: a write tenant's inserts
+    commit under the per-group barrier, and a read tenant's finds observe
+    them once the barrier releases the group."""
+    from repro.core.structures import hash_table
+
+    b = ArenaBuilder(512, 4)
+    keys = np.arange(100, 132, dtype=np.int32)
+    head = linked_list.build_into(b, keys, keys * 2)
+    sent = hash_table.build_writable(
+        b, np.arange(200, 216, dtype=np.int32), np.arange(16, dtype=np.int32), 8
+    )
+    svc = PulseService(
+        PulseEngine(b.finish()),
+        {
+            "list": StructureSpec(linked_list.find_iterator(), (head,), group="list"),
+            "list_ins": StructureSpec(
+                linked_list.insert_iterator(), (head,), group="list",
+                takes_value=True,
+            ),
+            "list_del": StructureSpec(
+                linked_list.delete_iterator(), (head,), group="list"
+            ),
+            "hash": StructureSpec(
+                hash_table.find_iterator(8), (jnp.asarray(sent),), group="hash"
+            ),
+            "hash_ins": StructureSpec(
+                hash_table.insert_iterator(8), (sent,), group="hash",
+                takes_value=True,
+            ),
+        },
+        slots_per_structure=8,
+        quantum=8,
+    )
+    assert svc.groups["list_ins"].spec.writes and not svc.groups["list"].spec.writes
+    reqs, rid = [], 0
+    for k in range(300, 308):
+        reqs.append(TraversalRequest(rid, "list_ins", query=k, value=k * 3, tenant="w"))
+        rid += 1
+    for k in [104, 110, 300, 305]:
+        reqs.append(TraversalRequest(rid, "list", query=k, tenant="r"))
+        rid += 1
+    for k in [106, 115]:  # non-adjacent victims (head key 100 is the sentinel)
+        reqs.append(TraversalRequest(rid, "list_del", query=int(k), tenant="w"))
+        rid += 1
+    for k in range(400, 406):
+        reqs.append(TraversalRequest(rid, "hash_ins", query=k, value=k + 9, tenant="w"))
+        rid += 1
+    for k in [400, 403, 205]:
+        reqs.append(TraversalRequest(rid, "hash", query=k, tenant="r"))
+        rid += 1
+    m = svc.run(reqs)
+    assert m.completed == len(reqs)
+    assert m.commits > 0 and m.writes_retired == 16
+    for r in reqs:
+        if r.structure == "list" and r.query >= 300:
+            assert r.result[1] == r.query * 3  # find scratch: [key, value, found]
+        if r.structure == "hash" and r.query >= 400:
+            assert r.result[1] == r.query + 9
+    # deletes took effect: a fresh find through the engine's updated arena
+    fit = linked_list.find_iterator()
+    p0, s0 = fit.init(jnp.asarray(np.array([106, 115], np.int32)), head)
+    _, scr, _, _ = execute_batched(
+        fit, svc.engine.arena, p0, s0, max_iters=4096
+    )
+    assert (np.asarray(scr)[:, 2] == 0).all()
+
+
+def test_write_barrier_excludes_concurrent_readers():
+    """While a write slot-group of a structure group is occupied, reads of
+    that group are not admitted (and vice versa); other groups are free."""
+    from repro.serving.admission import apply_write_barriers
+
+    group_of = {"list": "list", "list_ins": "list", "hash": "hash"}
+    writes = {"list": False, "list_ins": True, "hash": False}
+    # writer occupied -> reads of 'list' blocked, 'hash' untouched
+    free = apply_write_barriers(
+        {"list": 4, "list_ins": 4, "hash": 4}, group_of, writes,
+        {"list": False, "list_ins": True, "hash": False}, {},
+    )
+    assert free == {"list": 0, "list_ins": 4, "hash": 4}
+    # readers occupied -> writer blocked
+    free = apply_write_barriers(
+        {"list": 4, "list_ins": 4, "hash": 4}, group_of, writes,
+        {"list": True, "list_ins": False, "hash": False}, {},
+    )
+    assert free == {"list": 4, "list_ins": 0, "hash": 4}
+    # queued writer drains readers out (anti-starvation)
+    free = apply_write_barriers(
+        {"list": 4, "list_ins": 4, "hash": 4}, group_of, writes,
+        {"list": False, "list_ins": False, "hash": False}, {"list_ins": 2},
+    )
+    assert free == {"list": 0, "list_ins": 4, "hash": 4}
+    # two writers of one group both pending: exactly ONE wins the round --
+    # the one whose queued request arrived first (seq order, FIFO-consistent)
+    group_of2 = {**group_of, "list_del": "list"}
+    writes2 = {**writes, "list_del": True}
+    free = apply_write_barriers(
+        {"list": 4, "list_ins": 4, "list_del": 4, "hash": 4},
+        group_of2, writes2,
+        {n: False for n in group_of2}, {"list_ins": 0, "list_del": 5},
+    )
+    assert free == {"list": 0, "list_ins": 4, "list_del": 0, "hash": 4}
+    # an occupied writer keeps the group against a pending rival
+    free = apply_write_barriers(
+        {"list": 4, "list_ins": 4, "list_del": 4, "hash": 4},
+        group_of2, writes2,
+        {"list": False, "list_ins": True, "list_del": False, "hash": False},
+        {"list_del": 2},
+    )
+    assert free == {"list": 0, "list_ins": 4, "list_del": 0, "hash": 4}
+
+
 def test_service_continuations_preempt_long_walks():
     """quantum << walk depth: deep list walks must span several rounds as
     MAXED continuations yet finish with exact hop counts."""

@@ -1,0 +1,269 @@
+"""Write path: staged mutations, commit supersteps, free-list allocator,
+and the sequential-commit determinism oracle.
+
+Fast in-process tests cover the single-shard executor, the allocator, and
+the ISA store class; the 8-shard schedule x fabric bit-identity matrix
+(acceptance criteria) runs in a subprocess with its own device count
+(tests/helpers/write_checks.py), like the other distributed suites.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import commit, isa
+from repro.core.arena import (
+    H_BUMP,
+    H_FREE,
+    M_ALLOC,
+    M_CAS,
+    M_FREE,
+    M_STORE,
+    NULL,
+    ArenaBuilder,
+    mut_width,
+)
+from repro.core.iterator import (
+    STATUS_ACTIVE,
+    STATUS_DONE,
+    STATUS_MAXED,
+    execute_batched,
+    mut_step_batch,
+)
+from repro.core.structures import bst, linked_list
+
+ROOT = Path(__file__).resolve().parents[1]
+RNG = np.random.default_rng(21)
+
+
+# --------------------------- free-list allocator -----------------------------
+
+
+def test_builder_free_list_reuses_slots():
+    b = ArenaBuilder(16, 4)
+    p = b.alloc(6)
+    b.free(p[2:4])
+    q = b.alloc(3)
+    # LIFO: last freed first, then the bump region continues
+    assert list(q) == [int(p[3]), int(p[2]), 6]
+    ar = b.finish()
+    heap = np.asarray(ar.heap)
+    assert heap[0, H_FREE] == NULL and heap[0, H_BUMP] == 7
+
+
+def test_builder_finish_threads_free_chain_into_heap():
+    b = ArenaBuilder(16, 4)
+    p = b.alloc(6)
+    b.free([1, 3])
+    ar = b.finish()
+    heap = np.asarray(ar.heap)
+    data = np.asarray(ar.data)
+    assert heap[0, H_FREE] == 3  # LIFO head
+    assert data[3, 0] == 1 and data[1, 0] == NULL  # intrusive chain
+
+
+# --------------------------- single-shard oracle -----------------------------
+
+
+def _small_list(n=12, cap=64):
+    b = ArenaBuilder(cap, 4)
+    keys = np.arange(100, 100 + n, dtype=np.int32)
+    head = linked_list.build_into(b, keys, keys * 2)
+    return b.finish(), head, keys
+
+
+def test_sequential_insert_then_find():
+    ar, head, keys = _small_list()
+    it = linked_list.insert_iterator()
+    newk = np.array([7, 8, 9], np.int32)
+    p0, s0 = it.init(newk, newk * 5, head)
+    rec, st, ar2 = commit.sequential_commit_execute(it, ar, p0, s0, max_iters=200)
+    assert (rec[:, 3] == STATUS_DONE).all()
+    assert st.commits >= 2 * len(newk)  # alloc + link swing per insert
+    # the input arena is untouched (replayable snapshot)
+    fit = linked_list.find_iterator()
+    fp, fs = fit.init(jnp.asarray(newk), head)
+    _, scr_old, _, _ = execute_batched(fit, ar, fp, fs, max_iters=200)
+    assert (np.asarray(scr_old)[:, 2] == 0).all()
+    _, scr_new, _, _ = execute_batched(fit, ar2, fp, fs, max_iters=200)
+    assert (np.asarray(scr_new)[:, 2] == 1).all()
+    np.testing.assert_array_equal(np.asarray(scr_new)[:, 1], newk * 5)
+
+
+def test_sequential_delete_frees_and_realloc_reuses():
+    ar, head, keys = _small_list()
+    dit = linked_list.delete_iterator()
+    dp, ds = dit.init(np.array([keys[3], keys[7]], np.int32), head)
+    rec, st, ar2 = commit.sequential_commit_execute(dit, ar, dp, ds, max_iters=200)
+    assert (rec[:, commit.F_SCRATCH + linked_list.RW_RES] == 1).all()
+    heap = np.asarray(ar2.heap)
+    assert heap[0, H_FREE] != NULL  # victims landed on the free list
+    # a following insert must reuse the freed slot (LIFO), not burn capacity
+    bump_before = int(heap[0, H_BUMP])
+    iit = linked_list.insert_iterator()
+    ip, isc = iit.init(np.array([999], np.int32), np.array([1], np.int32), head)
+    rec2, _, ar3 = commit.sequential_commit_execute(iit, ar2, ip, isc, max_iters=200)
+    assert int(np.asarray(ar3.heap)[0, H_BUMP]) == bump_before
+    assert int(rec2[0, commit.F_SCRATCH + linked_list.RW_RES]) == int(heap[0, H_FREE])
+
+
+def test_interleaved_rw_linearizable_single_shard():
+    """Finds racing inserts in one batch: every outcome must be explainable
+    by SOME serialization (found => correct value; final state holds all
+    inserts), and pre-existing keys are always found."""
+    ar, head, keys = _small_list(n=16, cap=128)
+    it = linked_list.rw_iterator()
+    ops = np.array([1, 0, 1, 0, 1, 0, 1, 0], np.int32)
+    qk = np.where(ops == 1, np.arange(8) + 500, keys[: 8]).astype(np.int32)
+    qv = (np.arange(8) + 40).astype(np.int32)
+    p0, s0 = it.init(ops, qk, qv, head)
+    rec, st, ar2 = commit.sequential_commit_execute(it, ar, p0, s0, max_iters=500)
+    assert (rec[:, 3] == STATUS_DONE).all()
+    scr = rec[:, commit.F_SCRATCH :]
+    for i in range(8):
+        if ops[i] == 0:  # pre-existing key: must be found with its value
+            assert scr[i, linked_list.RW_RES] == 1
+            assert scr[i, linked_list.RW_VAL] == qk[i] * 2
+    # post-state: all inserted keys present with their values
+    fit = linked_list.find_iterator()
+    fp, fs = fit.init(jnp.asarray(qk[ops == 1]), head)
+    _, fscr, _, _ = execute_batched(fit, ar2, fp, fs, max_iters=500)
+    np.testing.assert_array_equal(np.asarray(fscr)[:, 1], qv[ops == 1])
+
+
+def test_maxed_records_never_carry_staged_mutations():
+    """The continuation invariant: a record is only MAXED once its payload is
+    clear, so (cur_ptr, scratch) alone resumes it."""
+    ar, head, _ = _small_list(n=32, cap=128)
+    it = linked_list.insert_iterator()
+    newk = np.arange(4, dtype=np.int32) + 700
+    p0, s0 = it.init(newk, newk, head)
+    W = ar.node_words
+    ptr = jnp.asarray(p0)
+    scr = jnp.asarray(s0)
+    status = jnp.full((4,), STATUS_ACTIVE, jnp.int32)
+    iters = jnp.zeros((4,), jnp.int32)
+    mut = jnp.zeros((4, mut_width(W)), jnp.int32)
+    for _ in range(64):  # tiny max_iters forces the MAXED boundary mid-insert
+        ptr, scr, status, iters, mut = mut_step_batch(
+            it, ar.data, ptr, scr, status, iters, mut, max_iters=2
+        )
+    maxed = np.asarray(status) == STATUS_MAXED
+    assert maxed.any()
+    assert (np.asarray(mut)[maxed, 0] == 0).all()
+
+
+# ------------------------------- ISA store class -----------------------------
+
+
+def test_vm_storen_stages_masked_store():
+    a = isa.Asm(scratch_words=1, node_words=4)
+    a.movi(1, 42)
+    a.storen(2, 1)
+    a.movi(2, 5)
+    a.next_iter(2)
+    prog = a.finish()
+    assert prog.mutates
+    done, ptr, scr, (op, tgt, mask, exp, data) = isa.run_iteration_mut(
+        jnp.asarray(prog.code), jnp.zeros(4, jnp.int32), jnp.int32(9),
+        jnp.zeros(1, jnp.int32),
+    )
+    assert int(op) == M_STORE and int(tgt) == 9
+    assert int(mask) == 1 << 2 and int(data[2]) == 42
+    assert int(ptr) == 5 and not bool(done)
+
+
+def test_vm_alloc_takes_over_storen_image():
+    a = isa.Asm(scratch_words=2, node_words=4)
+    a.movi(1, 7)
+    a.storen(0, 1)
+    a.alloc(1)  # result address -> SP[1]
+    a.getptr(2)
+    a.next_iter(2)
+    prog = a.finish()
+    _, _, _, (op, tgt, mask, _, data) = isa.run_iteration_mut(
+        jnp.asarray(prog.code), jnp.zeros(4, jnp.int32), jnp.int32(0),
+        jnp.zeros(2, jnp.int32),
+    )
+    assert int(op) == M_ALLOC and int(tgt) == 1
+    assert int(mask) == 1 and int(data[0]) == 7
+
+
+def test_vm_setptr_stages_cas():
+    a = isa.Asm(scratch_words=1, node_words=4)
+    a.movi(1, 33)  # new value
+    a.movi(2, 11)  # expected
+    a.setptr(2, 1, 2)
+    a.getptr(3)
+    a.next_iter(3)
+    prog = a.finish()
+    _, _, _, (op, tgt, mask, exp, data) = isa.run_iteration_mut(
+        jnp.asarray(prog.code), jnp.zeros(4, jnp.int32), jnp.int32(4),
+        jnp.zeros(1, jnp.int32),
+    )
+    assert int(op) == M_CAS and int(tgt) == 4
+    assert int(mask) == 1 << 2 and int(exp) == 11 and int(data[2]) == 33
+
+
+def test_vm_free_stages_release():
+    a = isa.Asm(scratch_words=1, node_words=4)
+    a.movi(1, 13)
+    a.free(1)
+    a.ret()
+    prog = a.finish()
+    done, _, _, (op, tgt, mask, _, _) = isa.run_iteration_mut(
+        jnp.asarray(prog.code), jnp.zeros(4, jnp.int32), jnp.int32(0),
+        jnp.zeros(1, jnp.int32),
+    )
+    assert int(op) == M_FREE and int(tgt) == 13 and int(mask) == 0
+    assert bool(done)  # VM-level done; the executors gate it on the commit
+
+
+def test_isa_bst_update_matches_traced():
+    n = 48
+    keys = np.sort(
+        RNG.choice(np.arange(10**4), n, replace=False).astype(np.int32)
+    )
+    vals = np.arange(n, dtype=np.int32)
+    b = ArenaBuilder(64, 4)
+    root, _ = bst.build_into(b, keys, vals)
+    ar = b.finish()
+    q = np.concatenate([keys[:10], [77777]]).astype(np.int32)
+    nv = (np.arange(len(q)) + 300).astype(np.int32)
+    traced = bst.update_iterator()
+    from repro.core.structures import isa_programs
+
+    vm = isa.as_pulse_iterator(isa_programs.bst_update_program())
+    assert vm.mutates
+    p0, s0 = traced.init(jnp.asarray(q), jnp.asarray(nv), root)
+    rec_t, st_t, ar_t = commit.sequential_commit_execute(traced, ar, p0, s0, max_iters=200)
+    rec_v, st_v, ar_v = commit.sequential_commit_execute(vm, ar, p0, s0, max_iters=200)
+    np.testing.assert_array_equal(rec_t, rec_v)
+    np.testing.assert_array_equal(np.asarray(ar_t.data), np.asarray(ar_v.data))
+    assert st_t.commits == st_v.commits
+
+
+# ------------------------ distributed acceptance matrix ----------------------
+
+
+@pytest.mark.slow
+def test_write_path_distributed_subprocess():
+    """8-shard bit-identity of every schedule x fabric vs the oracle:
+    records, supersteps, wire words, final arena contents."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "helpers" / "write_checks.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL WRITE-PATH CHECKS PASSED" in proc.stdout
