@@ -1,6 +1,7 @@
-"""Serving-layer benchmark: compacted supersteps + PulseService throughput.
+"""Serving-layer benchmark: compacted supersteps + PulseService throughput
+and the Fig. 7 tail-latency reproduction (sync vs async pipeline).
 
-Three experiments:
+Four experiments:
 
   1. **Compacted routing** -- a skewed distributed workload (half the batch
      finishes early, the rest keep walking) on an 8-way mesh.  Reports the
@@ -9,12 +10,23 @@ Three experiments:
      paper-style claim: once half the batch has finished, the compacted
      fabric carries >= 30% fewer record-words per superstep.
 
-  2. **PulseService** -- a mixed 4-structure workload (list walk, B-tree
-     lookup, hash-chain probe, skiplist search) from 3 tenants served
-     end-to-end through continuous batching; reports p50/p99 latency,
-     throughput, utilization, and per-tenant counts.
+  2. **PulseService async vs sync** -- the same open-loop Poisson arrival
+     trace (seeded; the seed is recorded in the JSON) served twice at an
+     offered rate above saturation: once by the legacy synchronous loop,
+     once by the async device-runner pipeline with SLO-aware quantum
+     sizing.  Under ``--check`` this gates async throughput >= 1.3x sync
+     with p99 <= 1.1x at the matched load, then sweeps an offered-RPS
+     ladder (multiples of the measured sync service rate) recording
+     p50/p99/p999 per rung -- the Fig. 7 curves -- and gates the async
+     saturation point at >= 2x the sync service rate.  A final overload
+     rung exercises per-tenant rate limiting + bounded-queue shedding.
 
-  3. **LM batched prefill** -- the ContinuousBatcher's admission path:
+  3. **PulseService mixed workload** -- a mixed 4-structure workload (list
+     walk, B-tree lookup, hash-chain probe, skiplist search) from 3
+     tenants served end-to-end through continuous batching; reports
+     p50/p99 latency, throughput, utilization, and per-tenant counts.
+
+  4. **LM batched prefill** -- the ContinuousBatcher's admission path:
      batched full-sequence prefill (one jitted call per admission) vs the
      legacy token-by-token slot prefill, on a reduced LM config.  Checks
      outputs are identical and reports the prefill-call reduction + wall
@@ -22,10 +34,11 @@ Three experiments:
 
 Run:  PYTHONPATH=src python benchmarks/service_bench.py
       PYTHONPATH=src python benchmarks/service_bench.py --small --json BENCH_service.json
-      PYTHONPATH=src python benchmarks/service_bench.py --arrival poisson:500
+      PYTHONPATH=src python benchmarks/service_bench.py --arrival poisson:500 --seed 7
+      PYTHONPATH=src python benchmarks/service_bench.py --small --arrival poisson:300 --check
       # open-loop Poisson arrivals (offered rate in req/s) instead of the
-      # closed-loop logical rounds; the realized arrival process is emitted
-      # into the JSON (first step toward the Fig. 7 tail-latency runs)
+      # closed-loop logical rounds; arrival generation is seeded by --seed
+      # and the realized process is emitted into the JSON (Fig. 7 runs)
 """
 
 from __future__ import annotations
@@ -158,7 +171,251 @@ def parse_arrival(spec: str | None):
     return ("poisson", rps)
 
 
-def bench_service(n_requests=600, slots=64, quantum=16, arrival=None):
+def _make_request_specs(keysets, n, rng, deadline_ms=2000.0):
+    """Immutable request blueprints -- materialized fresh per serving run so
+    sync and async modes see byte-identical workloads."""
+    names = list(keysets)
+    tenants = ["tenant-a", "tenant-b", "tenant-c"]
+    specs = []
+    for i in range(n):
+        s = names[rng.integers(0, len(names))]
+        ks = keysets[s]
+        # 10% misses exercise the not-found path
+        key = (
+            int(ks[rng.integers(0, len(ks))])
+            if rng.random() > 0.1
+            else int(rng.integers(5 * 10**6, 6 * 10**6))
+        )
+        specs.append((s, key, tenants[i % len(tenants)], deadline_ms))
+    return specs
+
+
+def _materialize(specs):
+    return [
+        TraversalRequest(req_id=i, structure=s, query=k, tenant=t, deadline_ms=d)
+        for i, (s, k, t, d) in enumerate(specs)
+    ]
+
+
+def drive_open_loop(svc, reqs, t_arr):
+    """Open-loop driver: exponential inter-arrivals in *wall-clock* time,
+    submitted when due regardless of service backlog (the Fig. 7
+    tail-latency regime: the arrival process never waits for the server)."""
+    t0 = time.perf_counter()
+    nxt, n = 0, len(reqs)
+    while nxt < n or svc._busy():
+        now = time.perf_counter() - t0
+        while nxt < n and t_arr[nxt] <= now:
+            svc.submit(reqs[nxt])
+            nxt += 1
+        if nxt < n and not svc._busy():
+            # idle server, next arrival in the future: wait for it
+            time.sleep(max(0.0, t_arr[nxt] - (time.perf_counter() - t0)))
+            continue
+        svc.step()
+    svc.close()
+    svc._drain_emit()
+    m = svc.metrics
+    m.wall_s += time.perf_counter() - t0
+    return m
+
+
+def _run_mode(
+    engine,
+    structures,
+    specs,
+    t_arr,
+    *,
+    mode,
+    slots,
+    quantum,
+    max_quantum,
+    max_pending=None,
+    rate_limit_rps=None,
+    rate_limit_burst=None,
+):
+    """One serving run over a fixed arrival trace.  The engine is shared
+    across runs (read-only workload), so its compiled executables stay warm
+    and every run measures steady-state serving."""
+    kw = {}
+    if mode == "async":
+        kw.update(
+            pipeline="async",
+            min_quantum=max(1, quantum // 2),
+            max_quantum=max_quantum,
+        )
+    if max_pending is not None:
+        kw["max_pending"] = max_pending
+    if rate_limit_rps is not None:
+        kw["rate_limit_rps"] = rate_limit_rps
+        kw["rate_limit_burst"] = rate_limit_burst
+    svc = PulseService(
+        engine, structures, slots_per_structure=slots, quantum=quantum, **kw
+    )
+    reqs = _materialize(specs)
+    return drive_open_loop(svc, reqs, t_arr), reqs
+
+
+def _point(m, offered):
+    return {
+        "offered_rps": float(offered),
+        "throughput_rps": float(m.throughput_rps),
+        "p50_ms": float(m.p50_ms),
+        "p99_ms": float(m.p99_ms),
+        "p999_ms": float(m.p999_ms),
+        "completed": int(m.completed),
+        "shed": int(m.shed),
+        "rounds": int(m.rounds),
+        "deadline_hit_rate": float(m.deadline_hit_rate),
+        "quantum_range": [int(m.quantum_min_used), int(m.quantum_max_used)],
+    }
+
+
+def bench_async_pipeline(
+    offered_rps, n_requests=240, slots=32, quantum=8, max_quantum=256,
+    seed=42, check=False, sweep_requests=None,
+):
+    """Async device-runner pipeline vs the synchronous loop, then the Fig. 7
+    offered-RPS ladder.  All arrival traces derive from ``seed``."""
+    arena, structures, keysets = build_mixed_heap()
+    engine = PulseEngine(arena)
+    arr = np.random.default_rng(seed)
+    specs = _make_request_specs(keysets, n_requests, arr)
+    t_arr = np.cumsum(arr.exponential(1.0 / offered_rps, n_requests))
+    out = {
+        "seed": int(seed),
+        "offered_rps": float(offered_rps),
+        "n_requests": int(n_requests),
+        "quantum": int(quantum),
+        "max_quantum": int(max_quantum),
+    }
+    # warm the per-structure compiles once; every run below reuses them
+    warm_svc = PulseService(
+        engine, structures, slots_per_structure=slots, quantum=quantum
+    )
+    warm_svc.run(
+        [
+            TraversalRequest(10**6 + j, s, int(keysets[s][0]))
+            for j, s in enumerate(structures)
+        ]
+    )
+
+    # --- matched-load comparison (offered above saturation for both) -------
+    res = {}
+    for mode in ("sync", "async"):
+        m, _ = _run_mode(
+            engine, structures, specs, t_arr,
+            mode=mode, slots=slots, quantum=quantum, max_quantum=max_quantum,
+        )
+        assert m.completed == n_requests, (mode, m.completed)
+        res[mode] = m
+        out[mode] = _point(m, offered_rps)
+        print(
+            f"  {mode:5s}: throughput={m.throughput_rps:6.0f} rps "
+            f"p50={m.p50_ms:7.1f}ms p99={m.p99_ms:7.1f}ms "
+            f"p999={m.p999_ms:7.1f}ms rounds={m.rounds} "
+            f"quantum=[{m.quantum_min_used},{m.quantum_max_used}]"
+        )
+    speedup = res["async"].throughput_rps / res["sync"].throughput_rps
+    p99_ratio = res["async"].p99_ms / res["sync"].p99_ms
+    out["throughput_speedup"] = float(speedup)
+    out["p99_ratio"] = float(p99_ratio)
+    print(
+        f"  async/sync at matched {offered_rps:.0f} rps: "
+        f"throughput {speedup:.2f}x, p99 {p99_ratio:.2f}x"
+    )
+    if check:
+        assert speedup >= 1.3, (
+            f"async pipeline must serve >=1.3x sync throughput, got {speedup:.2f}x"
+        )
+        assert p99_ratio <= 1.1, (
+            f"async p99 must stay within 1.1x of sync, got {p99_ratio:.2f}x"
+        )
+
+    # --- Fig. 7 ladder: p50/p99/p999 vs offered RPS ------------------------
+    # rungs are multiples of the measured sync service rate, so the sweep is
+    # machine-speed-invariant; sync's saturation throughput IS its service
+    # rate (open-loop overload), and the async gate is "sustain 2x that".
+    sync_rate = res["sync"].throughput_rps
+    n_sweep = sweep_requests or max(60, n_requests // 2)
+    # one workload spec set for every rung -- only the arrival rate varies,
+    # so the rungs trace a load-latency curve, not workload noise
+    sweep_rng = np.random.default_rng([seed, 1])
+    sweep_specs = _make_request_specs(keysets, n_sweep, sweep_rng)
+    rungs = []
+    for ri, mult in enumerate((0.5, 1.0, 2.0, 3.0)):
+        rate = mult * sync_rate
+        rung_t = np.cumsum(
+            np.random.default_rng([seed, 2, ri]).exponential(1.0 / rate, n_sweep)
+        )
+        modes = ("sync", "async") if mult <= 1.0 else ("async",)
+        for mode in modes:
+            m, _ = _run_mode(
+                engine, structures, sweep_specs, rung_t,
+                mode=mode, slots=slots, quantum=quantum,
+                max_quantum=max_quantum,
+            )
+            pt = _point(m, rate)
+            pt.update(mode=mode, multiple_of_sync_rate=mult)
+            pt["sustained"] = bool(m.throughput_rps >= 0.8 * rate)
+            rungs.append(pt)
+            print(
+                f"  fig7 {mode:5s} @ {mult:3.1f}x sync ({rate:5.0f} rps): "
+                f"tput={m.throughput_rps:5.0f} p50={m.p50_ms:7.1f}ms "
+                f"p99={m.p99_ms:7.1f}ms p999={m.p999_ms:7.1f}ms "
+                f"{'sustained' if pt['sustained'] else 'SATURATED'}"
+            )
+    out["fig7"] = rungs
+    async_sat = max(
+        (r["offered_rps"] for r in rungs if r["mode"] == "async" and r["sustained"]),
+        default=0.0,
+    )
+    out["sync_saturation_rps"] = float(sync_rate)
+    out["async_saturation_rps"] = float(async_sat)
+    print(
+        f"  saturation: sync={sync_rate:.0f} rps async>={async_sat:.0f} rps "
+        f"({async_sat / sync_rate:.1f}x)"
+    )
+    if check:
+        assert async_sat >= 2.0 * sync_rate, (
+            f"async must sustain >=2x sync saturation "
+            f"({async_sat:.0f} vs {sync_rate:.0f} rps)"
+        )
+
+    # --- overload rung: rate limiting + bounded-queue shedding -------------
+    over_rate = 6.0 * sync_rate
+    over_t = np.cumsum(
+        np.random.default_rng([seed, 99]).exponential(1.0 / over_rate, n_sweep)
+    )
+    max_pending = 2 * slots
+    # per-tenant bucket well under each tenant's offered share (over_rate/3),
+    # with a small burst so the bucket actually empties within the run
+    m, reqs = _run_mode(
+        engine, structures, sweep_specs, over_t,
+        mode="async", slots=slots, quantum=quantum, max_quantum=max_quantum,
+        max_pending=max_pending,
+        rate_limit_rps=max(1.0, sync_rate / 2), rate_limit_burst=4,
+    )
+    assert m.completed + m.shed == n_sweep, (m.completed, m.shed)
+    assert m.queue_depth_max <= max_pending, m.queue_depth_max
+    out["overload"] = {
+        **_point(m, over_rate),
+        "max_pending": max_pending,
+        "queue_depth_max": int(m.queue_depth_max),
+        "shed_frac": float(m.shed / n_sweep),
+    }
+    print(
+        f"  overload @ {over_rate:.0f} rps: completed={m.completed} "
+        f"shed={m.shed} ({m.shed / n_sweep:.0%}) "
+        f"queue_max={m.queue_depth_max}/{max_pending} "
+        f"p99={m.p99_ms:.1f}ms deadline_hit={m.deadline_hit_rate:.0%}"
+    )
+    if check:
+        assert m.shed > 0, "overload rung must shed load"
+    return out
+
+
+def bench_service(n_requests=600, slots=64, quantum=16, arrival=None, seed=42):
     arena, structures, keysets = build_mixed_heap()
     engine = PulseEngine(arena)
     svc = PulseService(
@@ -203,27 +460,18 @@ def bench_service(n_requests=600, slots=64, quantum=16, arrival=None):
         # open-loop Poisson: exponential inter-arrivals in *wall-clock* time,
         # submitted when due regardless of service backlog (the Fig. 7
         # tail-latency regime: the arrival process never waits for the server)
+        # arrival generation is seeded independently of the workload RNG so
+        # overload runs replay bit-identically under the same --seed
         _, rps = arrival
-        gaps = RNG.exponential(1.0 / rps, n_requests)
+        arr_rng = np.random.default_rng(seed)
+        gaps = arr_rng.exponential(1.0 / rps, n_requests)
         t_arr = np.cumsum(gaps)
         for r in reqs:
             r.arrive_round = 0
-        t0 = time.perf_counter()
-        nxt = 0
-        while nxt < n_requests or svc._busy():
-            now = time.perf_counter() - t0
-            while nxt < n_requests and t_arr[nxt] <= now:
-                svc.submit(reqs[nxt])
-                nxt += 1
-            if nxt < n_requests and not svc._busy():
-                # idle server, next arrival in the future: wait for it
-                time.sleep(max(0.0, t_arr[nxt] - (time.perf_counter() - t0)))
-                continue
-            svc.step()
-        m = svc.metrics
-        m.wall_s += time.perf_counter() - t0
+        m = drive_open_loop(svc, reqs, t_arr)
         arrival_info = {
             "process": "poisson",
+            "seed": int(seed),
             "offered_rps": rps,
             "achieved_arrival_rps": float(n_requests / t_arr[-1]),
             "interarrival_mean_ms": float(np.mean(gaps) * 1e3),
@@ -335,37 +583,82 @@ def main(argv=None):
         "--arrival",
         default=None,
         metavar="SPEC",
-        help="open-loop arrival process for the service experiment, e.g. "
-        "'poisson:500' (500 req/s offered); default is closed-loop rounds",
+        help="open-loop arrival process, e.g. 'poisson:500' (500 req/s "
+        "offered); sets the matched-load rate for the async-vs-sync "
+        "experiment and switches the mixed-workload experiment off "
+        "closed-loop rounds",
+    )
+    ap.add_argument(
+        "--seed",
+        type=int,
+        default=42,
+        help="seed for arrival-trace and workload generation (recorded in "
+        "the JSON artifact so overload runs are reproducible)",
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="enforce the serving gates: async >= 1.3x sync throughput with "
+        "p99 <= 1.1x at matched load, async saturation >= 2x sync",
     )
     args = ap.parse_args(argv)
     arrival = parse_arrival(args.arrival)
 
-    print("[1/3] compacted supersteps vs bulk-synchronous baseline")
+    print("[1/4] compacted supersteps vs bulk-synchronous baseline")
     r1 = bench_compacted_routing(
         **({"n": 512, "B": 128} if args.small else {})
     )
+    matched_rps = arrival[1] if arrival else 300.0
     print(
-        "[2/3] PulseService: mixed 4-structure workload"
+        f"[2/4] PulseService: async pipeline vs sync loop "
+        f"(open-loop poisson:{matched_rps:.0f}, seed={args.seed})"
+    )
+    r2 = bench_async_pipeline(
+        matched_rps,
+        seed=args.seed,
+        check=args.check,
+        **(
+            {"n_requests": 120, "sweep_requests": 60, "max_quantum": 128}
+            if args.small
+            else {}
+        ),
+    )
+    print(
+        "[3/4] PulseService: mixed 4-structure workload"
         + (f" (open-loop {args.arrival})" if arrival else "")
     )
-    r2 = bench_service(
+    r3 = bench_service(
         arrival=arrival,
+        seed=args.seed,
         **({"n_requests": 150, "slots": 32} if args.small else {}),
     )
-    print("[3/3] LM admission: batched prefill vs token-by-token")
-    r3 = bench_batched_prefill(
+    print("[4/4] LM admission: batched prefill vs token-by-token")
+    r4 = bench_batched_prefill(
         **({"n_requests": 8, "prompt_len": 6, "max_new": 4} if args.small else {})
     )
-    summary = {**r1, **r2, "prefill_speedup": r3["prefill_speedup"]}
+    summary = {
+        **r1,
+        **r3,
+        "async_speedup": r2["throughput_speedup"],
+        "async_p99_ratio": r2["p99_ratio"],
+        "sync_saturation_rps": r2["sync_saturation_rps"],
+        "async_saturation_rps": r2["async_saturation_rps"],
+        "prefill_speedup": r4["prefill_speedup"],
+    }
     print("\nsummary:", summary)
     if args.json:
         payload = {
             "benchmark": "service_bench",
-            "config": {"shards": P, "small": bool(args.small)},
+            "config": {
+                "shards": P,
+                "small": bool(args.small),
+                "seed": int(args.seed),
+                "checked": bool(args.check),
+            },
             "compacted_routing": r1,
-            "service": r2,
-            "batched_prefill": r3,
+            "async_pipeline": r2,
+            "service": r3,
+            "batched_prefill": r4,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

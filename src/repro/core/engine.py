@@ -255,18 +255,24 @@ class PulseEngine:
             return self._execute_kernel(it, ptr0, scratch0, max_iters=max_iters)
 
         # jnp.array copies (unlike asarray), so donating the copies keeps the
-        # caller's buffers alive while letting the while_loop alias in place
+        # caller's buffers alive while letting the while_loop alias in place.
+        # The iteration budget is a traced operand (not part of the key), so
+        # SLO-aware quantum sizing in the serving layer re-enters the same
+        # compiled executable with a different budget every round.
         ptr0 = jnp.array(ptr0, jnp.int32)
-        key = (it, int(ptr0.shape[0]), int(max_iters))
+        key = (it, int(ptr0.shape[0]))
         fn = self._local_jit.get(key)
         if fn is None:
             fn = jax.jit(
-                lambda arena, p, s: execute_batched(it, arena, p, s, max_iters=max_iters),
+                lambda arena, p, s, budget: execute_batched(
+                    it, arena, p, s, max_iters=budget
+                ),
                 donate_argnums=(1, 2),
             )
             self._local_jit[key] = fn
         ptr, scratch, status, iters = fn(
-            self.arena, ptr0, jnp.array(scratch0, jnp.int32)
+            self.arena, ptr0, jnp.array(scratch0, jnp.int32),
+            jnp.int32(min(max_iters, (1 << 31) - 1)),
         )
         return ExecResult(
             np.asarray(ptr), np.asarray(scratch), np.asarray(status),

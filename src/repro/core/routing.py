@@ -854,7 +854,6 @@ def make_fused_loop(
     axis_name: str,
     *,
     k_local: int,
-    max_iters: int,
     max_supersteps: int,
     base_capacity: int,
     min_link_capacity: int,
@@ -882,6 +881,12 @@ def make_fused_loop(
     traced counters never multiply capacity into an int32 (which would wrap
     at production batch sizes where the dispatched path's per-step Python
     sums would not).
+
+    The per-record iteration budget (the serving layer's *quantum*) is a
+    traced ``iter_budget`` operand, not a trace constant: SLO-aware quantum
+    sizing re-enters the same compiled executable every scheduling round
+    with a different budget, so baking it into the trace would recompile
+    per quantum value.
     """
     drain_done = compact
     rungs = capacity_rungs(base_capacity, min_link_capacity) if compact else (
@@ -891,7 +896,7 @@ def make_fused_loop(
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
     mut_base = F_SCRATCH + it.scratch_words if mutate else None
 
-    def fused_mut(pool, arena_rows, heap, bounds, perms):
+    def fused_mut(pool, arena_rows, heap, bounds, perms, iter_budget):
         """Write-path fused loop: arena rows + heap registers are carried
         ``lax.while_loop`` state -- each superstep is chase -> commit ->
         route, with the same ladder decisions as the read path."""
@@ -910,7 +915,7 @@ def make_fused_loop(
              cap_counts, local_only, n_remote) = carry
             pool, rows, heap_row = _local_superstep_mut(
                 it, pool, rows, heap[0], bounds, perms, my_shard,
-                k_local=k_local, max_iters=max_iters,
+                k_local=k_local, max_iters=iter_budget,
             )
             heap = heap_row[None, :]
             capacity, do_route = _ladder_traced(
@@ -963,7 +968,7 @@ def make_fused_loop(
          local_only, _) = jax.lax.while_loop(cond, body, init)
         return pool, rows, heap, n_active, steps, n_routed, n_drop, cap_counts, local_only
 
-    def fused(pool, arena_rows, bounds, perms):
+    def fused(pool, arena_rows, bounds, perms, iter_budget):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         n0 = jax.lax.psum(
@@ -978,7 +983,7 @@ def make_fused_loop(
             pool, n_active, steps, n_routed_tot, n_drop_tot, cap_counts, local_only, n_remote = carry
             pool = _local_superstep(
                 it, pool, arena_rows, bounds, perms, my_shard,
-                k_local=k_local, max_iters=max_iters, logic_fn=logic_fn,
+                k_local=k_local, max_iters=iter_budget, logic_fn=logic_fn,
             )
             # the host loop's ladder on stale-by-one counts (shared with the
             # pipelined schedule -- see _ladder_traced)
@@ -1056,7 +1061,6 @@ def make_pipelined_loop(
     axis_name: str,
     *,
     k_local: int,
-    max_iters: int,
     max_supersteps: int,
     base_capacity: int,
     min_link_capacity: int,
@@ -1111,7 +1115,7 @@ def make_pipelined_loop(
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
     mut_base = F_SCRATCH + it.scratch_words if mutate else None
 
-    def pipelined_mut(pool, arena_rows, heap, bounds, perms):
+    def pipelined_mut(pool, arena_rows, heap, bounds, perms, iter_budget):
         """Write-path pipelined loop.  The two wavefronts chase separately
         (stalling on staged writes), merge, and THEN the merged pool runs
         this shard's commit phase -- bit-identical to the fused
@@ -1145,7 +1149,7 @@ def make_pipelined_loop(
             def chase(p):
                 return _local_superstep_mut(
                     it, p, rows, heap[0], bounds, perms, my_shard,
-                    k_local=k_local, max_iters=max_iters,
+                    k_local=k_local, max_iters=iter_budget,
                     adaptive=True, commit=False,
                 )
 
@@ -1241,7 +1245,7 @@ def make_pipelined_loop(
             cap_counts, local_only,
         )
 
-    def pipelined(pool, arena_rows, bounds, perms):
+    def pipelined(pool, arena_rows, bounds, perms, iter_budget):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         L, R = pool.shape
@@ -1255,7 +1259,7 @@ def make_pipelined_loop(
         def chase(p):
             return _local_superstep(
                 it, p, arena_rows, bounds, perms, my_shard,
-                k_local=k_local, max_iters=max_iters,
+                k_local=k_local, max_iters=iter_budget,
                 adaptive=True, logic_fn=logic_fn,
             )
 
@@ -1376,7 +1380,6 @@ def get_fused_runner(
     pool_rows: int,
     scratch_words: int,
     k_local: int,
-    max_iters: int,
     max_supersteps: int,
     base_capacity: int,
     min_link_capacity: int,
@@ -1400,10 +1403,15 @@ def get_fused_runner(
     updated rows/heap come back as fresh outputs), so a caller can replay
     the same pre-state through several schedules (the determinism oracle's
     contract).
+
+    The iteration budget (the serving quantum) is NOT part of the key: it
+    rides into the executable as a traced int32 operand (the trailing
+    argument), so SLO-aware quantum sizing reuses one compiled program for
+    every budget value.
     """
     key = (
         it, mesh, axis_name, num_shards, pool_rows, scratch_words, k_local,
-        max_iters, max_supersteps, base_capacity, min_link_capacity,
+        max_supersteps, base_capacity, min_link_capacity,
         return_to_cpu, compact, schedule, fabric, local_backend, mutate,
     )
     fn = _FUSED_CACHE.get(key)
@@ -1412,7 +1420,7 @@ def get_fused_runner(
         if schedule == "pipelined":
             loop = make_pipelined_loop(
                 it, num_shards, axis_name,
-                k_local=k_local, max_iters=max_iters,
+                k_local=k_local,
                 max_supersteps=max_supersteps,
                 base_capacity=base_capacity,
                 min_link_capacity=min_link_capacity,
@@ -1422,7 +1430,7 @@ def get_fused_runner(
         else:
             loop = make_fused_loop(
                 it, num_shards, axis_name,
-                k_local=k_local, max_iters=max_iters,
+                k_local=k_local,
                 max_supersteps=max_supersteps,
                 base_capacity=base_capacity,
                 min_link_capacity=min_link_capacity,
@@ -1430,13 +1438,13 @@ def get_fused_runner(
                 fabric=fabric, local_backend=local_backend, mutate=mutate,
             )
         if mutate:
-            in_specs = (P(axis_name), P(axis_name), P(axis_name), P(), P())
+            in_specs = (P(axis_name), P(axis_name), P(axis_name), P(), P(), P())
             out_specs = (
                 P(axis_name), P(axis_name), P(axis_name),
                 P(), P(), P(), P(), P(), P(),
             )
         else:
-            in_specs = (P(axis_name), P(axis_name), P(), P())
+            in_specs = (P(axis_name), P(axis_name), P(), P(), P())
             out_specs = (P(axis_name), P(), P(), P(), P(), P(), P())
         fn = jax.jit(
             shard_map_unchecked(
@@ -1613,20 +1621,24 @@ def distributed_execute(
         runner = get_fused_runner(
             it, mesh, axis_name,
             num_shards=num_shards, pool_rows=num_shards * L, scratch_words=S,
-            k_local=k_local, max_iters=max_iters, max_supersteps=max_supersteps,
+            k_local=k_local, max_supersteps=max_supersteps,
             base_capacity=base_capacity, min_link_capacity=min_link_capacity,
             return_to_cpu=return_to_cpu, compact=compact,
             schedule=schedule, fabric=fabric, local_backend=local_backend,
             mutate=mutate,
         )
+        # the quantum rides in as a traced operand: every budget value is a
+        # cache hit on the same executable (int32 is safe -- callers cap
+        # max_iters at 1 << 30)
+        iter_budget = jnp.int32(min(max_iters, (1 << 31) - 1))
         if mutate:
             (pool_global, arena_data, heap, n_active, steps, n_routed, n_drop,
              cap_counts, local_only) = runner(
-                pool_global, arena_data, heap, bounds, perms
+                pool_global, arena_data, heap, bounds, perms, iter_budget
             )
         else:
             pool_global, n_active, steps, n_routed, n_drop, cap_counts, local_only = (
-                runner(pool_global, arena_data, bounds, perms)
+                runner(pool_global, arena_data, bounds, perms, iter_budget)
             )
         if int(n_drop) != 0:  # not assert: must survive python -O
             raise RuntimeError(

@@ -23,6 +23,7 @@ Policy implemented here:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
 
 import numpy as np
@@ -54,6 +55,12 @@ class TraversalRequest:
     status: int = -1
     iters: int = 0
     result: np.ndarray | None = None  # final scratch pad
+    # preemption: a MAXED continuation evicted from its slot carries its
+    # complete traversal state (cur_ptr + scratch_pad, paper S3/S5) back to
+    # the queue and resumes from it when re-admitted
+    cont_ptr: int | None = None
+    cont_scratch: np.ndarray | None = None
+    preemptions: int = 0
 
     @property
     def latency_ms(self) -> float:
@@ -132,23 +139,131 @@ def apply_write_barriers(
     return out
 
 
-class AdmissionController:
-    """Per-tenant queues + EDF-with-fairness slot assignment."""
+class TenantRateLimiter:
+    """Per-tenant token bucket: ``rate_rps`` sustained, ``burst`` headroom.
 
-    def __init__(self):
+    One flooding tenant drains its own bucket and gets shed at the door;
+    other tenants' buckets (and therefore their admission latency) are
+    untouched.  Buckets are created lazily, full, on first sight."""
+
+    def __init__(self, rate_rps: float, burst: float | None = None):
+        if rate_rps <= 0:
+            raise ValueError("rate_rps must be > 0")
+        self.rate = float(rate_rps)
+        self.burst = float(burst) if burst is not None else max(1.0, self.rate)
+        self._tokens: dict[str, float] = {}
+        self._stamp: dict[str, float] = {}
+
+    def allow(self, tenant: str, now_s: float) -> bool:
+        last = self._stamp.get(tenant, now_s)
+        tok = self._tokens.get(tenant, self.burst)
+        tok = min(self.burst, tok + max(0.0, now_s - last) * self.rate)
+        self._stamp[tenant] = now_s
+        if tok >= 1.0:
+            self._tokens[tenant] = tok - 1.0
+            return True
+        self._tokens[tenant] = tok
+        return False
+
+
+class AdmissionController:
+    """Per-tenant queues + EDF-with-fairness slot assignment.
+
+    Overload controls (both optional, off by default so the controller
+    keeps its original accept-everything contract):
+
+      * ``max_pending`` -- bounded admission queue: a submit that would push
+        the total backlog past the bound is *shed* (rejected with
+        backpressure) instead of queued, so queue depth -- and therefore
+        queueing delay for already-accepted requests -- stays bounded under
+        open-loop overload;
+      * ``rate_limiter`` -- per-tenant token bucket applied before the
+        queue-depth check, so one flooding tenant is shed at its own bucket
+        and cannot consume the shared queue budget.
+
+    Bookkeeping is incremental: per-structure min-heaps (lazy deletion)
+    give O(structures) ``pending_by_structure`` and an O(1)-amortized
+    earliest-deadline query instead of the previous O(backlog) scans --
+    under a deep backlog the per-round admission cost no longer grows with
+    the number of queued requests.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_pending: int | None = None,
+        rate_limiter: TenantRateLimiter | None = None,
+    ):
         self._queues: dict[str, deque[TraversalRequest]] = {}
         self._served: dict[str, int] = {}
         self._seq = 0  # global arrival tiebreak
+        self._push = 0  # heap-entry tiebreak (requeues reuse _seq)
+        self._pending = 0
+        self.max_pending = max_pending
+        self.rate_limiter = rate_limiter
+        # (seq, push, req) min-heaps per structure; (abs_deadline, push, req)
+        # across all structures.  Entries whose request was admitted are
+        # dead; they are popped lazily when they surface at a heap head.
+        self._struct_heaps: dict[str, list] = {}
+        self._deadline_heap: list = []
+        self.shed = 0
+        self.shed_rate_limited = 0
+        self.shed_queue_full = 0
+        self.shed_by_tenant: dict[str, int] = {}
 
-    def submit(self, req: TraversalRequest, now_s: float) -> None:
+    def _shed(self, req: TraversalRequest, *, rate_limited: bool) -> bool:
+        self.shed += 1
+        self.shed_rate_limited += int(rate_limited)
+        self.shed_queue_full += int(not rate_limited)
+        self.shed_by_tenant[req.tenant] = self.shed_by_tenant.get(req.tenant, 0) + 1
+        return False
+
+    def _push_heaps(self, req: TraversalRequest) -> None:
+        self._push += 1
+        heapq.heappush(
+            self._struct_heaps.setdefault(req.structure, []),
+            (req._seq, self._push, req),  # type: ignore[attr-defined]
+        )
+        if req.deadline_ms is not None:
+            heapq.heappush(
+                self._deadline_heap,
+                (req.arrival_s + req.deadline_ms / 1e3, self._push, req),
+            )
+
+    def submit(self, req: TraversalRequest, now_s: float) -> bool:
+        """Queue ``req``; returns False (and counts a shed) when the tenant
+        is over its rate or the bounded queue is full."""
+        if self.rate_limiter is not None and not self.rate_limiter.allow(
+            req.tenant, now_s
+        ):
+            return self._shed(req, rate_limited=True)
+        if self.max_pending is not None and self._pending >= self.max_pending:
+            return self._shed(req, rate_limited=False)
         req.arrival_s = now_s
         req._seq = self._seq  # type: ignore[attr-defined]
+        req._admitted = False  # type: ignore[attr-defined]
         self._seq += 1
+        self._pending += 1
         self._queues.setdefault(req.tenant, deque()).append(req)
         self._served.setdefault(req.tenant, 0)
+        self._push_heaps(req)
+        return True
+
+    def requeue(self, req: TraversalRequest) -> None:
+        """Return a preempted continuation to the *front* of its tenant
+        queue.  The request keeps its original arrival ``_seq`` (and
+        deadline), so EDF ordering treats it exactly as the old request it
+        is; the served credit its admission charged is refunded so
+        preemption stays fairness-neutral.  Bounded-queue and rate limits do
+        not apply -- the request was already accepted once."""
+        req._admitted = False  # type: ignore[attr-defined]
+        self._pending += 1
+        self._queues.setdefault(req.tenant, deque()).appendleft(req)
+        self._served[req.tenant] = max(0, self._served.get(req.tenant, 1) - 1)
+        self._push_heaps(req)
 
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return self._pending
 
     def pending_by_structure(self) -> dict[str, int]:
         """Earliest queued arrival sequence per structure (presence in the
@@ -158,12 +273,47 @@ class AdmissionController:
         winner could deadlock against a tenant whose queue head is the other
         writer)."""
         out: dict[str, int] = {}
-        for q in self._queues.values():
-            for r in q:
-                s = getattr(r, "_seq", 0)
-                cur = out.get(r.structure)
-                out[r.structure] = s if cur is None else min(cur, s)
+        for s, h in self._struct_heaps.items():
+            while h and h[0][2]._admitted:
+                heapq.heappop(h)
+            if h:
+                out[s] = h[0][0]
         return out
+
+    def head_pending_by_structure(self) -> dict[str, int]:
+        """Like ``pending_by_structure`` but restricted to tenant-queue
+        *heads* -- the only requests ``admit`` can actually reach this
+        round.  This is what the write barriers must consume: a writer
+        buried mid-queue cannot take the group now, and blocking the
+        group's readers on it would deadlock a tenant whose queue
+        interleaves reads ahead of writes (the reads can never drain, so
+        the writer never reaches its head)."""
+        out: dict[str, int] = {}
+        for q in self._queues.values():
+            if not q:
+                continue
+            r = q[0]
+            s = getattr(r, "_seq", 0)
+            cur = out.get(r.structure)
+            out[r.structure] = s if cur is None else min(cur, s)
+        return out
+
+    def peek_earliest_deadline(self) -> tuple[float, TraversalRequest] | None:
+        """(absolute deadline, request) of the most urgent *queued* (not yet
+        admitted) request, or None.  Feeds EDF preemption: the urgent head
+        may steal a slot from a strictly-less-urgent continuation."""
+        h = self._deadline_heap
+        while h and h[0][2]._admitted:
+            heapq.heappop(h)
+        return (h[0][0], h[0][2]) if h else None
+
+    def earliest_deadline_s(self) -> float | None:
+        """Earliest absolute queued deadline, or None.  Feeds SLO-aware
+        quantum sizing: a deadline waiting in the queue bounds how long the
+        device may stay busy on the current batch before that request must
+        get a slot."""
+        peek = self.peek_earliest_deadline()
+        return peek[0] if peek else None
 
     def __len__(self) -> int:
         return self.pending()
@@ -199,6 +349,8 @@ class AdmissionController:
             if best_tenant is None:
                 break
             req = self._queues[best_tenant].popleft()
+            req._admitted = True  # type: ignore[attr-defined]
+            self._pending -= 1
             self._served[best_tenant] += 1
             free[req.structure] -= 1
             if free[req.structure] <= 0:

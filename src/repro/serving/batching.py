@@ -200,3 +200,119 @@ def _merge_slots(cache_old, cache_new, slots: np.ndarray):
         return a.at[sel].set(b[sel])
 
     return jax.tree.map(merge, cache_old, cache_new)
+
+
+# --------------------------------------------------------------------------
+# Async device-runner pipeline (PulseService's background execution thread)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantumWork:
+    """One traversal quantum handed to the DeviceRunner.
+
+    ``run`` executes the device work (an ``engine.execute`` call) and
+    returns its result; ``apply`` consumes that result on the runner thread
+    (slot-state scatter, fast retirement, emit-event push).  Both run on the
+    runner thread, strictly FIFO, so the engine-call order -- and therefore
+    record/commit/arena bit-identity with the synchronous loop -- is
+    preserved exactly.
+    """
+
+    label: str
+    run: "callable"
+    apply: "callable"
+
+
+class DeviceRunner:
+    """Background device-runner thread with a bounded double-buffered queue.
+
+    The main thread admits and batches the next quantum while this thread
+    keeps the current one in flight on the device (XLA drops the GIL during
+    execution, so admission bookkeeping genuinely overlaps device compute).
+    ``depth`` bounds the handoff queue: a submit past the bound blocks the
+    producer (backpressure) instead of growing an unbounded backlog.
+
+    Lifecycle: ``start`` -> any number of ``submit`` -> ``drain`` (barrier:
+    every submitted quantum ran *and* applied) -> ``close``.  An exception
+    on the runner thread is captured and re-raised on the next ``submit``
+    or ``drain`` so failures surface on the producer, not silently in a
+    daemon thread.
+    """
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        import queue
+        import threading
+
+        self._q: "queue.Queue[QuantumWork | None]" = queue.Queue(maxsize=depth)
+        self._cv = threading.Condition()
+        self._unfinished = 0
+        self._err: BaseException | None = None
+        self._thread: threading.Thread | None = None
+        self.quanta_run = 0
+        self.max_queue_depth = 0  # high-water mark of the handoff queue
+
+    def start(self) -> "DeviceRunner":
+        import threading
+
+        if self._thread is not None:
+            raise RuntimeError("runner already started")
+        self._thread = threading.Thread(
+            target=self._loop, name="pulse-device-runner", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while True:
+            work = self._q.get()
+            if work is None:
+                return
+            try:
+                if self._err is None:  # fail fast after first error
+                    work.apply(work.run())
+                    self.quanta_run += 1
+            except BaseException as e:  # noqa: BLE001 -- must cross threads
+                with self._cv:
+                    self._err = e
+            finally:
+                with self._cv:
+                    self._unfinished -= 1
+                    self._cv.notify_all()
+
+    def _raise_pending(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def submit(self, work: QuantumWork) -> None:
+        if self._thread is None:
+            raise RuntimeError("runner not started")
+        self._raise_pending()
+        with self._cv:
+            self._unfinished += 1
+        self.max_queue_depth = max(
+            self.max_queue_depth, min(self._q.maxsize, self._q.qsize() + 1)
+        )
+        self._q.put(work)  # blocks at depth: bounded handoff
+
+    @property
+    def in_flight(self) -> int:
+        with self._cv:
+            return self._unfinished
+
+    def drain(self) -> None:
+        """Barrier: block until every submitted quantum has run and applied."""
+        with self._cv:
+            self._cv.wait_for(lambda: self._unfinished == 0)
+        self._raise_pending()
+
+    def close(self) -> None:
+        if self._thread is None:
+            return
+        self.drain()
+        self._q.put(None)
+        self._thread.join()
+        self._thread = None

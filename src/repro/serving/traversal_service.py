@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 
 import numpy as np
 
@@ -55,9 +56,15 @@ from repro.core.iterator import (
 )
 from repro.serving.admission import (
     AdmissionController,
+    TenantRateLimiter,
     TraversalRequest,
     apply_write_barriers,
 )
+from repro.serving.batching import DeviceRunner, QuantumWork
+
+# request.status for arrivals rejected by admission (rate limit or bounded
+# queue) -- they never execute, so no iterator STATUS_* value applies
+STATUS_SHED = -2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +114,12 @@ class ServiceMetrics:
     # write path: mutations committed + requests served by mutating specs
     commits: int = 0
     writes_retired: int = 0
+    # overload + pipeline accounting
+    shed: int = 0  # arrivals rejected (rate limit or bounded queue)
+    preempted: int = 0  # continuations evicted for an urgent deadline
+    queue_depth_max: int = 0  # admission-queue high-water mark
+    quantum_min_used: int = 0  # smallest / largest quantum any round ran
+    quantum_max_used: int = 0
 
     def _pct(self, p: float) -> float:
         if not self.latencies_ms:
@@ -120,6 +133,10 @@ class ServiceMetrics:
     @property
     def p99_ms(self) -> float:
         return self._pct(99)
+
+    @property
+    def p999_ms(self) -> float:
+        return self._pct(99.9)
 
     @property
     def throughput_rps(self) -> float:
@@ -141,7 +158,7 @@ class ServiceMetrics:
             f"timed_out={self.timed_out} rounds={self.rounds} "
             f"p50={self.p50_ms:.2f}ms p99={self.p99_ms:.2f}ms "
             f"throughput={self.throughput_rps:.0f} req/s "
-            f"util={self.utilization:.0%}"
+            f"util={self.utilization:.0%} shed={self.shed}"
         )
 
 
@@ -181,9 +198,20 @@ class PulseService:
         fused: bool = True,
         schedule: str = "auto",
         fabric: str = "dense",
+        pipeline: str = "sync",
+        runner_depth: int = 2,
+        min_quantum: int | None = None,
+        max_quantum: int | None = None,
+        slo_safety: float = 0.5,
+        preempt: bool = False,
+        max_pending: int | None = None,
+        rate_limit_rps: float | None = None,
+        rate_limit_burst: float | None = None,
     ):
         if quantum < 1:
             raise ValueError("quantum must be >= 1")
+        if pipeline not in ("sync", "async"):
+            raise ValueError(f"pipeline must be 'sync' or 'async', got {pipeline!r}")
         self.engine = engine
         self.backend = backend
         self.compact = compact
@@ -198,13 +226,48 @@ class PulseService:
         self.fabric = fabric
         self.quantum = quantum
         self.max_request_iters = max_request_iters
+        # pipeline="async": a background DeviceRunner thread keeps the
+        # current quantum in flight while this thread drains emit events and
+        # books the next round's admissions.  Engine calls stay strictly
+        # FIFO on the runner, so results/commits/arenas are bit-identical to
+        # the synchronous loop under the same quantum policy.
+        self.pipeline = pipeline
+        self.runner_depth = runner_depth
+        self._runner: DeviceRunner | None = None
+        # SLO-aware quantum sizing: rounds run [min_quantum, max_quantum]
+        # iterations, grown multiplicatively while no deadline is at risk
+        # and shrunk to fit the earliest deadline's headroom (EWMA ms/iter
+        # estimate).  Defaults (None) pin both bounds to ``quantum`` --
+        # i.e. the legacy fixed-quantum behavior.
+        self.min_quantum = min_quantum if min_quantum is not None else quantum
+        self.max_quantum = max_quantum if max_quantum is not None else quantum
+        if not 1 <= self.min_quantum <= self.max_quantum:
+            raise ValueError("need 1 <= min_quantum <= max_quantum")
+        self.slo_safety = slo_safety
+        self._cur_quantum = min(max(quantum, self.min_quantum), self.max_quantum)
+        self._ms_per_iter: float | None = None
+        # EDF preemption: an urgent queued deadline may evict a MAXED
+        # continuation (its (ptr, scratch) is complete traversal state)
+        # from a full read group; the evictee requeues at its original
+        # arrival order and resumes where it stopped.
+        self.preempt = preempt
         self.groups = {
             name: _SlotGroup(name, spec, slots_per_structure)
             for name, spec in structures.items()
         }
-        self.admission = AdmissionController()
+        limiter = (
+            TenantRateLimiter(rate_limit_rps, rate_limit_burst)
+            if rate_limit_rps is not None
+            else None
+        )
+        self.admission = AdmissionController(
+            max_pending=max_pending, rate_limiter=limiter
+        )
         self.metrics = ServiceMetrics()
         self._pending_arrivals: list[TraversalRequest] = []
+        # retirement events (writes?, request) pushed by whichever thread
+        # retires; accounting drains them on the main thread
+        self._emit: deque = deque()
 
     # ------------------------------ intake -----------------------------------
 
@@ -216,13 +279,66 @@ class PulseService:
 
     # ------------------------------ serving ----------------------------------
 
-    def _admit(self, now_s: float, rnd: int) -> None:
+    def _intake(self, now_s: float, rnd: int) -> None:
         arrivals = [r for r in self._pending_arrivals if r.arrive_round <= rnd]
         self._pending_arrivals = [
             r for r in self._pending_arrivals if r.arrive_round > rnd
         ]
+        m = self.metrics
         for r in arrivals:
-            self.admission.submit(r, now_s)
+            if not self.admission.submit(r, now_s):
+                r.status = STATUS_SHED
+                m.shed += 1
+        m.queue_depth_max = max(m.queue_depth_max, self.admission.pending())
+
+    def _maybe_preempt(self, now_s: float) -> None:
+        """EDF slot stealing: if the most urgent *queued* deadline targets a
+        full read group holding a strictly-less-urgent resumable
+        continuation, evict that continuation (its (cur_ptr, scratch_pad)
+        is complete traversal state) and requeue it at its original arrival
+        order.  At most one eviction per round."""
+        peek = self.admission.peek_earliest_deadline()
+        if peek is None:
+            return
+        urgent_dl, urgent = peek
+        g = self.groups.get(urgent.structure)
+        if g is None or g.spec.writes or g.free_slots() > 0:
+            return  # write batches own their group; free slots need no theft
+        victim, victim_dl = -1, -1.0
+        for s, r in enumerate(g.req):
+            if r is None or g.iters[s] <= 0:
+                continue  # only continuations that already ran a quantum
+            dl = (
+                float("inf")
+                if r.deadline_ms is None
+                else r.arrival_s + r.deadline_ms / 1e3
+            )
+            if victim < 0 or dl > victim_dl:
+                victim, victim_dl = s, dl
+        if victim < 0 or victim_dl <= urgent_dl:
+            return  # nobody on-device is less urgent than the queued head
+        v = g.req[victim]
+        if v.tenant == urgent.tenant and getattr(v, "_seq", 0) < getattr(
+            urgent, "_seq", 0
+        ):
+            # per-tenant FIFO: the requeued victim would sit ahead of the
+            # urgent request in its own tenant queue, so eviction cannot
+            # help -- it would only thrash the slot
+            return
+        r = g.req[victim]
+        r.cont_ptr = int(g.ptr[victim])
+        r.cont_scratch = g.scratch[victim].copy()
+        r.iters = int(g.iters[victim])
+        r.preemptions += 1
+        g.req[victim] = None
+        g.ptr[victim] = NULL
+        self.admission.requeue(r)
+        self.metrics.preempted += 1
+
+    def _admit(self, now_s: float, rnd: int) -> None:
+        self._intake(now_s, rnd)
+        if self.preempt:
+            self._maybe_preempt(now_s)
         free = {name: g.free_slots() for name, g in self.groups.items()}
         # write-path barrier: writers take their structure group exclusively
         free = apply_write_barriers(
@@ -230,7 +346,9 @@ class PulseService:
             {n: g.spec.group or n for n, g in self.groups.items()},
             {n: g.spec.writes for n, g in self.groups.items()},
             {n: bool(g.occupied().any()) for n, g in self.groups.items()},
-            self.admission.pending_by_structure(),
+            # head-only pending: a writer buried behind its tenant's queued
+            # reads must not block those reads (circular wait otherwise)
+            self.admission.head_pending_by_structure(),
         )
         admitted = self.admission.admit(free)
         by_group: dict[str, list[TraversalRequest]] = {}
@@ -238,27 +356,48 @@ class PulseService:
             by_group.setdefault(r.structure, []).append(r)
         for name, reqs in by_group.items():
             g = self.groups[name]
-            queries = jnp.asarray(
-                np.array([r.query for r in reqs], np.int32)
-            )
-            if g.spec.takes_value:
-                values = jnp.asarray(np.array([r.value for r in reqs], np.int32))
-                ptr0, scr0 = g.spec.iterator.init(queries, values, *g.spec.init_args)
-            else:
-                ptr0, scr0 = g.spec.iterator.init(queries, *g.spec.init_args)
-            ptr0 = np.asarray(ptr0, np.int32)
-            scr0 = np.asarray(scr0, np.int32)
+            fresh = [r for r in reqs if r.cont_ptr is None]
+            if fresh:
+                queries = jnp.asarray(
+                    np.array([r.query for r in fresh], np.int32)
+                )
+                if g.spec.takes_value:
+                    values = jnp.asarray(
+                        np.array([r.value for r in fresh], np.int32)
+                    )
+                    ptr0, scr0 = g.spec.iterator.init(
+                        queries, values, *g.spec.init_args
+                    )
+                else:
+                    ptr0, scr0 = g.spec.iterator.init(queries, *g.spec.init_args)
+                ptr0 = np.asarray(ptr0, np.int32)
+                scr0 = np.asarray(scr0, np.int32)
             free_idx = [i for i, r in enumerate(g.req) if r is None]
+            fi = 0
             for j, r in enumerate(reqs):
                 s = free_idx[j]
                 g.req[s] = r
-                g.ptr[s] = ptr0[j]
-                g.scratch[s] = scr0[j]
-                g.iters[s] = 0
-                r.admit_s = now_s
-                r.admit_round = rnd
+                if r.cont_ptr is None:
+                    g.ptr[s] = ptr0[fi]
+                    g.scratch[s] = scr0[fi]
+                    g.iters[s] = 0
+                    fi += 1
+                else:  # preempted continuation: resume saved traversal state
+                    g.ptr[s] = r.cont_ptr
+                    g.scratch[s] = r.cont_scratch
+                    g.iters[s] = r.iters
+                    r.cont_ptr = None
+                    r.cont_scratch = None
+                if r.admit_s < 0:
+                    r.admit_s = now_s
+                    r.admit_round = rnd
 
-    def _retire(self, g: _SlotGroup, slot: int, status: int, now_s: float, rnd: int):
+    def _fast_retire(
+        self, g: _SlotGroup, slot: int, status: int, now_s: float, rnd: int
+    ) -> None:
+        """Free the slot and capture the result (runner-thread-safe part of
+        retirement); accounting happens when ``_drain_emit`` consumes the
+        event on the main thread."""
         r = g.req[slot]
         assert r is not None
         r.status = int(status)
@@ -268,57 +407,123 @@ class PulseService:
         r.finish_round = rnd
         g.req[slot] = None
         g.ptr[slot] = NULL
-        m = self.metrics
-        m.retired += 1
-        m.writes_retired += int(g.spec.writes)
-        m.completed += int(status == STATUS_DONE)
-        m.faulted += int(status == STATUS_FAULT)
-        m.timed_out += int(status == STATUS_MAXED)
-        m.latencies_ms.append(r.latency_ms)
-        t = m.per_tenant.setdefault(
-            r.tenant, {"completed": 0, "latencies_ms": []}
-        )
-        t["completed"] += int(status == STATUS_DONE)
-        t["latencies_ms"].append(r.latency_ms)
-        met = r.deadline_met
-        if met is not None:
-            if met:
-                m.deadlines_met += 1
-            else:
-                m.deadlines_missed += 1
+        self._emit.append((g.spec.writes, r))
 
-    def _run_group(self, g: _SlotGroup, now_s: float, rnd: int) -> None:
-        occ = g.occupied()
-        if not occ.any():
-            return
-        # NULL pointers in padding (free) slots fault on the first iteration,
-        # so a fixed-width batch costs one compiled shape per group.
-        res = self.engine.execute(
-            g.spec.iterator,
-            g.ptr.copy(),
-            g.scratch.copy(),
-            max_iters=self.quantum,
-            backend=self.backend,
-            compact=self.compact,
-            fused=self.fused,
-            schedule=self.schedule,
-            fabric=self.fabric,
-        )
-        self.metrics.engine_calls += 1
+    def _drain_emit(self) -> None:
+        """Consume retirement events (emit is decoupled from the step loop:
+        in async mode this overlaps the device's current quantum)."""
+        m = self.metrics
+        while True:
+            try:
+                writes, r = self._emit.popleft()
+            except IndexError:
+                return
+            m.retired += 1
+            m.writes_retired += int(writes)
+            m.completed += int(r.status == STATUS_DONE)
+            m.faulted += int(r.status == STATUS_FAULT)
+            m.timed_out += int(r.status == STATUS_MAXED)
+            m.latencies_ms.append(r.latency_ms)
+            t = m.per_tenant.setdefault(
+                r.tenant, {"completed": 0, "latencies_ms": []}
+            )
+            t["completed"] += int(r.status == STATUS_DONE)
+            t["latencies_ms"].append(r.latency_ms)
+            met = r.deadline_met
+            if met is not None:
+                if met:
+                    m.deadlines_met += 1
+                else:
+                    m.deadlines_missed += 1
+
+    def _apply_result(self, g: _SlotGroup, occ, res, dt_s: float, rnd: int) -> None:
+        now_s = time.perf_counter()
+        m = self.metrics
+        m.engine_calls += 1
         stats = res.stats
         if stats is not None and hasattr(stats, "supersteps"):
-            self.metrics.supersteps += stats.supersteps
-            self.metrics.wire_words += stats.total_wire_words
-            self.metrics.commits += getattr(stats, "commits", 0)
+            m.supersteps += stats.supersteps
+            m.wire_words += stats.total_wire_words
+            m.commits += getattr(stats, "commits", 0)
+        iters_done = 0
         for s in np.flatnonzero(occ):
             g.ptr[s] = res.ptr[s]
             g.scratch[s] = res.scratch[s]
-            g.iters[s] += int(res.iters[s])
-            self.metrics.lane_iters += int(res.iters[s])
+            lane = int(res.iters[s])
+            g.iters[s] += lane
+            m.lane_iters += lane
+            iters_done = max(iters_done, lane)
             st = int(res.status[s])
             if st == STATUS_MAXED and g.iters[s] < self.max_request_iters:
                 continue  # continuation: stays in its slot, resumes next round
-            self._retire(g, int(s), st, now_s, rnd)
+            self._fast_retire(g, int(s), st, now_s, rnd)
+        if iters_done > 0 and dt_s > 0:
+            est = dt_s * 1e3 / iters_done  # ms per iteration, EWMA-smoothed
+            self._ms_per_iter = (
+                est
+                if self._ms_per_iter is None
+                else 0.7 * self._ms_per_iter + 0.3 * est
+            )
+
+    def _make_work(self, g: _SlotGroup, rnd: int, quantum: int) -> QuantumWork:
+        # NULL pointers in padding (free) slots fault on the first iteration,
+        # so a fixed-width batch costs one compiled shape per group.
+        occ = g.occupied()
+
+        def run():
+            t0 = time.perf_counter()
+            res = self.engine.execute(
+                g.spec.iterator,
+                g.ptr.copy(),
+                g.scratch.copy(),
+                max_iters=quantum,
+                backend=self.backend,
+                compact=self.compact,
+                fused=self.fused,
+                schedule=self.schedule,
+                fabric=self.fabric,
+            )
+            return res, time.perf_counter() - t0
+
+        def apply(out):
+            res, dt_s = out
+            self._apply_result(g, occ, res, dt_s, rnd)
+
+        return QuantumWork(label=g.name, run=run, apply=apply)
+
+    def _quantum_for_round(self, now_s: float) -> int:
+        """SLO-aware quantum sizing.  With the bounds pinned (the default)
+        this returns the fixed ``quantum``.  Otherwise: no deadline in
+        sight -> grow multiplicatively toward ``max_quantum`` (fewer
+        rounds, fewer dispatches per request); a deadline pending or on
+        device -> fit the quantum inside the earliest deadline's headroom
+        using the EWMA ms/iter estimate, floored at ``min_quantum`` so
+        forward progress never stalls."""
+        lo, hi = self.min_quantum, self.max_quantum
+        if lo == hi:
+            return lo
+        deadlines = []
+        q_dl = self.admission.earliest_deadline_s()
+        if q_dl is not None:
+            deadlines.append(q_dl)
+        for g in self.groups.values():
+            for r in g.req:
+                if r is not None and r.deadline_ms is not None:
+                    deadlines.append(r.arrival_s + r.deadline_ms / 1e3)
+        if not deadlines or self._ms_per_iter is None:
+            self._cur_quantum = min(hi, max(lo, self._cur_quantum * 2))
+        else:
+            headroom_ms = max(0.0, (min(deadlines) - now_s) * 1e3)
+            target = int(headroom_ms * self.slo_safety / self._ms_per_iter)
+            self._cur_quantum = min(hi, max(lo, target))
+        return self._cur_quantum
+
+    def _ensure_runner(self) -> DeviceRunner | None:
+        if self.pipeline != "async":
+            return None
+        if self._runner is None:
+            self._runner = DeviceRunner(depth=self.runner_depth).start()
+        return self._runner
 
     def _busy(self) -> bool:
         return (
@@ -328,17 +533,46 @@ class PulseService:
         )
 
     def step(self, rnd: int | None = None) -> None:
-        """One scheduling round: admit -> run every occupied group -> retire."""
+        """One scheduling round: admit -> run every occupied group -> retire.
+
+        sync: each group's quantum executes inline, retirement accounting
+        drains at the end of the round.  async: group quanta are handed to
+        the DeviceRunner (bounded double-buffered queue) and this thread
+        books prior retirements while the device chews; the round ends on
+        the runner's drain barrier, so the next round's admission sees
+        settled slot state and the engine-call sequence matches sync
+        exactly."""
         m = self.metrics
         rnd = m.rounds if rnd is None else rnd
         now = time.perf_counter()
         self._admit(now, rnd)
+        quantum = self._quantum_for_round(now)
+        if m.quantum_min_used == 0 or quantum < m.quantum_min_used:
+            m.quantum_min_used = quantum
+        m.quantum_max_used = max(m.quantum_max_used, quantum)
+        runner = self._ensure_runner()
         for g in self.groups.values():
             occupied_before = int(g.occupied().sum())  # count before retirement
-            self._run_group(g, time.perf_counter(), rnd)
             m.slot_rounds += occupied_before
             m.capacity_rounds += g.n_slots
+            if occupied_before == 0:
+                continue
+            work = self._make_work(g, rnd, quantum)
+            if runner is not None:
+                runner.submit(work)
+            else:
+                work.apply(work.run())
+        if runner is not None:
+            self._drain_emit()  # overlap: account retirements mid-flight
+            runner.drain()  # barrier: slot state settled for next admit
+        self._drain_emit()
         m.rounds += 1
+
+    def close(self) -> None:
+        """Stop the background runner (idempotent; restarted on demand)."""
+        if self._runner is not None:
+            self._runner.close()
+            self._runner = None
 
     def run(
         self,
@@ -350,9 +584,15 @@ class PulseService:
         t0 = time.perf_counter()
         for r in requests or []:
             self.submit(r)
-        while self._busy():
-            if self.metrics.rounds >= max_rounds:
-                raise RuntimeError(f"service did not drain in {max_rounds} rounds")
-            self.step()
+        try:
+            while self._busy():
+                if self.metrics.rounds >= max_rounds:
+                    raise RuntimeError(
+                        f"service did not drain in {max_rounds} rounds"
+                    )
+                self.step()
+        finally:
+            self.close()
+            self._drain_emit()
         self.metrics.wall_s += time.perf_counter() - t0
         return self.metrics

@@ -247,6 +247,78 @@ def check_alloc_exhaustion_faults():
     print("alloc exhaustion fault ok")
 
 
+def check_service_async_sync_identity():
+    """PulseService over the 8-shard mesh serving a mixed read/write quantum
+    stream: the async device-runner pipeline must match the synchronous loop
+    bit for bit on results, commits, and the final arena (data + heap).
+    ALLOC addresses depend on write-batch composition, so this also pins the
+    admission schedule itself."""
+    from repro.core.engine import PulseEngine  # noqa: E402
+    from repro.serving.admission import TraversalRequest  # noqa: E402
+    from repro.serving.traversal_service import (  # noqa: E402
+        PulseService,
+        StructureSpec,
+    )
+
+    keys = np.arange(100, 164, dtype=np.int32)
+
+    def serve(pipeline):
+        b = ArenaBuilder(512, 4, num_shards=P, policy="interleaved")
+        head = linked_list.build_into(b, keys, keys * 2)
+        eng = PulseEngine(b.finish(), mesh=jax.make_mesh((P,), ("mem",)))
+        svc = PulseService(
+            eng,
+            {
+                "list": StructureSpec(
+                    linked_list.find_iterator(), (head,), group="list"
+                ),
+                "list_ins": StructureSpec(
+                    linked_list.insert_iterator(), (head,), group="list",
+                    takes_value=True,
+                ),
+            },
+            slots_per_structure=8,
+            quantum=6,
+            pipeline=pipeline,
+        )
+        reqs = []
+        for i in range(36):
+            if i % 4 == 2:
+                reqs.append(
+                    TraversalRequest(
+                        i, "list_ins", 1000 + i, value=i * 11,
+                        tenant="w", arrive_round=i // 8,
+                    )
+                )
+            else:
+                reqs.append(
+                    TraversalRequest(
+                        i, "list", int(keys[(i * 7) % len(keys)]),
+                        tenant="r", arrive_round=i // 8,
+                    )
+                )
+        m = svc.run(reqs)
+        return reqs, m, eng.arena
+
+    ra, ma, ar_a = serve("sync")
+    rb, mb, ar_b = serve("async")
+    assert ma.rounds == mb.rounds, (ma.rounds, mb.rounds)
+    assert ma.engine_calls == mb.engine_calls
+    assert ma.commits == mb.commits and ma.commits > 0, (ma.commits, mb.commits)
+    assert ma.writes_retired == mb.writes_retired == 9
+    for a, b_ in zip(ra, rb):
+        assert (a.status, a.iters, a.finish_round) == (
+            b_.status, b_.iters, b_.finish_round,
+        ), a.req_id
+        np.testing.assert_array_equal(a.result, b_.result, err_msg=str(a.req_id))
+    np.testing.assert_array_equal(np.asarray(ar_a.data), np.asarray(ar_b.data))
+    np.testing.assert_array_equal(np.asarray(ar_a.heap), np.asarray(ar_b.heap))
+    print(
+        f"service async/sync identity ok: rounds={ma.rounds} "
+        f"commits={ma.commits} retired={ma.retired}"
+    )
+
+
 if __name__ == "__main__":
     assert jax.device_count() == P, jax.devices()
     check_chain_mixed_rw()
@@ -255,4 +327,5 @@ if __name__ == "__main__":
     check_tree_updates()
     check_write_permission_fault()
     check_alloc_exhaustion_faults()
+    check_service_async_sync_identity()
     print("ALL WRITE-PATH CHECKS PASSED")

@@ -1,0 +1,320 @@
+"""Async device-runner pipeline: bit-identity with the synchronous loop,
+SLO-aware quantum sizing, EDF preemption, and open-loop overload behavior
+(rate limiting + bounded-queue shedding)."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import PulseEngine
+from repro.core.iterator import STATUS_DONE
+from repro.core.structures import btree, linked_list
+from repro.serving.admission import (
+    AdmissionController,
+    TenantRateLimiter,
+    TraversalRequest,
+)
+from repro.serving.batching import DeviceRunner, QuantumWork
+from repro.serving.traversal_service import (
+    STATUS_SHED,
+    PulseService,
+    StructureSpec,
+)
+
+RNG = np.random.default_rng(11)
+
+
+def _list_service(pipeline="sync", n=96, slots=8, **kw):
+    keys = np.arange(n, dtype=np.int32)
+    vals = (keys * 7 + 1).astype(np.int32)
+    ar, head = linked_list.build(keys, vals)
+    eng = PulseEngine(ar)
+    svc = PulseService(
+        eng,
+        {"list": StructureSpec(linked_list.find_iterator(), (head,))},
+        slots_per_structure=slots,
+        quantum=4,
+        pipeline=pipeline,
+        **kw,
+    )
+    return svc, keys, vals
+
+
+# ----------------------------- device runner ------------------------------
+
+
+def test_device_runner_fifo_and_drain():
+    runner = DeviceRunner(depth=2).start()
+    seen = []
+    for i in range(8):
+        runner.submit(
+            QuantumWork(
+                label=f"w{i}", run=lambda i=i: i * 10, apply=seen.append
+            )
+        )
+    runner.drain()
+    assert seen == [i * 10 for i in range(8)]  # strict FIFO
+    assert runner.quanta_run == 8
+    assert runner.max_queue_depth <= 2
+    runner.close()
+
+
+def test_device_runner_propagates_errors():
+    runner = DeviceRunner(depth=2).start()
+
+    def boom():
+        raise RuntimeError("quantum failed")
+
+    runner.submit(QuantumWork(label="bad", run=boom, apply=lambda r: None))
+    with pytest.raises(RuntimeError, match="quantum failed"):
+        runner.drain()
+    runner.close()
+
+
+# ------------------------- async-vs-sync identity -------------------------
+
+
+def test_async_matches_sync_bit_identical():
+    """Same arrivals, same quantum policy: the async pipeline must retire
+    every request with identical status/iters/round/result to sync."""
+
+    def serve(pipeline):
+        svc, keys, _ = _list_service(pipeline)
+        reqs = [
+            TraversalRequest(
+                i,
+                "list",
+                int(keys[(i * 13) % len(keys)]),
+                tenant=f"t{i % 3}",
+                arrive_round=i // 10,
+            )
+            for i in range(50)
+        ]
+        m = svc.run(reqs)
+        return reqs, m
+
+    ra, ma = serve("sync")
+    rb, mb = serve("async")
+    assert ma.rounds == mb.rounds
+    assert ma.engine_calls == mb.engine_calls
+    assert ma.completed == mb.completed == 50
+    for a, b in zip(ra, rb):
+        assert (a.status, a.iters, a.finish_round, a.admit_round) == (
+            b.status,
+            b.iters,
+            b.finish_round,
+            b.admit_round,
+        )
+        np.testing.assert_array_equal(a.result, b.result)
+
+
+def test_async_overlaps_accounting_with_device():
+    """The emit queue drains while quanta are in flight: after a run the
+    runner has executed every engine call and accounting is complete."""
+    svc, keys, vals = _list_service("async")
+    reqs = [TraversalRequest(i, "list", int(keys[i])) for i in range(24)]
+    m = svc.run(reqs)
+    assert m.completed == 24
+    assert svc._runner is None  # run() closes the runner
+    assert not svc._emit  # nothing left unaccounted
+    for r in reqs:
+        assert r.status == STATUS_DONE
+        assert int(r.result[1]) == int(vals[r.query])
+
+
+# --------------------------- SLO quantum sizing ---------------------------
+
+
+def test_slo_quantum_bounds_and_ramp():
+    """No deadlines in sight -> the quantum ramps multiplicatively to
+    max_quantum; bounds are respected and recorded."""
+    svc, keys, _ = _list_service(
+        "async", min_quantum=2, max_quantum=64
+    )
+    reqs = [TraversalRequest(i, "list", int(keys[-1])) for i in range(4)]
+    m = svc.run(reqs)
+    assert m.completed == 4
+    assert 2 <= m.quantum_min_used <= m.quantum_max_used <= 64
+    assert m.quantum_max_used == 64  # ramp reached the cap
+
+
+def test_slo_quantum_shrinks_under_deadline_pressure():
+    """A tight queued deadline forces the quantum toward min_quantum."""
+    svc, keys, _ = _list_service("sync", min_quantum=2, max_quantum=256)
+    # seed the ms/iter estimate high so any finite headroom clamps low
+    svc._ms_per_iter = 50.0
+    svc._cur_quantum = 256
+    svc.submit(TraversalRequest(0, "list", int(keys[1]), deadline_ms=10.0))
+    svc.step()
+    assert svc.metrics.quantum_min_used == 2
+
+
+def test_fixed_quantum_default_unchanged():
+    """Without min/max bounds the service must keep the legacy fixed
+    quantum (the bit-identity precondition)."""
+    svc, keys, _ = _list_service("async")
+    m = svc.run([TraversalRequest(0, "list", int(keys[-1]))])
+    assert m.quantum_min_used == m.quantum_max_used == 4
+
+
+# ------------------------------ preemption --------------------------------
+
+
+def test_edf_preemption_evicts_and_resumes():
+    """A full group of long best-effort walks + one urgent deadline: the
+    urgent request steals a slot; the evictee resumes from its saved
+    continuation and still finishes with a correct result."""
+    svc, keys, vals = _list_service("sync", slots=2, preempt=True)
+    deep = [
+        TraversalRequest(i, "list", int(keys[-1 - i]), tenant="bulk")
+        for i in range(2)
+    ]
+    svc.submit(deep[0])
+    svc.submit(deep[1])
+    svc.step()  # both on device, each a MAXED continuation now
+    urgent = TraversalRequest(
+        9, "list", int(keys[1]), tenant="rt", deadline_ms=50.0
+    )
+    svc.submit(urgent)
+    m = svc.run()
+    assert m.preempted >= 1
+    assert m.completed == 3
+    evicted = [r for r in deep if r.preemptions > 0]
+    assert evicted, "one long walk must have been evicted"
+    for r in deep + [urgent]:
+        assert r.status == STATUS_DONE
+        assert int(r.result[1]) == int(vals[r.query])
+    # the urgent request was admitted before the evictee finished
+    assert urgent.finish_round <= max(r.finish_round for r in evicted)
+
+
+# ------------------------ overload: shed + bounds -------------------------
+
+
+def test_rate_limiter_token_bucket():
+    rl = TenantRateLimiter(rate_rps=10.0, burst=2.0)
+    assert rl.allow("a", 0.0) and rl.allow("a", 0.0)  # burst
+    assert not rl.allow("a", 0.0)  # bucket empty
+    assert rl.allow("a", 0.1)  # refilled one token at 10 rps
+    assert rl.allow("b", 0.0)  # other tenants unaffected
+
+
+def test_admission_requeue_restores_order():
+    ac = AdmissionController()
+    a = TraversalRequest(0, "s", 1, tenant="t")
+    b = TraversalRequest(1, "s", 2, tenant="t")
+    assert ac.submit(a, 0.0) and ac.submit(b, 0.0)
+    (first,) = ac.admit({"s": 1})
+    assert first is a
+    ac.requeue(a)
+    assert ac.pending() == 2
+    assert ac.pending_by_structure() == {"s": 0}  # a's original seq
+    (again,) = ac.admit({"s": 1})
+    assert again is a  # front of the tenant queue again
+
+
+def test_open_loop_burst_sheds_and_bounds_queue():
+    """Open-loop burst beyond capacity: rejects are counted, queue depth
+    stays bounded, and accepted requests still meet their EDF deadlines."""
+    svc, keys, _ = _list_service(
+        "async",
+        slots=4,
+        max_pending=8,
+        rate_limit_rps=1e6,  # shedding comes from the bounded queue here
+    )
+    reqs = [
+        TraversalRequest(i, "list", int(keys[i % 8]), deadline_ms=60_000.0)
+        for i in range(64)
+    ]
+    m = svc.run(reqs)
+    assert m.shed > 0
+    assert m.completed + m.shed == 64
+    assert m.queue_depth_max <= 8
+    shed = [r for r in reqs if r.status == STATUS_SHED]
+    assert len(shed) == m.shed
+    for r in shed:
+        assert r.result is None  # shed requests never execute
+    assert m.deadlines_missed == 0  # accepted requests met their deadlines
+    assert m.deadline_hit_rate == 1.0
+
+
+def test_tenant_rate_limit_isolates_flood():
+    """A flooding tenant is shed at its own token bucket; the trickle
+    tenant's requests are all accepted."""
+    svc, keys, _ = _list_service("sync", rate_limit_rps=1.0, rate_limit_burst=3.0)
+    flood = [
+        TraversalRequest(i, "list", int(keys[1]), tenant="flood")
+        for i in range(20)
+    ]
+    trickle = [
+        TraversalRequest(100 + i, "list", int(keys[1]), tenant="ok", arrive_round=i)
+        for i in range(3)
+    ]
+    m = svc.run(flood + trickle)
+    assert svc.admission.shed_by_tenant.get("flood", 0) > 0
+    assert svc.admission.shed_by_tenant.get("ok", 0) == 0
+    assert all(r.status == STATUS_DONE for r in trickle)
+    assert m.completed + m.shed == 23
+
+
+# ----------------------- mixed read/write identity ------------------------
+
+
+def test_async_matches_sync_with_writes_single_node():
+    """Mixed read/write stream on one node: async and sync must produce
+    identical results, commits, and final arenas (ALLOC addresses depend on
+    batch composition, so this checks the admission schedule too)."""
+    n = 48
+    keys = (np.arange(n, dtype=np.int32) * 2).astype(np.int32)
+    vals = (keys * 5 + 3).astype(np.int32)
+
+    def serve(pipeline):
+        ar, root, _height = btree.build(keys, vals)
+        eng = PulseEngine(ar)
+        svc = PulseService(
+            eng,
+            {
+                "bt": StructureSpec(btree.find_iterator(), (root,), group="b"),
+                "bt_up": StructureSpec(
+                    btree.update_iterator(), (root,), group="b", takes_value=True
+                ),
+            },
+            slots_per_structure=4,
+            quantum=6,
+            pipeline=pipeline,
+        )
+        reqs = []
+        for i in range(30):
+            if i % 3 == 1:
+                reqs.append(
+                    TraversalRequest(
+                        i,
+                        "bt_up",
+                        int(keys[(i * 7) % n]),
+                        value=int(1000 + i),
+                        arrive_round=i // 6,
+                    )
+                )
+            else:
+                reqs.append(
+                    TraversalRequest(
+                        i, "bt", int(keys[(i * 11) % n]), arrive_round=i // 6
+                    )
+                )
+        m = svc.run(reqs)
+        return reqs, m, eng.arena
+
+    ra, ma, arena_a = serve("sync")
+    rb, mb, arena_b = serve("async")
+    assert ma.rounds == mb.rounds
+    assert ma.commits == mb.commits
+    assert ma.writes_retired == mb.writes_retired
+    for a, b in zip(ra, rb):
+        assert (a.status, a.iters, a.finish_round) == (
+            b.status,
+            b.iters,
+            b.finish_round,
+        )
+        np.testing.assert_array_equal(a.result, b.result)
+    np.testing.assert_array_equal(
+        np.asarray(arena_a.data), np.asarray(arena_b.data)
+    )
