@@ -564,6 +564,202 @@ def bench_batched_prefill(n_requests=12, prompt_len=8, max_new=6):
     return results
 
 
+def _drive_rounds(svc, reqs, max_rounds=10_000):
+    """Closed-loop driver that records (completed, recoveries) after every
+    scheduling round -- the per-round completion trajectory the chaos gates
+    are computed from."""
+    for r in reqs:
+        svc.submit(r)
+    hist = []
+    while svc._busy():
+        if len(hist) >= max_rounds:
+            raise RuntimeError(f"service did not drain in {max_rounds} rounds")
+        svc.step()
+        m = svc.metrics
+        hist.append((int(m.completed), int(m.recoveries)))
+    svc.close()
+    svc._drain_emit()
+    hist.append((int(svc.metrics.completed), int(svc.metrics.recoveries)))
+    return hist
+
+
+def bench_chaos(
+    n_requests=360, n_keys=256, slots=8, quantum=6, wave=8,
+    kill_call=60, kill_shard=3, recovery_window=12, seed=42, check=False,
+):
+    """Kill-one-shard-mid-stream under the full fault-tolerant serving stack.
+
+    An 8-shard meshed engine serves a mixed read/write stream (every 4th
+    request an insert) twice from identical pre-states: a failure-free
+    reference, then a run where ``kill_shard`` dies at engine call
+    ``kill_call``.  Gates (``--check``):
+
+      * exactly one recovery; degraded-mode retries observed;
+      * zero acknowledged commits lost -- the recovered run's final arena
+        (data + heap) and every request's (status, result) are bit-identical
+        to the failure-free reference;
+      * throughput recovers: mean completions/round over the
+        ``recovery_window`` rounds after service resumes >= 90% of the
+        pre-fault rate, and service resumes within a bounded number of
+        rounds of the fault.
+    """
+    import tempfile
+
+    from repro.core.faults import FaultInjector, FaultPlan
+    from repro.distributed.arena_ft import ArenaStore, FaultToleranceConfig
+
+    rng = np.random.default_rng(seed)
+    keys = np.arange(100, 100 + n_keys, dtype=np.int32)
+    # one blueprint, materialized fresh per run: the reference and chaos
+    # runs must see byte-identical workloads (requests mutate in place)
+    read_keys = [int(keys[int(rng.integers(0, n_keys))]) for _ in range(n_requests)]
+
+    def serve(tmp, plan):
+        b = ArenaBuilder(4 * n_keys, 4, num_shards=P, policy="interleaved")
+        head = linked_list.build_into(b, keys, keys * 2)
+        inj = FaultInjector(plan) if plan is not None else None
+        eng = PulseEngine(
+            b.finish(), mesh=jax.make_mesh((P,), ("mem",)), fault_injector=inj
+        )
+        ft = FaultToleranceConfig(store=ArenaStore(tmp))
+        svc = PulseService(
+            eng,
+            {
+                "list": StructureSpec(
+                    linked_list.find_iterator(), (head,), group="list"
+                ),
+                "list_ins": StructureSpec(
+                    linked_list.insert_iterator(), (head,), group="list",
+                    takes_value=True,
+                ),
+            },
+            slots_per_structure=slots,
+            quantum=quantum,
+            pipeline="async",
+            fault_tolerance=ft,
+        )
+        reqs = []
+        for i in range(n_requests):
+            if i % 4 == 2:
+                reqs.append(
+                    TraversalRequest(
+                        i, "list_ins", 10_000 + i, value=i * 13,
+                        tenant="writer", arrive_round=i // wave,
+                    )
+                )
+            else:
+                reqs.append(
+                    TraversalRequest(
+                        i, "list", read_keys[i],
+                        tenant="reader", arrive_round=i // wave,
+                    )
+                )
+        hist = _drive_rounds(svc, reqs)
+        ft.store.close()
+        return reqs, svc.metrics, eng.arena, hist
+
+    plan = FaultPlan(
+        kill_shard=kill_shard, kill_call=kill_call, kill_superstep=2
+    )
+    with tempfile.TemporaryDirectory() as d0, tempfile.TemporaryDirectory() as d1:
+        t0 = time.perf_counter()
+        r_ref, m_ref, ar_ref, hist_ref = serve(d0, None)
+        t_ref = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r_kill, m_kill, ar_kill, hist_kill = serve(d1, plan)
+        t_kill = time.perf_counter() - t0
+
+    assert m_ref.recoveries == 0 and m_ref.retries == 0
+    assert m_kill.completed == m_ref.completed == n_requests
+
+    # zero acknowledged commits lost: bit-identical arena + results
+    arena_identical = bool(
+        np.array_equal(np.asarray(ar_ref.data), np.asarray(ar_kill.data))
+        and np.array_equal(np.asarray(ar_ref.heap), np.asarray(ar_kill.heap))
+    )
+    results_identical = all(
+        a.status == b.status and np.array_equal(a.result, b.result)
+        for a, b in zip(r_ref, r_kill)
+    )
+
+    # per-round completion deltas; the fault round is where recoveries flips
+    done = np.asarray([c for c, _ in hist_kill])
+    rec = np.asarray([v for _, v in hist_kill])
+    delta = np.diff(np.concatenate([[0], done]))
+    fault_round = int(np.argmax(rec > 0)) if (rec > 0).any() else -1
+    pre_rate = float(delta[:fault_round].mean()) if fault_round > 0 else 0.0
+    # completion granularity: a request retires only after ~depth/quantum
+    # quanta, so both the resume bound and the measurement window must cover
+    # at least one full request lifetime plus backoff slack
+    depth_quanta = -(-n_keys // quantum)
+    lag_bound = depth_quanta + 8
+    win = max(recovery_window, lag_bound)
+    # service resumes at the first post-fault round that retires anything
+    # (the failed group sits out its backoff, then in-flight re-execution
+    # must finish a request's remaining quanta)
+    post = np.nonzero(delta[fault_round + 1:])[0]
+    resume_round = fault_round + 1 + int(post[0]) if len(post) else -1
+    window = delta[resume_round: resume_round + win]
+    post_rate = float(window.mean()) if len(window) else 0.0
+    ratio = post_rate / pre_rate if pre_rate > 0 else 0.0
+    resume_lag = resume_round - fault_round if resume_round >= 0 else -1
+
+    print(
+        f"  reference : rounds={m_ref.rounds} commits={m_ref.commits} "
+        f"wall={t_ref:.1f}s"
+    )
+    print(
+        f"  chaos     : rounds={m_kill.rounds} commits={m_kill.commits} "
+        f"recoveries={m_kill.recoveries} replayed={m_kill.replayed_commits} "
+        f"retries={m_kill.retries} mean_recovery={m_kill.mean_recovery_ms:.0f}ms "
+        f"wall={t_kill:.1f}s"
+    )
+    print(
+        f"  fault@round {fault_round}, resumed +{resume_lag} rounds: "
+        f"pre-fault {pre_rate:.2f} req/round -> "
+        f"post-recovery {post_rate:.2f} req/round ({ratio:.0%})"
+    )
+    print(
+        f"  acked-commit safety: arena {'identical' if arena_identical else 'DIVERGED'}, "
+        f"results {'identical' if results_identical else 'DIVERGED'}"
+    )
+    if check:
+        assert m_kill.recoveries == 1, m_kill.recoveries
+        assert m_kill.retries > 0, "degraded mode must re-queue hit requests"
+        assert arena_identical, "recovery lost acknowledged commits (arena)"
+        assert results_identical, "recovery changed request results"
+        assert 0 <= resume_lag <= lag_bound, (
+            f"service must resume within {lag_bound} rounds of the fault "
+            f"(one request lifetime + backoff), took {resume_lag}"
+        )
+        assert ratio >= 0.9, (
+            f"post-recovery throughput must reach >=90% of pre-fault "
+            f"within {win} rounds, got {ratio:.0%}"
+        )
+    return {
+        "n_requests": int(n_requests),
+        "kill_shard": int(kill_shard),
+        "kill_call": int(kill_call),
+        "recoveries": int(m_kill.recoveries),
+        "replayed_commits": int(m_kill.replayed_commits),
+        "retries": int(m_kill.retries),
+        "retry_exhausted": int(m_kill.retry_exhausted),
+        "mean_recovery_ms": float(m_kill.mean_recovery_ms),
+        "fault_round": fault_round,
+        "resume_lag_rounds": int(resume_lag),
+        "pre_fault_rate": pre_rate,
+        "post_recovery_rate": post_rate,
+        "recovery_ratio": float(ratio),
+        "recovery_window_rounds": int(win),
+        "resume_lag_bound_rounds": int(lag_bound),
+        "zero_acked_commits_lost": bool(arena_identical and results_identical),
+        "reference_rounds": int(m_ref.rounds),
+        "chaos_rounds": int(m_kill.rounds),
+        "reference_wall_s": float(t_ref),
+        "chaos_wall_s": float(t_kill),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -599,10 +795,46 @@ def main(argv=None):
         "--check",
         action="store_true",
         help="enforce the serving gates: async >= 1.3x sync throughput with "
-        "p99 <= 1.1x at matched load, async saturation >= 2x sync",
+        "p99 <= 1.1x at matched load, async saturation >= 2x sync "
+        "(--chaos: recovery + zero-acked-loss + throughput-recovery gates)",
+    )
+    ap.add_argument(
+        "--chaos",
+        action="store_true",
+        help="chaos mode only: kill one shard mid-stream under the "
+        "fault-tolerant serving stack and gate recovery (skips the four "
+        "standard experiments; pair with --json BENCH_chaos.json)",
     )
     args = ap.parse_args(argv)
     arrival = parse_arrival(args.arrival)
+
+    if args.chaos:
+        print("[1/1] chaos: kill-one-shard-mid-stream recovery")
+        rc = bench_chaos(
+            seed=args.seed,
+            check=args.check,
+            **(
+                {"n_requests": 120, "n_keys": 64, "kill_call": 24}
+                if args.small
+                else {}
+            ),
+        )
+        print("\nsummary:", rc)
+        if args.json:
+            payload = {
+                "benchmark": "service_bench_chaos",
+                "config": {
+                    "shards": P,
+                    "small": bool(args.small),
+                    "seed": int(args.seed),
+                    "checked": bool(args.check),
+                },
+                "chaos": rc,
+            }
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"wrote {args.json}")
+        return
 
     print("[1/4] compacted supersteps vs bulk-synchronous baseline")
     r1 = bench_compacted_routing(

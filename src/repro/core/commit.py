@@ -246,6 +246,7 @@ def sequential_commit_execute(
     max_supersteps: int = 1 << 16,
     compact: bool = True,
     min_link_capacity: int = 8,
+    fault_injector=None,
 ):
     """Run a batch to completion under the sequential-commit schedule.
 
@@ -253,7 +254,16 @@ def sequential_commit_execute(
     mutating iterators, or ``(records, RoutingStats)`` for read-only ones --
     mirroring ``routing.distributed_execute``'s contract so tests can
     compare the two outputs directly.  The input arena is never modified.
+
+    ``fault_injector`` (test-only, ``core.faults.FaultInjector``): a
+    targeted shard kill raises ``ShardFailure`` before the named superstep
+    runs -- the single-node write executor dies exactly like the mesh paths,
+    with the input arena untouched.  Fabric loss/delay do not apply (this
+    schedule has no fabric).
     """
+    kill_at = None
+    if fault_injector is not None:
+        kill_at = fault_injector.kill_step(fault_injector.begin_call())
     P = arena.num_shards
     bounds = np.asarray(arena.bounds)
     perms = np.asarray(arena.perms)
@@ -303,6 +313,11 @@ def sequential_commit_execute(
     steps = 0
     n_active, n_remote = B, B
     for _ in range(max_supersteps):
+        # injected shard death: fires before the targeted (1-based)
+        # superstep, so the mutated ``data``/``heap`` copies are discarded
+        # with exactly kill_at - 1 supersteps applied -- never published
+        if kill_at is not None and steps + 1 >= kill_at:
+            fault_injector.fire(steps + 1)
         # ---- local phase: chase then commit, shard by shard ---------------
         for s in range(P):
             lo, hi = int(bounds[s]), int(bounds[s + 1])

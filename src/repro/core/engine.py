@@ -137,12 +137,16 @@ class PulseEngine:
         axis_name: str = "mem",
         accel: dispatch_mod.AcceleratorSpec | None = None,
         eta: float | None = None,
+        fault_injector=None,
     ):
         self.arena = arena
         self.mesh = mesh
         self.axis_name = axis_name
         self.accel = accel or dispatch_mod.AcceleratorSpec()
         self.eta = self.accel.eta if eta is None else eta
+        # test-only fault hook (core.faults.FaultInjector); every execute()
+        # counts as one call toward the plan's kill_call regardless of path
+        self.fault_injector = fault_injector
         # serving calls execute() every scheduling round with a fixed batch
         # shape; cache the compiled local executor per (iterator, B, budget).
         # The kernel path's logic closure is cached per iterator in
@@ -153,6 +157,18 @@ class PulseEngine:
         # schedule_decision re-traces the iterator's jaxpr for the overlap
         # model; serving calls execute() per quantum, so cache per iterator
         self._schedule_cache: dict = {}
+
+    def _local_fault_check(self):
+        """Fault accounting for execution paths that never enter the
+        distributed/commit executors (local jit, kernel, cpu_node): register
+        the engine call and fire the kill before any work runs.  The leaf
+        executors own their begin_call, so this must NOT run for paths that
+        delegate to them (double-counting would skew kill_call targeting)."""
+        inj = self.fault_injector
+        if inj is not None:
+            k = inj.kill_step(inj.begin_call())
+            if k is not None:
+                inj.fire(k)
 
     def dispatch(self, it: PulseIterator) -> dispatch_mod.OffloadDecision:
         return dispatch_mod.offload_decision(
@@ -226,6 +242,7 @@ class PulseEngine:
         decision = self.dispatch(it)
         offload = decision.offload if force_offload is None else force_offload
         if not offload:
+            self._local_fault_check()
             ptr, scratch, iters, trace = cpu_node_execute(
                 it, self.arena, ptr0, scratch0,
                 max_iters=max_iters, cache_nodes=cache_nodes,
@@ -242,6 +259,7 @@ class PulseEngine:
                 return_to_cpu=return_to_cpu, compact=compact, fused=fused,
                 schedule=schedule, fabric=fabric,
                 local_backend="kernel" if backend == "kernel" else "xla",
+                fault_injector=self.fault_injector,
             )
             return ExecResult(
                 ptr=rec[:, routing.F_PTR],
@@ -252,8 +270,10 @@ class PulseEngine:
             )
 
         if backend == "kernel":
+            self._local_fault_check()
             return self._execute_kernel(it, ptr0, scratch0, max_iters=max_iters)
 
+        self._local_fault_check()
         # jnp.array copies (unlike asarray), so donating the copies keeps the
         # caller's buffers alive while letting the while_loop alias in place.
         # The iteration budget is a traced operand (not part of the key), so
@@ -329,6 +349,7 @@ class PulseEngine:
                 mesh=self.mesh, axis_name=self.axis_name,
                 max_iters=max_iters, k_local=k_local,
                 compact=compact, schedule=schedule, fabric=fabric,
+                fault_injector=self.fault_injector,
             )
         else:
             from repro.core import commit as commit_mod
@@ -336,6 +357,7 @@ class PulseEngine:
             rec, stats, new_arena = commit_mod.sequential_commit_execute(
                 it, self.arena, ptr0, scratch0,
                 max_iters=max_iters, k_local=k_local, compact=compact,
+                fault_injector=self.fault_injector,
             )
         self.arena = new_arena
         return ExecResult(

@@ -40,6 +40,12 @@ STATUS_MAXED = 2  # hit max_iters; resumable continuation
 STATUS_FAULT = 3  # translation/protection failure
 STATUS_EMPTY = 4  # free slot (routing pools only)
 
+# Serving-layer terminal codes (negative: never appear on the wire; assigned
+# host-side by PulseService before a request ever reaches a device pool).
+STATUS_SHED = -2  # rejected at admission (bounded queue / rate limit)
+STATUS_RETRY = -3  # retry budget exhausted while a shard was dead; the
+#                    client should resubmit once recovery completes
+
 
 @dataclasses.dataclass(frozen=True)
 class PulseIterator:
@@ -190,16 +196,24 @@ def mut_step_batch(
         insert/delete);
       * a record never goes MAXED while a mutation is staged, so MAXED
         continuations are always resumable from ``(cur_ptr, scratch)`` alone
-        (the payload invariant: only ACTIVE records carry staged mutations).
+        (the payload invariant: only ACTIVE records carry staged mutations);
+      * a record whose budget is exhausted (``iters >= max_iters``) never
+        takes another step.  A record can be ACTIVE at the boundary only via
+        the pending-mutation suppression above; once its commit clears it
+        MAXes on the next touch.  Without this guard the outcome would
+        depend on *when* each schedule next touches the record (a wavefront
+        in flight lands straight into a chase and would overshoot the
+        budget), breaking cross-schedule bit-identity.
     """
     if local_hi is None:
         local_hi = arena_data.shape[0]
     stalled = mut[:, 0] != M_NONE
+    exhausted = iters >= max_iters
     local = (ptr >= local_lo) & (ptr < local_hi)
     null = ptr == NULL
     active = status == STATUS_ACTIVE
     fault = active & local & ~jnp.asarray(perm_ok) & ~null & ~stalled
-    runnable = active & local & ~fault & ~null & ~stalled
+    runnable = active & local & ~fault & ~null & ~stalled & ~exhausted
 
     offset = jnp.asarray(ptr, jnp.int32) - jnp.asarray(local_lo, jnp.int32)
     node = load_node(arena_data, jnp.where(runnable, offset, 0))

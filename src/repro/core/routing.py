@@ -29,6 +29,7 @@ untouched.
 from __future__ import annotations
 
 import dataclasses
+import time
 import weakref
 
 import jax
@@ -59,6 +60,7 @@ from repro.core.iterator import (
     STATUS_DONE,
     STATUS_EMPTY,
     STATUS_FAULT,
+    STATUS_MAXED,
     PulseIterator,
     mut_step_batch,
     step_batch,
@@ -436,6 +438,19 @@ def _local_superstep_mut(
         ptr, scratch, status, iters, mut = jax.lax.fori_loop(
             0, k_local, lambda _, st: step(st), (ptr, scratch, status, iters, mut)
         )
+    # exhausted-budget sweep: a record can sit ACTIVE at iters >= max_iters
+    # only via the pending-mutation MAXED suppression; once its commit
+    # clears it must retire before the router sees it again.  The fixed
+    # k_local chase touches the whole pool every call so mut_step_batch's
+    # own check covers it, but the adaptive chase legally runs *zero*
+    # iterations when nothing is locally chaseable -- without this sweep
+    # the record would take one more (schedule-dependent) fabric hop before
+    # a chase finally touches it, breaking cross-schedule bit-identity.
+    status = jnp.where(
+        (status == STATUS_ACTIVE) & (iters >= max_iters) & (mut[:, 0] == M_NONE),
+        jnp.int32(STATUS_MAXED),
+        status,
+    )
     pool = pool.at[:, F_PTR].set(ptr)
     pool = pool.at[:, F_SCRATCH:MB].set(scratch)
     pool = pool.at[:, F_STATUS].set(status)
@@ -449,6 +464,22 @@ def _local_superstep_mut(
     )
 
 
+def _drop_mask(
+    L: int, drop_prob: float, drop_seed: int, my_shard, step_idx
+) -> jnp.ndarray:
+    """Fault-injection fabric loss: each pool slot is independently 'lost'
+    with probability ``drop_prob`` this superstep.  The mask is a pure
+    function of (seed, shard, superstep), so injected-loss runs replay
+    bit-identically.  A dropped record parks on its source shard and is
+    retransmitted next superstep (link-level loss + retransmit), so no
+    traversal state is ever lost -- only superstep counts grow."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(drop_seed), my_shard),
+        jnp.asarray(step_idx, jnp.int32),
+    )
+    return jax.random.uniform(key, (L,)) < drop_prob
+
+
 def _route_decide(
     pool: jnp.ndarray,  # (L, R)
     bounds: jnp.ndarray,
@@ -460,6 +491,7 @@ def _route_decide(
     phys_capacity: int | None = None,
     drain_done: bool = False,
     mut_base: int | None = None,
+    drop_mask: jnp.ndarray | None = None,
 ):
     """Switch decision + leaver extraction: the collective-free half of a
     routed superstep.
@@ -542,6 +574,12 @@ def _route_decide(
         :, 0
     ]
     fits = moves & (pos < C)
+    if drop_mask is not None:
+        # injected fabric loss: a dropped record parks locally exactly like
+        # capacity overflow and retransmits next superstep -- hops do not
+        # advance, so the eventual successful crossing keeps the record's
+        # final state bit-identical to a loss-free run
+        fits = fits & ~drop_mask
     # a crossing is a record that actually leaves this shard: parked overflow
     # (pos >= C) stays local and must not count toward Fig. 2c/9 crossings
     pool = pool.at[:, F_HOPS].set(pool[:, F_HOPS] + fits.astype(jnp.int32))
@@ -633,6 +671,7 @@ def _route(
     drain_done: bool = False,
     fabric: str = "dense",
     mut_base: int | None = None,
+    drop_mask: jnp.ndarray | None = None,
 ):
     """Switch routing: deliver records to their next shard in one superstep.
 
@@ -660,6 +699,7 @@ def _route(
         phys_capacity=phys_capacity,
         drain_done=drain_done,
         mut_base=mut_base,
+        drop_mask=drop_mask,
     )
     arrivals = _exchange(
         send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
@@ -702,6 +742,8 @@ def make_superstep(
     fabric: str = "dense",
     local_backend: str = "xla",
     mutate: bool = False,
+    drop_prob: float = 0.0,
+    drop_seed: int = 0,
 ):
     """Builds the jittable per-shard superstep: local run -> switch route.
 
@@ -717,11 +759,24 @@ def make_superstep(
     route), and the step signature grows to
     ``(pool, arena_rows, heap, bounds, perms) -> (pool, arena_rows, heap,
     counters...)``.
+
+    ``drop_prob > 0`` (fault injection) adds one trailing traced ``step_idx``
+    operand: each routed record is parked with probability ``drop_prob``
+    under a (drop_seed, shard, step_idx)-keyed mask (see ``_drop_mask``).
+    Production callers leave the default and pay nothing.
     """
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
     mut_base = F_SCRATCH + it.scratch_words if mutate else None
+    inject_drop = drop_prob > 0.0 and do_route
 
-    def superstep(pool, arena_rows, bounds, perms):
+    def _mask(pool, my_shard, fault_args):
+        if not inject_drop:
+            return None
+        return _drop_mask(
+            pool.shape[0], drop_prob, drop_seed, my_shard, fault_args[0]
+        )
+
+    def superstep(pool, arena_rows, bounds, perms, *fault_args):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         pool = _local_superstep(
@@ -735,6 +790,7 @@ def make_superstep(
                 link_capacity=link_capacity,
                 drain_done=drain_done,
                 fabric=fabric,
+                drop_mask=_mask(pool, my_shard, fault_args),
             )
         else:
             n_routed = jnp.int32(0)
@@ -747,7 +803,7 @@ def make_superstep(
         n_remote = jax.lax.psum(n_remote, axis_name)
         return pool, n_active, n_routed, n_drop, n_remote
 
-    def superstep_mut(pool, arena_rows, heap, bounds, perms):
+    def superstep_mut(pool, arena_rows, heap, bounds, perms, *fault_args):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         pool, arena_rows, heap_row = _local_superstep_mut(
@@ -763,6 +819,7 @@ def make_superstep(
                 drain_done=drain_done,
                 fabric=fabric,
                 mut_base=mut_base,
+                drop_mask=_mask(pool, my_shard, fault_args),
             )
         else:
             n_routed = jnp.int32(0)
@@ -862,6 +919,8 @@ def make_fused_loop(
     fabric: str = "dense",
     local_backend: str = "xla",
     mutate: bool = False,
+    drop_prob: float = 0.0,
+    drop_seed: int = 0,
 ):
     """Builds the whole-traversal device-resident loop (one shard's view).
 
@@ -887,6 +946,16 @@ def make_fused_loop(
     sizing re-enters the same compiled executable every scheduling round
     with a different budget, so baking it into the trace would recompile
     per quantum value.
+
+    ``halt`` (the second trailing traced operand, fault injection) caps the
+    loop at ``halt`` supersteps: an armed shard-kill passes
+    ``kill_superstep - 1`` so the loop exits cleanly with records still
+    ACTIVE, and the host raises ``ShardFailure`` instead of the
+    still-ACTIVE error.  Unarmed callers pass ``max_supersteps``, which the
+    loop condition already enforces -- zero-cost default.
+
+    ``drop_prob > 0`` parks each routed record with that probability under
+    a (drop_seed, shard, superstep)-keyed mask (see ``_drop_mask``).
     """
     drain_done = compact
     rungs = capacity_rungs(base_capacity, min_link_capacity) if compact else (
@@ -895,8 +964,14 @@ def make_fused_loop(
     rungs_arr = jnp.asarray(rungs, jnp.int32)
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
     mut_base = F_SCRATCH + it.scratch_words if mutate else None
+    inject_drop = drop_prob > 0.0
 
-    def fused_mut(pool, arena_rows, heap, bounds, perms, iter_budget):
+    def _mask(L, my_shard, steps):
+        if not inject_drop:
+            return None
+        return _drop_mask(L, drop_prob, drop_seed, my_shard, steps)
+
+    def fused_mut(pool, arena_rows, heap, bounds, perms, iter_budget, halt):
         """Write-path fused loop: arena rows + heap registers are carried
         ``lax.while_loop`` state -- each superstep is chase -> commit ->
         route, with the same ladder decisions as the read path."""
@@ -908,7 +983,10 @@ def make_fused_loop(
 
         def cond(carry):
             _, _, _, n_active, steps, _, n_drop, _, _, _ = carry
-            return (n_active > 0) & (steps < max_supersteps) & (n_drop == 0)
+            return (
+                (n_active > 0) & (steps < max_supersteps) & (n_drop == 0)
+                & (steps < halt)
+            )
 
         def body(carry):
             (pool, rows, heap, n_active, steps, n_routed_tot, n_drop_tot,
@@ -930,6 +1008,7 @@ def make_fused_loop(
                     return_to_cpu=return_to_cpu,
                     link_capacity=capacity, phys_capacity=base_capacity,
                     drain_done=drain_done, fabric=fabric, mut_base=mut_base,
+                    drop_mask=_mask(p.shape[0], my_shard, steps),
                 )
 
             def local_only_step(p):
@@ -968,7 +1047,7 @@ def make_fused_loop(
          local_only, _) = jax.lax.while_loop(cond, body, init)
         return pool, rows, heap, n_active, steps, n_routed, n_drop, cap_counts, local_only
 
-    def fused(pool, arena_rows, bounds, perms, iter_budget):
+    def fused(pool, arena_rows, bounds, perms, iter_budget, halt):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         n0 = jax.lax.psum(
@@ -977,7 +1056,10 @@ def make_fused_loop(
 
         def cond(carry):
             _, n_active, steps, _, n_drop, _, _, _ = carry
-            return (n_active > 0) & (steps < max_supersteps) & (n_drop == 0)
+            return (
+                (n_active > 0) & (steps < max_supersteps) & (n_drop == 0)
+                & (steps < halt)
+            )
 
         def body(carry):
             pool, n_active, steps, n_routed_tot, n_drop_tot, cap_counts, local_only, n_remote = carry
@@ -999,6 +1081,7 @@ def make_fused_loop(
                     return_to_cpu=return_to_cpu,
                     link_capacity=capacity, phys_capacity=base_capacity,
                     drain_done=drain_done, fabric=fabric,
+                    drop_mask=_mask(p.shape[0], my_shard, steps),
                 )
 
             def local_only_step(p):
@@ -1069,6 +1152,8 @@ def make_pipelined_loop(
     fabric: str = "dense",
     local_backend: str = "xla",
     mutate: bool = False,
+    drop_prob: float = 0.0,
+    drop_seed: int = 0,
 ):
     """Wavefront-pipelined whole-traversal loop (one shard's view).
 
@@ -1114,8 +1199,14 @@ def make_pipelined_loop(
     Cp = base_capacity
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
     mut_base = F_SCRATCH + it.scratch_words if mutate else None
+    inject_drop = drop_prob > 0.0
 
-    def pipelined_mut(pool, arena_rows, heap, bounds, perms, iter_budget):
+    def _mask(L, my_shard, steps):
+        if not inject_drop:
+            return None
+        return _drop_mask(L, drop_prob, drop_seed, my_shard, steps)
+
+    def pipelined_mut(pool, arena_rows, heap, bounds, perms, iter_budget, halt):
         """Write-path pipelined loop.  The two wavefronts chase separately
         (stalling on staged writes), merge, and THEN the merged pool runs
         this shard's commit phase -- bit-identical to the fused
@@ -1140,7 +1231,7 @@ def make_pipelined_loop(
 
         def cond(carry):
             _, _, _, _, _, n_active, _, steps, *_ = carry
-            return (n_active > 0) & (steps < max_supersteps)
+            return (n_active > 0) & (steps < max_supersteps) & (steps < halt)
 
         def body(carry):
             (kept, send, rows, heap, did_route, n_active, n_remote, steps,
@@ -1187,6 +1278,7 @@ def make_pipelined_loop(
                     return_to_cpu=return_to_cpu,
                     link_capacity=capacity, phys_capacity=base_capacity,
                     drain_done=drain_done, mut_base=mut_base,
+                    drop_mask=_mask(p.shape[0], my_shard, steps),
                 )
 
             def hold(p):
@@ -1245,7 +1337,7 @@ def make_pipelined_loop(
             cap_counts, local_only,
         )
 
-    def pipelined(pool, arena_rows, bounds, perms, iter_budget):
+    def pipelined(pool, arena_rows, bounds, perms, iter_budget, halt):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
         L, R = pool.shape
@@ -1265,7 +1357,7 @@ def make_pipelined_loop(
 
         def cond(carry):
             _, _, _, n_active, _, steps, *_ = carry
-            return (n_active > 0) & (steps < max_supersteps)
+            return (n_active > 0) & (steps < max_supersteps) & (steps < halt)
 
         def body(carry):
             (kept, send, did_route, n_active, n_remote, steps,
@@ -1306,6 +1398,7 @@ def make_pipelined_loop(
                     return_to_cpu=return_to_cpu,
                     link_capacity=capacity, phys_capacity=base_capacity,
                     drain_done=drain_done,
+                    drop_mask=_mask(p.shape[0], my_shard, steps),
                 )
 
             def hold(p):
@@ -1389,6 +1482,8 @@ def get_fused_runner(
     fabric: str = "dense",
     local_backend: str = "xla",
     mutate: bool = False,
+    drop_prob: float = 0.0,
+    drop_seed: int = 0,
 ):
     """Cached, jitted, donated whole-traversal executable (fused or
     wavefront-pipelined schedule).
@@ -1413,6 +1508,7 @@ def get_fused_runner(
         it, mesh, axis_name, num_shards, pool_rows, scratch_words, k_local,
         max_supersteps, base_capacity, min_link_capacity,
         return_to_cpu, compact, schedule, fabric, local_backend, mutate,
+        drop_prob, drop_seed,
     )
     fn = _FUSED_CACHE.get(key)
     if fn is None:
@@ -1426,6 +1522,7 @@ def get_fused_runner(
                 min_link_capacity=min_link_capacity,
                 return_to_cpu=return_to_cpu, compact=compact,
                 fabric=fabric, local_backend=local_backend, mutate=mutate,
+                drop_prob=drop_prob, drop_seed=drop_seed,
             )
         else:
             loop = make_fused_loop(
@@ -1436,15 +1533,19 @@ def get_fused_runner(
                 min_link_capacity=min_link_capacity,
                 return_to_cpu=return_to_cpu, compact=compact,
                 fabric=fabric, local_backend=local_backend, mutate=mutate,
+                drop_prob=drop_prob, drop_seed=drop_seed,
             )
+        # trailing P() pair: the traced iter_budget and halt scalars
         if mutate:
-            in_specs = (P(axis_name), P(axis_name), P(axis_name), P(), P(), P())
+            in_specs = (
+                P(axis_name), P(axis_name), P(axis_name), P(), P(), P(), P(),
+            )
             out_specs = (
                 P(axis_name), P(axis_name), P(axis_name),
                 P(), P(), P(), P(), P(), P(),
             )
         else:
-            in_specs = (P(axis_name), P(axis_name), P(), P(), P())
+            in_specs = (P(axis_name), P(axis_name), P(), P(), P(), P())
             out_specs = (P(axis_name), P(), P(), P(), P(), P(), P())
         fn = jax.jit(
             shard_map_unchecked(
@@ -1476,6 +1577,7 @@ def distributed_execute(
     schedule: str | None = None,
     fabric: str = "dense",
     local_backend: str = "xla",
+    fault_injector=None,
 ):
     """Run a batch of traversals over a range-partitioned arena on a mesh.
 
@@ -1533,7 +1635,26 @@ def distributed_execute(
     post-commit ``Arena`` as a third element when ``it.mutates`` (the input
     arena object is left untouched, so the same pre-state can be replayed
     through several schedules and compared bit-for-bit).
+
+    ``fault_injector`` (test-only, ``core.faults.FaultInjector``) threads an
+    injected failure schedule through every schedule x fabric: a targeted
+    kill raises ``ShardFailure`` *before* the named superstep executes (the
+    input arena buffers are never mutated in place, so the observable heap
+    stays at the pre-call state -- the recovery anchor), fabric loss parks
+    and retransmits records under a seeded mask, and a straggler delay
+    sleeps the dispatched host loop per superstep.
     """
+    kill_at = None
+    delay_s = 0.0
+    drop_prob = 0.0
+    drop_seed = 0
+    if fault_injector is not None:
+        call_idx = fault_injector.begin_call()
+        kill_at = fault_injector.kill_step(call_idx)
+        plan = fault_injector.plan
+        drop_prob, drop_seed = float(plan.drop_prob), int(plan.drop_seed)
+        if plan.delay_shard is not None:
+            delay_s = float(plan.delay_s)
     if schedule is None:
         schedule = "fused" if fused else "dispatched"
     if schedule not in ("dispatched", "fused", "pipelined"):
@@ -1625,25 +1746,39 @@ def distributed_execute(
             base_capacity=base_capacity, min_link_capacity=min_link_capacity,
             return_to_cpu=return_to_cpu, compact=compact,
             schedule=schedule, fabric=fabric, local_backend=local_backend,
-            mutate=mutate,
+            mutate=mutate, drop_prob=drop_prob, drop_seed=drop_seed,
         )
         # the quantum rides in as a traced operand: every budget value is a
         # cache hit on the same executable (int32 is safe -- callers cap
         # max_iters at 1 << 30)
         iter_budget = jnp.int32(min(max_iters, (1 << 31) - 1))
+        # an armed kill caps the device loop at kill_superstep - 1 supersteps
+        # via the traced halt operand; the unarmed value duplicates the
+        # loop's own max_supersteps bound (same executable either way)
+        halt = jnp.int32(kill_at - 1 if kill_at is not None else max_supersteps)
         if mutate:
             (pool_global, arena_data, heap, n_active, steps, n_routed, n_drop,
              cap_counts, local_only) = runner(
-                pool_global, arena_data, heap, bounds, perms, iter_budget
+                pool_global, arena_data, heap, bounds, perms, iter_budget, halt
             )
         else:
             pool_global, n_active, steps, n_routed, n_drop, cap_counts, local_only = (
-                runner(pool_global, arena_data, bounds, perms, iter_budget)
+                runner(pool_global, arena_data, bounds, perms, iter_budget, halt)
             )
         if int(n_drop) != 0:  # not assert: must survive python -O
             raise RuntimeError(
                 f"request records lost in routing (pool overflow): {int(n_drop)}"
             )
+        if (
+            kill_at is not None
+            and int(n_active) > 0
+            and int(steps) >= kill_at - 1
+        ):
+            # the loop halted at the injected death point with work left:
+            # this call dies here, outputs discarded.  The input arena
+            # buffers were never donated or mutated, so the caller's
+            # observable state is exactly the pre-call snapshot.
+            fault_injector.fire(kill_at)
         if int(n_active) != 0:
             raise RuntimeError(
                 f"distributed_execute: {int(n_active)} records still ACTIVE after "
@@ -1688,7 +1823,7 @@ def distributed_execute(
         key = (
             it, mesh, axis_name, num_shards, k_local, max_iters,
             return_to_cpu, drain_done, capacity, do_route, fabric,
-            local_backend, mutate,
+            local_backend, mutate, drop_prob, drop_seed,
         )
         if key not in _STEP_CACHE:
             CACHE_STATS.misses += 1
@@ -1698,15 +1833,20 @@ def distributed_execute(
                 return_to_cpu=return_to_cpu,
                 link_capacity=capacity, drain_done=drain_done,
                 do_route=do_route, fabric=fabric, local_backend=local_backend,
-                mutate=mutate,
+                mutate=mutate, drop_prob=drop_prob, drop_seed=drop_seed,
             )
+            # fault-injected fabric loss adds one trailing traced step_idx
+            # operand (the drop mask is keyed on the superstep index)
+            drop_specs = (P(),) if (drop_prob > 0.0 and do_route) else ()
             if mutate:
-                in_specs = (P(axis_name), P(axis_name), P(axis_name), P(), P())
+                in_specs = (
+                    P(axis_name), P(axis_name), P(axis_name), P(), P(),
+                ) + drop_specs
                 out_specs = (
                     P(axis_name), P(axis_name), P(axis_name), P(), P(), P(), P(),
                 )
             else:
-                in_specs = (P(axis_name), P(axis_name), P(), P())
+                in_specs = (P(axis_name), P(axis_name), P(), P()) + drop_specs
                 out_specs = (P(axis_name), P(), P(), P(), P())
             _STEP_CACHE[key] = jax.jit(
                 shard_map(
@@ -1726,6 +1866,15 @@ def distributed_execute(
     # before the first superstep everything is active and sitting at home
     n_active, n_remote = B, B
     for _ in range(max_supersteps):
+        # injected shard death: fires before the targeted (1-based) superstep
+        # executes, so exactly kill_at - 1 supersteps of this call completed
+        # and the caller's observable arena is the pre-call snapshot
+        if kill_at is not None and steps + 1 >= kill_at:
+            fault_injector.fire(steps + 1)
+        if delay_s > 0.0:
+            # straggler shard: the BSP barrier makes one slow memory node
+            # delay every superstep, which is exactly a host-loop sleep
+            time.sleep(delay_s)
         if compact:
             # power-of-two envelope of the per-link demand; the ladder keeps
             # the number of distinct compiled supersteps at O(log L)
@@ -1739,15 +1888,18 @@ def distributed_execute(
         # link_capacity is dead in the local-only step: collapse those cache
         # keys to one so the capacity ladder doesn't compile duplicate steps
         step_capacity = capacity if (compact and do_route) else None
+        drop_args = (
+            (jnp.int32(steps),) if (drop_prob > 0.0 and do_route) else ()
+        )
         if mutate:
             (pool_global, arena_data, heap, n_active, n_routed, n_drop,
              n_remote) = get_step(step_capacity, do_route)(
-                pool_global, arena_data, heap, bounds, perms
+                pool_global, arena_data, heap, bounds, perms, *drop_args
             )
         else:
             pool_global, n_active, n_routed, n_drop, n_remote = get_step(
                 step_capacity, do_route
-            )(pool_global, arena_data, bounds, perms)
+            )(pool_global, arena_data, bounds, perms, *drop_args)
         steps += 1
         routed_per_step.append(int(n_routed))
         active_per_step.append(int(n_active))

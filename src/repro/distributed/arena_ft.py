@@ -1,0 +1,301 @@
+"""Fault-tolerant arenas: snapshots + a durable commit log + replay recovery.
+
+The write path's determinism contract is what makes cheap recovery possible:
+every schedule x fabric combination commits staged mutations in the same
+canonical (class, slot, id) order and is bit-identical to the sequential
+commit oracle (``core.commit.sequential_commit_execute``).  So instead of
+logging physical arena words, the commit log records write-quantum *inputs*
+(iterator name, ptr0/scratch0, budget, knobs) -- replaying them through the
+oracle from the latest snapshot reconstructs the exact post-commit arena,
+heap registers included.
+
+Durability protocol (the zero-acknowledged-commits-lost invariant):
+
+  1. a write quantum executes (any schedule/fabric/backend);
+  2. on success, its inputs + observed commit/epoch deltas are appended to
+     the log and fsynced -- only *then* is the quantum acknowledged;
+  3. every ``snapshot_every`` logged quanta, the full arena is snapshotted
+     through ``CheckpointManager._atomic_save`` (manifest + shard npz +
+     atomic LATEST pointer), truncating the replay prefix.
+
+A crash between execute and log-append loses an *unacknowledged* quantum
+(the client retries); a crash mid-snapshot leaves a partial dir without a
+manifest, which restore ignores.  Recovery = latest snapshot + replay of
+every logged quantum with ``seq > snapshot.log_seq``, verifying each
+entry's commit/epoch deltas against the log record.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.arena import H_EPOCH, Arena
+from repro.distributed.checkpoint import CheckpointManager
+
+
+class RecoveryError(RuntimeError):
+    """Snapshot/log state is unusable or replay diverged from the log."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaSnapshot:
+    """A restored arena plus the log position it corresponds to."""
+
+    arena: Arena
+    log_seq: int  # last commit-log seq folded into this arena
+    epoch: int  # sum of per-shard H_EPOCH registers at snapshot time
+
+
+@dataclasses.dataclass
+class RecoveryInfo:
+    """What a ``recover()`` call did (feeds ServiceMetrics)."""
+
+    snapshot_seq: int  # log seq the restored snapshot covered
+    log_seq: int  # last log seq after replay
+    replayed_quanta: int
+    replayed_commits: int
+    wall_s: float
+
+
+class CommitLog:
+    """Append-only JSONL log of acknowledged write quanta.
+
+    One JSON object per line; ``append`` flushes and fsyncs before
+    returning, so a returned seq is durable.  ``entries`` tolerates a torn
+    final line (crash mid-append): the partial record was never
+    acknowledged, so dropping it is correct.  A torn line *followed by*
+    valid records is real corruption and raises.
+    """
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._seq = 0
+        for e in self.entries():
+            self._seq = max(self._seq, int(e["seq"]))
+        self._f = open(self.path, "a", encoding="utf-8")
+
+    @property
+    def seq(self) -> int:
+        """Last durable (acknowledged) sequence number; 0 = empty log."""
+        return self._seq
+
+    def append(self, record: dict) -> int:
+        """Assign the next seq, write + fsync, return the seq (the ack)."""
+        self._seq += 1
+        rec = {"seq": self._seq, **record}
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        return self._seq
+
+    def entries(self) -> list[dict]:
+        if not self.path.exists():
+            return []
+        out = []
+        lines = self.path.read_text(encoding="utf-8").splitlines()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    break  # torn tail: unacknowledged, ignore
+                raise RecoveryError(
+                    f"corrupt commit log {self.path} at line {i + 1}"
+                ) from None
+        return out
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class ArenaStore:
+    """Snapshot + commit-log durability for one arena.
+
+    Owns a ``CheckpointManager`` (synchronous saves: a returned snapshot is
+    durable) and a ``CommitLog`` in the same directory.  Iterators are
+    referenced by name in the log, so recovery needs the same iterators
+    registered that produced the log -- the service wires this up from its
+    ``StructureSpec`` table.
+    """
+
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.mgr = CheckpointManager(self.dir, keep=keep, async_save=False)
+        self.log = CommitLog(self.dir / "commit_log.jsonl")
+        self._iterators: dict[str, object] = {}
+        self.snapshots_taken = 0
+
+    def register_iterator(self, name: str, it) -> None:
+        prev = self._iterators.get(name)
+        if prev is not None and prev is not it:
+            raise ValueError(f"iterator name {name!r} already registered")
+        self._iterators[name] = it
+
+    # ----------------------------- logging --------------------------------
+
+    def log_quantum(
+        self,
+        it_name: str,
+        ptr0,
+        scratch0,
+        *,
+        max_iters: int,
+        k_local: int,
+        compact: bool,
+        commits: int,
+        epochs: int,
+    ) -> int:
+        """Record one successfully executed write quantum; the returned seq
+        is the acknowledgment (durable on return)."""
+        if it_name not in self._iterators:
+            raise ValueError(f"unregistered iterator {it_name!r}")
+        return self.log.append(
+            {
+                "it": it_name,
+                "ptr0": np.asarray(ptr0, np.int64).tolist(),
+                "scratch0": np.asarray(scratch0, np.int64).tolist(),
+                "max_iters": int(max_iters),
+                "k_local": int(k_local),
+                "compact": bool(compact),
+                "commits": int(commits),
+                "epochs": int(epochs),
+            }
+        )
+
+    # ---------------------------- snapshots -------------------------------
+
+    def snapshot(self, arena: Arena, log_seq: int | None = None) -> int:
+        """Atomically persist the full arena at ``log_seq`` (default: the
+        log's current durable seq).  Returns the snapshot's log_seq."""
+        seq = self.log.seq if log_seq is None else int(log_seq)
+        heap = np.asarray(arena.heap)
+        self.mgr._atomic_save(
+            step=seq,
+            arrays={
+                "data": np.asarray(arena.data),
+                "bounds": np.asarray(arena.bounds),
+                "perms": np.asarray(arena.perms),
+                "heap": heap,
+            },
+            manifest={
+                "kind": "arena_snapshot",
+                "log_seq": seq,
+                "epoch": int(heap[:, H_EPOCH].sum()),
+                "num_shards": arena.num_shards,
+                "capacity": arena.capacity,
+                "node_words": arena.node_words,
+            },
+        )
+        self.snapshots_taken += 1
+        return seq
+
+    def ensure_baseline(self, arena: Arena) -> None:
+        """Snapshot the pre-serving arena if no snapshot exists yet, so
+        recovery always has an anchor (replay needs a starting state)."""
+        if self.mgr.latest_step() is None:
+            self.snapshot(arena)
+
+    def load_snapshot(self, step: int | None = None) -> ArenaSnapshot:
+        step = self.mgr.latest_step() if step is None else step
+        if step is None:
+            raise RecoveryError(f"no arena snapshot under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        if manifest.get("kind") != "arena_snapshot":
+            raise RecoveryError(f"{d} is not an arena snapshot")
+        with np.load(d / f"shard_{self.mgr.host_id}.npz") as z:
+            arena = Arena(
+                data=jnp.asarray(z["data"]),
+                bounds=jnp.asarray(z["bounds"]),
+                perms=jnp.asarray(z["perms"]),
+                heap=jnp.asarray(z["heap"]),
+            )
+        return ArenaSnapshot(arena, int(manifest["log_seq"]), int(manifest["epoch"]))
+
+    # ---------------------------- recovery --------------------------------
+
+    def recover(self) -> tuple[Arena, RecoveryInfo]:
+        """Latest snapshot + oracle replay of every newer logged quantum.
+
+        Each replayed entry's commit/epoch deltas must match the log record
+        (the log recorded what the acknowledged execution observed; the
+        oracle is bit-identical to every schedule, so a mismatch means the
+        snapshot/log pair is inconsistent, not a tolerable drift).
+        """
+        from repro.core.commit import sequential_commit_execute
+
+        t0 = time.perf_counter()
+        snap = self.load_snapshot()
+        arena = snap.arena
+        replayed = commits = 0
+        last_seq = snap.log_seq
+        for e in self.log.entries():
+            if int(e["seq"]) <= snap.log_seq:
+                continue
+            it = self._iterators.get(e["it"])
+            if it is None:
+                raise RecoveryError(f"log references unregistered iterator {e['it']!r}")
+            B = len(e["ptr0"])
+            ptr0 = np.asarray(e["ptr0"], np.int32)
+            scratch0 = np.asarray(e["scratch0"], np.int32).reshape(B, -1)
+            _, stats, arena = sequential_commit_execute(
+                it, arena, ptr0, scratch0,
+                max_iters=int(e["max_iters"]), k_local=int(e["k_local"]),
+                compact=bool(e["compact"]),
+            )
+            if stats.commits != int(e["commits"]) or stats.epochs != int(e["epochs"]):
+                raise RecoveryError(
+                    f"replay diverged at seq {e['seq']}: observed "
+                    f"({stats.commits} commits, {stats.epochs} epochs), log says "
+                    f"({e['commits']}, {e['epochs']})"
+                )
+            replayed += 1
+            commits += stats.commits
+            last_seq = int(e["seq"])
+        info = RecoveryInfo(
+            snapshot_seq=snap.log_seq,
+            log_seq=last_seq,
+            replayed_quanta=replayed,
+            replayed_commits=commits,
+            wall_s=time.perf_counter() - t0,
+        )
+        return arena, info
+
+    def close(self) -> None:
+        self.log.close()
+
+
+@dataclasses.dataclass
+class FaultToleranceConfig:
+    """Serving-layer fault-tolerance knobs (PulseService ``fault_tolerance=``).
+
+    ``snapshot_every`` counts *logged write quanta* between snapshots.
+    Backoff for requests parked on a dead shard is jittered exponential:
+    ``base * 2**attempt`` rounds, capped at ``cap``, +/- ``jitter`` fraction
+    (seeded: deterministic across reruns).  ``dead_rounds`` keeps a shard
+    marked dead for that many scheduling rounds after recovery completes
+    (0 = revive immediately), modeling the re-provisioning window.
+    ``retry_budget`` bounds per-request retries; exhaustion retires the
+    request with STATUS_RETRY.
+    """
+
+    store: ArenaStore
+    snapshot_every: int = 8
+    retry_budget: int = 5
+    backoff_base: int = 1  # rounds
+    backoff_cap: int = 16  # rounds
+    backoff_jitter: float = 0.5
+    dead_rounds: int = 0
+    seed: int = 0

@@ -64,6 +64,30 @@ class CheckpointManager:
 
     # ------------------------------ save ------------------------------------
 
+    def _atomic_save(self, step: int, arrays: dict[str, np.ndarray], manifest: dict):
+        """The atomic commit sequence, usable for any named-array payload
+        (training state or arena snapshots): write everything into a temp
+        dir, os.replace it into place, THEN flip the LATEST pointer.  A
+        crash at any point leaves either the previous checkpoint fully
+        restorable or the new one fully committed -- a partial dir has no
+        manifest.json and is ignored by ``all_steps``/``latest_step``."""
+        final = self.dir / f"step_{step:08d}"
+        tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_save_"))
+        try:
+            np.savez(tmp / f"shard_{self.host_id}.npz", **arrays)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            # atomic LATEST pointer, written last
+            ptr = self.dir / ".LATEST_tmp"
+            ptr.write_text(str(step))
+            os.replace(ptr, self.dir / "LATEST")
+            self._gc()
+        finally:
+            if tmp.exists():
+                shutil.rmtree(tmp, ignore_errors=True)
+
     def save(self, state, step: int, *, extra: dict | None = None, block: bool = False):
         """state: pytree of jax arrays.  ``extra``: small json-able dict
         (data iterator step, rng key bytes, etc.)."""
@@ -80,27 +104,10 @@ class CheckpointManager:
             "dtypes": [str(x.dtype) for x in host_leaves],
             "extra": extra or {},
         }
+        arrays = {f"a{i}": x for i, x in enumerate(host_leaves)}
 
         def write():
-            final = self.dir / f"step_{step:08d}"
-            tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_save_"))
-            try:
-                np.savez(
-                    tmp / f"shard_{self.host_id}.npz",
-                    **{f"a{i}": x for i, x in enumerate(host_leaves)},
-                )
-                (tmp / "manifest.json").write_text(json.dumps(manifest))
-                if final.exists():
-                    shutil.rmtree(final)
-                os.replace(tmp, final)
-                # atomic LATEST pointer, written last
-                ptr = self.dir / ".LATEST_tmp"
-                ptr.write_text(str(step))
-                os.replace(ptr, self.dir / "LATEST")
-                self._gc()
-            finally:
-                if tmp.exists():
-                    shutil.rmtree(tmp, ignore_errors=True)
+            self._atomic_save(step, arrays, manifest)
 
         if self.async_save and not block:
             t = threading.Thread(target=write, daemon=True)

@@ -51,6 +51,52 @@ class HeartbeatMonitor:
         return [h.host_id for h in self.hosts.values() if h.healthy]
 
 
+class ShardFailureDetector:
+    """HeartbeatMonitor on a logical round clock, specialized for memory
+    shards.
+
+    The serving loop has no wall clock worth trusting in tests, so the
+    detector's clock is the scheduling round: every shard that completed
+    work this round beats (``beat_all``), an injected/observed death is
+    reported via ``suspect``, and ``sweep`` converts missed beats into
+    dead-shard declarations exactly like the host-level monitor.
+    ``timeout_rounds=0`` (default) declares a suspected shard dead at the
+    next sweep -- the serving layer's ShardFailure is already a positive
+    signal, not a missed heartbeat, so there is nothing to wait for.
+    """
+
+    def __init__(self, num_shards: int, timeout_rounds: int = 0):
+        self._round = 0
+        self.monitor = HeartbeatMonitor(
+            num_shards, timeout_s=timeout_rounds, clock=lambda: self._round
+        )
+
+    def beat_all(self, rnd: int):
+        """All shards healthy through round ``rnd`` (normal round end)."""
+        self._round = rnd
+        for h in self.monitor.hosts.values():
+            if h.healthy:
+                self.monitor.beat(h.host_id)
+
+    def suspect(self, shard: int, rnd: int):
+        """A failure signal implicates ``shard``: freeze its beat so the
+        next sweep (at any later round) declares it dead."""
+        self._round = max(self._round, rnd)
+        self.monitor.hosts[shard].last_beat = self._round - self.monitor.timeout - 1
+
+    def sweep(self) -> list[int]:
+        return self.monitor.sweep()
+
+    def revive(self, shard: int):
+        """Recovery finished: the shard serves again."""
+        self.monitor.beat(shard)
+
+    def dead_shards(self) -> list[int]:
+        return [
+            h.host_id for h in self.monitor.hosts.values() if not h.healthy
+        ]
+
+
 def plan_mesh_shape(
     n_devices: int,
     *,

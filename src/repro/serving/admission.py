@@ -61,6 +61,9 @@ class TraversalRequest:
     cont_ptr: int | None = None
     cont_scratch: np.ndarray | None = None
     preemptions: int = 0
+    # fault tolerance: times this request was re-queued because its shard
+    # group hit a dead shard; past the retry budget it retires STATUS_RETRY
+    retries: int = 0
 
     @property
     def latency_ms(self) -> float:

@@ -275,6 +275,11 @@ class DeviceRunner:
                     work.apply(work.run())
                     self.quanta_run += 1
             except BaseException as e:  # noqa: BLE001 -- must cross threads
+                # tag shard failures with the failing work's label so the
+                # service can identify which slot group was in flight when
+                # the error resurfaces on the producer thread
+                if getattr(e, "label", "") is None:
+                    e.label = work.label
                 with self._cv:
                     self._err = e
             finally:

@@ -38,6 +38,7 @@ quantum -- so the next round's reads (any group) traverse the updated heap.
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from collections import deque
 
@@ -47,11 +48,14 @@ import jax.numpy as jnp
 
 from repro.core.arena import NULL
 from repro.core.engine import PulseEngine
+from repro.core.faults import ShardFailure
 from repro.core.iterator import (
     STATUS_ACTIVE,
     STATUS_DONE,
     STATUS_FAULT,
     STATUS_MAXED,
+    STATUS_RETRY,
+    STATUS_SHED,
     PulseIterator,
 )
 from repro.serving.admission import (
@@ -62,9 +66,15 @@ from repro.serving.admission import (
 )
 from repro.serving.batching import DeviceRunner, QuantumWork
 
-# request.status for arrivals rejected by admission (rate limit or bounded
-# queue) -- they never execute, so no iterator STATUS_* value applies
-STATUS_SHED = -2
+__all__ = [
+    "PulseService",
+    "StructureSpec",
+    "ServiceMetrics",
+    # status re-exports: these historically lived here; core.iterator is now
+    # the single home for every STATUS_* constant
+    "STATUS_SHED",
+    "STATUS_RETRY",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +130,13 @@ class ServiceMetrics:
     queue_depth_max: int = 0  # admission-queue high-water mark
     quantum_min_used: int = 0  # smallest / largest quantum any round ran
     quantum_max_used: int = 0
+    # fault tolerance (chaos runs): shard deaths recovered from, commits
+    # replayed out of the durable log, requests re-queued off dead shards
+    recoveries: int = 0
+    replayed_commits: int = 0
+    retries: int = 0
+    retry_exhausted: int = 0  # requests retired STATUS_RETRY (budget spent)
+    recovery_ms_total: float = 0.0
 
     def _pct(self, p: float) -> float:
         if not self.latencies_ms:
@@ -145,6 +162,12 @@ class ServiceMetrics:
     @property
     def utilization(self) -> float:
         return self.slot_rounds / self.capacity_rounds if self.capacity_rounds else 0.0
+
+    @property
+    def mean_recovery_ms(self) -> float:
+        if not self.recoveries:
+            return float("nan")
+        return self.recovery_ms_total / self.recoveries
 
     @property
     def deadline_hit_rate(self) -> float:
@@ -174,6 +197,11 @@ class _SlotGroup:
         self.ptr = np.full(n_slots, NULL, np.int32)
         self.scratch = np.zeros((n_slots, S), np.int32)
         self.iters = np.zeros(n_slots, np.int64)
+        # fault tolerance: a group whose quantum hit a dead shard is parked
+        # (occupants kept, admission blocked) until this round; consecutive
+        # failures drive the exponential backoff
+        self.backoff_until = -1
+        self.fail_streak = 0
 
     def free_slots(self) -> int:
         return sum(r is None for r in self.req)
@@ -207,6 +235,7 @@ class PulseService:
         max_pending: int | None = None,
         rate_limit_rps: float | None = None,
         rate_limit_burst: float | None = None,
+        fault_tolerance=None,
     ):
         if quantum < 1:
             raise ValueError("quantum must be >= 1")
@@ -264,6 +293,24 @@ class PulseService:
             max_pending=max_pending, rate_limiter=limiter
         )
         self.metrics = ServiceMetrics()
+        # fault tolerance (arena_ft.FaultToleranceConfig): snapshot + commit
+        # log durability for write quanta, shard-failure detection, and
+        # degraded-mode serving (backoff + retry budget) while recovering
+        self.ft = fault_tolerance
+        self._detector = None
+        self._dead_until: dict[int, int] = {}  # shard -> revive round
+        self._ft_rng = None
+        self._writes_since_snapshot = 0
+        if self.ft is not None:
+            from repro.distributed.elastic import ShardFailureDetector
+
+            for name, spec in structures.items():
+                if spec.writes:
+                    self.ft.store.register_iterator(name, spec.iterator)
+            # recovery always needs an anchor state to replay from
+            self.ft.store.ensure_baseline(engine.arena)
+            self._detector = ShardFailureDetector(engine.arena.num_shards)
+            self._ft_rng = random.Random(self.ft.seed)
         self._pending_arrivals: list[TraversalRequest] = []
         # retirement events (writes?, request) pushed by whichever thread
         # retires; accounting drains them on the main thread
@@ -340,6 +387,13 @@ class PulseService:
         if self.preempt:
             self._maybe_preempt(now_s)
         free = {name: g.free_slots() for name, g in self.groups.items()}
+        # a group parked on a dead shard admits nobody until its backoff
+        # expires: the retried batch must re-run with its composition intact
+        # (identical batch -> identical allocation order -> bit-identical
+        # post-recovery arena)
+        for name, g in self.groups.items():
+            if g.backoff_until > rnd:
+                free[name] = 0
         # write-path barrier: writers take their structure group exclusively
         free = apply_write_barriers(
             free,
@@ -423,6 +477,7 @@ class PulseService:
             m.completed += int(r.status == STATUS_DONE)
             m.faulted += int(r.status == STATUS_FAULT)
             m.timed_out += int(r.status == STATUS_MAXED)
+            m.retry_exhausted += int(r.status == STATUS_RETRY)
             m.latencies_ms.append(r.latency_ms)
             t = m.per_tenant.setdefault(
                 r.tenant, {"completed": 0, "latencies_ms": []}
@@ -440,6 +495,7 @@ class PulseService:
         now_s = time.perf_counter()
         m = self.metrics
         m.engine_calls += 1
+        g.fail_streak = 0  # a quantum landed: the group is healthy again
         stats = res.stats
         if stats is not None and hasattr(stats, "supersteps"):
             m.supersteps += stats.supersteps
@@ -469,13 +525,16 @@ class PulseService:
         # NULL pointers in padding (free) slots fault on the first iteration,
         # so a fixed-width batch costs one compiled shape per group.
         occ = g.occupied()
+        log_writes = self.ft is not None and g.spec.writes
 
         def run():
             t0 = time.perf_counter()
+            p0 = g.ptr.copy()
+            s0 = g.scratch.copy()
             res = self.engine.execute(
                 g.spec.iterator,
-                g.ptr.copy(),
-                g.scratch.copy(),
+                p0.copy(),
+                s0.copy(),
                 max_iters=quantum,
                 backend=self.backend,
                 compact=self.compact,
@@ -483,6 +542,23 @@ class PulseService:
                 schedule=self.schedule,
                 fabric=self.fabric,
             )
+            if log_writes:
+                # durability point: the quantum is acknowledged once its
+                # *inputs* are in the fsynced log (replaying them through
+                # the commit oracle reproduces the post-commit arena
+                # bit-for-bit); a crash before this line loses only an
+                # unacknowledged quantum.  engine.execute defaults
+                # k_local=4 -- recorded so replay runs the same chase depth.
+                store = self.ft.store
+                seq = store.log_quantum(
+                    g.name, p0, s0,
+                    max_iters=quantum, k_local=4, compact=self.compact,
+                    commits=res.stats.commits, epochs=res.stats.epochs,
+                )
+                self._writes_since_snapshot += 1
+                if self._writes_since_snapshot >= self.ft.snapshot_every:
+                    store.snapshot(res.arena, seq)
+                    self._writes_since_snapshot = 0
             return res, time.perf_counter() - t0
 
         def apply(out):
@@ -490,6 +566,68 @@ class PulseService:
             self._apply_result(g, occ, res, dt_s, rnd)
 
         return QuantumWork(label=g.name, run=run, apply=apply)
+
+    # --------------------------- fault tolerance ------------------------------
+
+    def _verify_recovery(self, recovered) -> None:
+        """The zero-acknowledged-commits-lost gate: the snapshot + replayed
+        log must reproduce the engine's resident arena exactly.  The engine
+        swaps its arena only after a quantum succeeds, and a successful
+        write quantum is logged before it is acknowledged, so any mismatch
+        means durable state lost an acked commit -- fail loudly."""
+        cur = self.engine.arena
+        for field in ("data", "bounds", "perms", "heap"):
+            if not np.array_equal(
+                np.asarray(getattr(cur, field)), np.asarray(getattr(recovered, field))
+            ):
+                raise RuntimeError(
+                    f"recovery lost acknowledged commits: arena.{field} diverged"
+                )
+
+    def _register_retry(self, g: _SlotGroup, rnd: int) -> None:
+        """Park the failed group under jittered exponential backoff and
+        charge each occupant one retry; budget exhaustion retires the
+        request STATUS_RETRY (the client must resubmit after recovery)."""
+        ft = self.ft
+        m = self.metrics
+        g.fail_streak += 1
+        backoff = min(ft.backoff_cap, ft.backoff_base * (1 << (g.fail_streak - 1)))
+        jitter = 1.0 + ft.backoff_jitter * (2.0 * self._ft_rng.random() - 1.0)
+        g.backoff_until = rnd + 1 + max(1, int(round(backoff * jitter)))
+        now_s = time.perf_counter()
+        for s, r in enumerate(g.req):
+            if r is None:
+                continue
+            r.retries += 1
+            m.retries += 1
+            if r.retries > ft.retry_budget:
+                self._fast_retire(g, s, STATUS_RETRY, now_s, rnd)
+
+    def _on_shard_failure(self, e: ShardFailure, rnd: int) -> None:
+        """Fail over: mark the shard dead, restore the latest snapshot +
+        replay the commit log, verify bit-equality with the resident arena,
+        and park the in-flight group for a backed-off retry.  Runs on the
+        main thread; in async mode the runner is already fail-fast idle
+        (its error surfaced here), so swapping the arena is race-free."""
+        m = self.metrics
+        self._detector.suspect(e.shard, rnd)
+        self._detector.sweep()
+        t0 = time.perf_counter()
+        recovered, info = self.ft.store.recover()
+        self._verify_recovery(recovered)
+        self.engine.arena = recovered
+        m.recoveries += 1
+        m.replayed_commits += info.replayed_commits
+        m.recovery_ms_total += (time.perf_counter() - t0) * 1e3
+        self._dead_until[e.shard] = rnd + 1 + self.ft.dead_rounds
+        g = self.groups.get(e.label) if e.label else None
+        if g is not None:
+            self._register_retry(g, rnd)
+
+    def _revive_dead_shards(self, rnd: int) -> None:
+        for k in [k for k, until in self._dead_until.items() if until <= rnd]:
+            self._detector.revive(k)
+            del self._dead_until[k]
 
     def _quantum_for_round(self, now_s: float) -> int:
         """SLO-aware quantum sizing.  With the bounds pinned (the default)
@@ -545,6 +683,8 @@ class PulseService:
         m = self.metrics
         rnd = m.rounds if rnd is None else rnd
         now = time.perf_counter()
+        if self._detector is not None:
+            self._revive_dead_shards(rnd)
         self._admit(now, rnd)
         quantum = self._quantum_for_round(now)
         if m.quantum_min_used == 0 or quantum < m.quantum_min_used:
@@ -555,17 +695,33 @@ class PulseService:
             occupied_before = int(g.occupied().sum())  # count before retirement
             m.slot_rounds += occupied_before
             m.capacity_rounds += g.n_slots
-            if occupied_before == 0:
-                continue
+            if occupied_before == 0 or g.backoff_until > rnd:
+                continue  # empty, or parked awaiting a backed-off retry
             work = self._make_work(g, rnd, quantum)
-            if runner is not None:
-                runner.submit(work)
-            else:
-                work.apply(work.run())
+            try:
+                if runner is not None:
+                    # a pending runner error surfaces here *before* work
+                    # enqueues: the current group simply re-runs next round
+                    runner.submit(work)
+                else:
+                    work.apply(work.run())
+            except ShardFailure as e:
+                if self.ft is None:
+                    raise
+                if e.label is None:
+                    e.label = g.name
+                self._on_shard_failure(e, rnd)
         if runner is not None:
             self._drain_emit()  # overlap: account retirements mid-flight
-            runner.drain()  # barrier: slot state settled for next admit
+            try:
+                runner.drain()  # barrier: slot state settled for next admit
+            except ShardFailure as e:
+                if self.ft is None:
+                    raise
+                self._on_shard_failure(e, rnd)
         self._drain_emit()
+        if self._detector is not None:
+            self._detector.beat_all(rnd)
         m.rounds += 1
 
     def close(self) -> None:

@@ -129,7 +129,7 @@ def check_donated_pool_consumed():
         routing.empty_records(P * L, it.scratch_words),
         NamedSharding(mesh, Spec("mem")),
     )
-    out = runner(pool, data, bounds, perms, jnp.int32(4096))
+    out = runner(pool, data, bounds, perms, jnp.int32(4096), jnp.int32(1 << 16))
     jax.block_until_ready(out[0])
     assert pool.is_deleted(), "pool buffer was not donated to the executable"
     assert not data.is_deleted(), "resident arena must not be donated"
@@ -177,7 +177,7 @@ def check_pipelined_compiles_once_and_donates():
         routing.empty_records(P * L, it.scratch_words),
         NamedSharding(mesh, Spec("mem")),
     )
-    out = runner(pool, data, bounds, perms, jnp.int32(4096))
+    out = runner(pool, data, bounds, perms, jnp.int32(4096), jnp.int32(1 << 16))
     jax.block_until_ready(out[0])
     assert pool.is_deleted(), "pipelined runner must donate the pool buffer"
     assert not data.is_deleted(), "resident arena must not be donated"
