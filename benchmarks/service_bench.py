@@ -760,6 +760,179 @@ def bench_chaos(
     }
 
 
+def bench_reshard(
+    n_requests=400, n_keys=256, slots=8, quantum=6, wave=8,
+    reshard_round=6, recovery_window=12, seed=42, check=False,
+):
+    """Live 2x reshard (4 -> 8 shards) mid-stream under load.
+
+    A 4-shard meshed engine serves a mixed BST find/update stream (updates
+    are alloc-free, so committed state is partition-independent); at
+    scheduling round ``reshard_round`` the service is asked to double its
+    shard count online (drain in-flight quanta -> remap -> new mesh ->
+    resume).  A cold run serves the same stream at 8 shards from the start,
+    seeded from the offline ``remap_shards`` of the identical 4-shard build
+    -- the partition the live path must converge to.  Gates (``--check``):
+
+      * exactly one reshard; the drain is bounded;
+      * bit-identical to the cold 8-shard run: every request's (status,
+        result), the arena payload (data/bounds/perms), the allocator
+        registers (free head + bump frontier), and the commit count;
+      * throughput recovers: mean completions/round over the
+        ``recovery_window`` rounds after serving resumes >= 90% of the
+        pre-reshard rate.
+    """
+    from repro.core.arena import remap_shards
+    from repro.core.structures import bst
+
+    rng = np.random.default_rng(seed)
+    keys = np.arange(100, 100 + n_keys, dtype=np.int32)
+    read_keys = [int(keys[int(rng.integers(0, n_keys))]) for _ in range(n_requests)]
+    upd_keys = [int(keys[int(rng.integers(0, n_keys))]) for _ in range(n_requests)]
+
+    def build4():
+        b = ArenaBuilder(4 * n_keys, 4, num_shards=4, policy="interleaved")
+        root, _h = bst.build_into(b, keys, keys * 2)
+        return b.finish(), root
+
+    def serve(arena, root, nshards, reshard_at=None):
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:nshards]), ("mem",))
+        eng = PulseEngine(arena, mesh=mesh)
+        svc = PulseService(
+            eng,
+            {
+                "bst": StructureSpec(bst.find_iterator(), (root,), group="bst"),
+                "bst_upd": StructureSpec(
+                    bst.update_iterator(), (root,), group="bst", takes_value=True
+                ),
+            },
+            slots_per_structure=slots,
+            quantum=quantum,
+            pipeline="async",
+        )
+        reqs = []
+        for i in range(n_requests):
+            if i % 4 == 3:
+                reqs.append(
+                    TraversalRequest(
+                        i, "bst_upd", upd_keys[i], value=9000 + i,
+                        tenant="writer", arrive_round=i // wave,
+                    )
+                )
+            else:
+                reqs.append(
+                    TraversalRequest(
+                        i, "bst", read_keys[i],
+                        tenant="reader", arrive_round=i // wave,
+                    )
+                )
+        for r in reqs:
+            svc.submit(r)
+        hist = []
+        try:
+            while svc._busy():
+                if reshard_at is not None and svc.metrics.rounds == reshard_at:
+                    svc.request_reshard(2 * nshards)
+                if len(hist) >= 10_000:
+                    raise RuntimeError("service did not drain in 10000 rounds")
+                svc.step()
+                m = svc.metrics
+                hist.append((int(m.completed), int(m.reshards)))
+        finally:
+            svc.close()
+            svc._drain_emit()
+        hist.append((int(svc.metrics.completed), int(svc.metrics.reshards)))
+        return reqs, svc.metrics, eng.arena, hist
+
+    a4, root = build4()
+    t0 = time.perf_counter()
+    r_cold, m_cold, ar_cold, _ = serve(remap_shards(a4, 8), root, 8)
+    t_cold = time.perf_counter() - t0
+    a4b, root_b = build4()
+    assert root_b == root
+    t0 = time.perf_counter()
+    r_live, m_live, ar_live, hist = serve(a4b, root, 4, reshard_at=reshard_round)
+    t_live = time.perf_counter() - t0
+
+    assert m_live.completed == m_cold.completed == n_requests
+
+    results_identical = all(
+        a.status == b.status and np.array_equal(a.result, b.result)
+        for a, b in zip(r_cold, r_live)
+    )
+    # payload + partition tables + allocator registers (free head, bump
+    # frontier); epoch/commit heap counters are commit-placement metadata
+    # that legitimately differs when early quanta committed at 4 shards
+    arena_identical = bool(
+        np.array_equal(np.asarray(ar_cold.data), np.asarray(ar_live.data))
+        and np.array_equal(np.asarray(ar_cold.bounds), np.asarray(ar_live.bounds))
+        and np.array_equal(np.asarray(ar_cold.perms), np.asarray(ar_live.perms))
+        and np.array_equal(
+            np.asarray(ar_cold.heap)[:, :2], np.asarray(ar_live.heap)[:, :2]
+        )
+    )
+
+    done = np.asarray([c for c, _ in hist])
+    rs = np.asarray([v for _, v in hist])
+    delta = np.diff(np.concatenate([[0], done]))
+    cut_round = int(np.argmax(rs > 0)) if (rs > 0).any() else -1
+    pre_rate = float(delta[:cut_round].mean()) if cut_round > 0 else 0.0
+    post = np.nonzero(delta[cut_round + 1:])[0]
+    resume_round = cut_round + 1 + int(post[0]) if len(post) else -1
+    window = delta[resume_round: resume_round + recovery_window]
+    post_rate = float(window.mean()) if len(window) else 0.0
+    ratio = post_rate / pre_rate if pre_rate > 0 else 0.0
+    resume_lag = resume_round - cut_round if resume_round >= 0 else -1
+
+    print(
+        f"  cold 8-shard : rounds={m_cold.rounds} commits={m_cold.commits} "
+        f"wall={t_cold:.1f}s"
+    )
+    print(
+        f"  live 4->8    : rounds={m_live.rounds} commits={m_live.commits} "
+        f"reshards={m_live.reshards} drain={m_live.reshard_drain_rounds} "
+        f"wall={t_live:.1f}s"
+    )
+    print(
+        f"  cutover@round {cut_round}, resumed +{resume_lag} rounds: "
+        f"pre-reshard {pre_rate:.2f} req/round -> "
+        f"post-cutover {post_rate:.2f} req/round ({ratio:.0%})"
+    )
+    print(
+        f"  cold-equivalence: arena {'identical' if arena_identical else 'DIVERGED'}, "
+        f"results {'identical' if results_identical else 'DIVERGED'}"
+    )
+    if check:
+        assert m_live.reshards == 1, m_live.reshards
+        assert arena_identical, "live reshard diverged from the cold 8-shard run"
+        assert results_identical, "live reshard changed request results"
+        assert m_live.commits == m_cold.commits > 0, (
+            m_live.commits, m_cold.commits,
+        )
+        assert ratio >= 0.9, (
+            f"post-reshard throughput must reach >=90% of the pre-reshard "
+            f"rate within {recovery_window} rounds, got {ratio:.0%}"
+        )
+    return {
+        "n_requests": int(n_requests),
+        "reshard_round": int(reshard_round),
+        "reshards": int(m_live.reshards),
+        "drain_rounds": int(m_live.reshard_drain_rounds),
+        "cutover_round": int(cut_round),
+        "resume_lag_rounds": int(resume_lag),
+        "pre_reshard_rate": pre_rate,
+        "post_cutover_rate": post_rate,
+        "recovery_ratio": float(ratio),
+        "recovery_window_rounds": int(recovery_window),
+        "commits": int(m_live.commits),
+        "bit_identical_to_cold": bool(arena_identical and results_identical),
+        "cold_rounds": int(m_cold.rounds),
+        "live_rounds": int(m_live.rounds),
+        "cold_wall_s": float(t_cold),
+        "live_wall_s": float(t_live),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -805,6 +978,14 @@ def main(argv=None):
         "fault-tolerant serving stack and gate recovery (skips the four "
         "standard experiments; pair with --json BENCH_chaos.json)",
     )
+    ap.add_argument(
+        "--reshard",
+        action="store_true",
+        help="reshard mode only: live 4 -> 8 shard change mid-stream, gated "
+        "on bit-identity to a cold 8-shard run + >=90%% throughput "
+        "recovery (skips the four standard experiments; pair with "
+        "--json BENCH_reshard.json)",
+    )
     args = ap.parse_args(argv)
     arrival = parse_arrival(args.arrival)
 
@@ -830,6 +1011,34 @@ def main(argv=None):
                     "checked": bool(args.check),
                 },
                 "chaos": rc,
+            }
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"wrote {args.json}")
+        return
+
+    if args.reshard:
+        print("[1/1] reshard: live 4 -> 8 shard change mid-stream")
+        rr = bench_reshard(
+            seed=args.seed,
+            check=args.check,
+            **(
+                {"n_requests": 120, "n_keys": 64, "reshard_round": 4}
+                if args.small
+                else {}
+            ),
+        )
+        print("\nsummary:", rr)
+        if args.json:
+            payload = {
+                "benchmark": "service_bench_reshard",
+                "config": {
+                    "shards": P,
+                    "small": bool(args.small),
+                    "seed": int(args.seed),
+                    "checked": bool(args.check),
+                },
+                "reshard": rr,
             }
             with open(args.json, "w") as f:
                 json.dump(payload, f, indent=2, sort_keys=True)

@@ -151,6 +151,101 @@ def make_arena(
     )
 
 
+def remap_shards(arena: Arena, new_num_shards: int) -> Arena:
+    """Re-partition an arena to ``new_num_shards`` (exact 2x grow or shrink).
+
+    Pointers are *global* row indices and the partition is by address range,
+    so resharding never rewrites a pointer: growing 2x splits every shard's
+    range at its midpoint and only the translation base table (``bounds``),
+    the permission table, and the per-shard allocator registers change.
+    The one data mutation is free-chain surgery: a parent's intrusive
+    free list is partitioned between the two children preserving relative
+    LIFO (pop) order, which rewrites the link word of free (dead) slots.
+
+    Shrinking 2x merges adjacent pairs: the merged free chain is the left
+    child's chain then the right's, and a left-child bump hole below the
+    midpoint is pushed onto the free chain when the right child has
+    allocations (the bump register cannot represent a hole).  Epoch/commit
+    registers are bookkeeping: a split duplicates them, a merge takes the
+    max, so grow-then-shrink round-trips.
+
+    Returns a new Arena; the input is never modified.
+    """
+    P = arena.num_shards
+    Q = int(new_num_shards)
+    if Q == P:
+        return arena
+    if Q != 2 * P and P != 2 * Q:
+        raise ValueError(f"remap_shards supports exact 2x changes, {P} -> {Q}")
+    bounds = np.asarray(arena.bounds, np.int64)
+    data = np.array(arena.data)  # private copy: free-chain links may move
+    heap_old = np.asarray(arena.heap)
+    perms_old = np.asarray(arena.perms)
+
+    def walk(head: int) -> list[int]:
+        out, p = [], int(head)
+        while p != NULL:
+            out.append(p)
+            p = int(data[p, 0])
+        return out
+
+    def relink(slots: list[int]) -> int:
+        for i, p in enumerate(slots):
+            data[p, 0] = slots[i + 1] if i + 1 < len(slots) else NULL
+        return slots[0] if slots else NULL
+
+    new_bounds = np.zeros(Q + 1, np.int64)
+    new_bounds[-1] = bounds[-1]
+    new_perms = np.zeros(Q, np.int32)
+    new_heap = np.zeros((Q, HEAP_WORDS), np.int32)
+    if Q == 2 * P:  # grow: split each range at its midpoint
+        for s in range(P):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            if (hi - lo) % 2:
+                raise ValueError(f"shard {s} range has odd size {hi - lo}")
+            mid = (lo + hi) // 2
+            new_bounds[2 * s], new_bounds[2 * s + 1] = lo, mid
+            new_perms[2 * s] = new_perms[2 * s + 1] = perms_old[s]
+            slots = walk(heap_old[s, H_FREE])
+            new_heap[2 * s, H_FREE] = relink([p for p in slots if p < mid])
+            new_heap[2 * s + 1, H_FREE] = relink([p for p in slots if p >= mid])
+            b = int(heap_old[s, H_BUMP])
+            new_heap[2 * s, H_BUMP] = min(b, mid)
+            new_heap[2 * s + 1, H_BUMP] = max(b, mid)
+            for w in (H_EPOCH, H_COMMITS):
+                new_heap[2 * s, w] = new_heap[2 * s + 1, w] = heap_old[s, w]
+    else:  # shrink: merge adjacent pairs
+        for t in range(Q):
+            s0, s1 = 2 * t, 2 * t + 1
+            lo, mid = int(bounds[s0]), int(bounds[s1])
+            if perms_old[s0] != perms_old[s1]:
+                raise ValueError(
+                    f"cannot merge shards {s0}/{s1}: permission mismatch"
+                )
+            new_bounds[t] = lo
+            new_perms[t] = perms_old[s0]
+            b0, b1 = int(heap_old[s0, H_BUMP]), int(heap_old[s1, H_BUMP])
+            slots = walk(heap_old[s0, H_FREE]) + walk(heap_old[s1, H_FREE])
+            if b1 > mid:
+                if b0 < mid:  # hole below the midpoint: representable only
+                    for p in range(b0, mid):  # as free-chain slots
+                        data[p] = 0
+                    slots = slots + list(range(b0, mid))
+                nb = b1
+            else:
+                nb = b0
+            new_heap[t, H_FREE] = relink(slots)
+            new_heap[t, H_BUMP] = nb
+            for w in (H_EPOCH, H_COMMITS):
+                new_heap[t, w] = max(heap_old[s0, w], heap_old[s1, w])
+    return Arena(
+        data=jnp.asarray(data),
+        bounds=jnp.asarray(new_bounds, jnp.int32),
+        perms=jnp.asarray(new_perms, jnp.int32),
+        heap=jnp.asarray(new_heap, jnp.int32),
+    )
+
+
 def load_node(arena_data: jax.Array, ptr: jax.Array) -> jax.Array:
     """The single aggregated LOAD of one iteration (PULSE S4.1).
 

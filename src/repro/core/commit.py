@@ -66,8 +66,8 @@ F_SCRATCH = routing.F_SCRATCH
 _CHASE_JIT: dict = {}
 
 
-def _chase_step(it: PulseIterator, max_iters: int):
-    key = (it, max_iters, it.mutates)
+def _chase_step(it: PulseIterator, max_iters: int, *, rep: bool = False):
+    key = (it, max_iters, it.mutates, rep)
     fn = _CHASE_JIT.get(key)
     if fn is None:
         if it.mutates:
@@ -75,6 +75,19 @@ def _chase_step(it: PulseIterator, max_iters: int):
                 return mut_step_batch(
                     it, rows, ptr, scr, st, iters, mut, max_iters=max_iters,
                     local_lo=lo, local_hi=hi, perm_ok=perm,
+                )
+        elif rep:
+            # replica-serving twin: the oracle shard also chases records in
+            # its mirrored primary's range (hot-shard replication) -- same
+            # dual-range step_batch the device path runs, so k_local budgets
+            # interleave across the two ranges identically
+            def fn(rows, ptr, scr, st, iters, lo, hi, perm,
+                   rep_rows, rep_lo, rep_hi, rep_on, rep_perm):
+                return step_batch(
+                    it, rows, ptr, scr, st, iters, max_iters=max_iters,
+                    local_lo=lo, local_hi=hi, perm_ok=perm,
+                    rep_data=rep_rows, rep_lo=rep_lo, rep_hi=rep_hi,
+                    rep_base=jnp.int32(0), rep_on=rep_on, rep_perm_ok=rep_perm,
                 )
         else:
             def fn(rows, ptr, scr, st, iters, lo, hi, perm):
@@ -91,6 +104,26 @@ def _owner_of(bounds: np.ndarray, ptr: np.ndarray) -> np.ndarray:
     P = len(bounds) - 1
     valid = (ptr >= 0) & (ptr < bounds[-1]) & (shard >= 0) & (shard < P)
     return np.where(valid, shard, NULL).astype(np.int32)
+
+
+def _serve_np(owner: np.ndarray, rec_id: np.ndarray, rep) -> np.ndarray:
+    """Numpy port of ``routing._serve_shard``: map the owning shard to the
+    shard that *serves* the read under the replication policy."""
+    if rep is None:
+        return owner
+    replica_map, dead_mask, policy = rep
+    P = len(replica_map)
+    safe = np.clip(owner, 0, P - 1)
+    alt = replica_map[safe]
+    has_alt = (alt >= 0) & (owner >= 0) & ~dead_mask[np.clip(alt, 0, P - 1)]
+    dead = dead_mask[safe]
+    if policy == "spread":
+        redirect = has_alt & (dead | (rec_id % 2 == 1))
+    elif policy == "failover":
+        redirect = has_alt & dead
+    else:  # "primary"
+        redirect = np.zeros_like(has_alt)
+    return np.where(redirect, alt, owner).astype(np.int32)
 
 
 def _commit_shard(pool, data, heap, s, lo, hi, perm_w, *, S, W, MB):
@@ -156,7 +189,7 @@ def _commit_shard(pool, data, heap, s, lo, hi, perm_w, *, S, W, MB):
     return applied
 
 
-def _decide_and_send(pool, bounds, s, P, *, capacity, drain_done, MB):
+def _decide_and_send(pool, bounds, s, P, *, capacity, drain_done, MB, rep=None):
     """Numpy port of the switch decision (``_route_decide``): fault-mark,
     compute destinations (staged mutations route to their commit shard),
     park overflow, extract leavers.  Returns the per-destination send lists
@@ -184,10 +217,11 @@ def _decide_and_send(pool, bounds, s, P, *, capacity, drain_done, MB):
     status = pool[:, F_STATUS]
     active = status == STATUS_ACTIVE
 
+    serve = _serve_np(owner, pool[:, F_ID], rep)
     if drain_done:
-        dest = np.where(active, owner, s)
+        dest = np.where(active, serve, s)
     else:
-        dest = np.where(active, owner, pool[:, F_HOME])
+        dest = np.where(active, serve, pool[:, F_HOME])
     if MB is not None:
         cdest = np.where(is_alloc, pool[:, F_HOME], towner)
         dest = np.where(active & pendm, cdest, dest)
@@ -222,7 +256,7 @@ def _merge(kept, arrivals, L):
     return merged, dropped
 
 
-def _remote_count(pool, bounds, s, MB):
+def _remote_count(pool, bounds, s, MB, rep=None):
     active = pool[:, F_STATUS] == STATUS_ACTIVE
     owner = _owner_of(bounds, pool[:, F_PTR])
     if MB is not None:
@@ -232,6 +266,8 @@ def _remote_count(pool, bounds, s, MB):
             m_op == M_ALLOC, pool[:, F_HOME], _owner_of(bounds, pool[:, MB + 1])
         )
         owner = np.where(pendm, towner, owner)
+    else:
+        owner = _serve_np(owner, pool[:, F_ID], rep)
     return int((active & (owner != s)).sum())
 
 
@@ -247,6 +283,7 @@ def sequential_commit_execute(
     compact: bool = True,
     min_link_capacity: int = 8,
     fault_injector=None,
+    replication=None,
 ):
     """Run a batch to completion under the sequential-commit schedule.
 
@@ -260,10 +297,21 @@ def sequential_commit_execute(
     runs -- the single-node write executor dies exactly like the mesh paths,
     with the input arena untouched.  Fabric loss/delay do not apply (this
     schedule has no fabric).
+
+    ``replication`` (``routing.ReplicaContext``, read-only iterators): the
+    oracle twin of the device read fan-out.  Replica rows are served from
+    the oracle's own copy of the primary's range -- legitimate because
+    replicas are bit-identical by construction -- so a device failover run
+    must match this executor bit for bit *including* hops and supersteps.
     """
     kill_at = None
     if fault_injector is not None:
         kill_at = fault_injector.kill_step(fault_injector.begin_call())
+    if replication is not None and it.mutates:
+        raise ValueError(
+            "replication serves the READ path only; the write path commits "
+            "through the primary and ships the log to the replica"
+        )
     P = arena.num_shards
     bounds = np.asarray(arena.bounds)
     perms = np.asarray(arena.perms)
@@ -303,9 +351,18 @@ def sequential_commit_execute(
         off += c
 
     base_capacity = L // P
-    chase = _chase_step(it, max_iters)
+    chase = _chase_step(it, max_iters, rep=replication is not None)
     readable = (perms & PERM_READ) == PERM_READ
     writable = (perms & PERM_WRITE) == PERM_WRITE
+
+    rep_np = None
+    primary_map = None
+    dead_np = None
+    if replication is not None:
+        plan = replication.plan
+        primary_map = np.asarray(plan.primary_map, np.int32)
+        dead_np = np.asarray(replication.dead_mask, bool)
+        rep_np = (np.asarray(plan.replica_map, np.int32), dead_np, plan.policy)
 
     routed_per_step, active_per_step = [], []
     wire_words_per_step, capacity_per_step = [], []
@@ -331,7 +388,27 @@ def sequential_commit_execute(
             ]
             if mutate:
                 args.append(jnp.asarray(pool[:, MB:]))
-            args += [jnp.int32(lo), jnp.int32(hi), jnp.asarray(bool(readable[s]))]
+            hi_eff = lo if (dead_np is not None and dead_np[s]) else hi
+            args += [
+                jnp.int32(lo), jnp.int32(hi_eff), jnp.asarray(bool(readable[s]))
+            ]
+            if replication is not None:
+                # shard s doubles as the replica holder for primary_map[s]:
+                # it serves reads over the primary's range when the policy
+                # spreads or the primary is dead (never while itself dead)
+                p = int(primary_map[s])
+                ps = max(p, 0)
+                plo, phi = int(bounds[ps]), int(bounds[ps + 1])
+                rep_on = (
+                    p >= 0 and not dead_np[s]
+                    and (rep_np[2] == "spread" or dead_np[p])
+                )
+                args += [
+                    jnp.asarray(data[plo:phi]),
+                    jnp.int32(plo), jnp.int32(phi),
+                    jnp.asarray(bool(rep_on)),
+                    jnp.asarray(bool(readable[ps])),
+                ]
             for _k in range(k_local):
                 out = chase(*args[:1], *args[1:])
                 args[1 : 1 + len(out)] = [*out]
@@ -362,7 +439,7 @@ def sequential_commit_execute(
             for s in range(P):
                 send, routed = _decide_and_send(
                     pools[s], bounds, s, P,
-                    capacity=capacity, drain_done=compact, MB=MB,
+                    capacity=capacity, drain_done=compact, MB=MB, rep=rep_np,
                 )
                 sends.append(send)
                 n_routed += routed
@@ -380,7 +457,9 @@ def sequential_commit_execute(
 
         steps += 1
         n_active = int((pools[:, :, F_STATUS] == STATUS_ACTIVE).sum())
-        n_remote = sum(_remote_count(pools[s], bounds, s, MB) for s in range(P))
+        n_remote = sum(
+            _remote_count(pools[s], bounds, s, MB, rep_np) for s in range(P)
+        )
         routed_per_step.append(n_routed)
         active_per_step.append(n_active)
         capacity_per_step.append(capacity if do_route else 0)

@@ -175,6 +175,17 @@ class PulseEngine:
             it, self.arena.node_words, self.accel, eta=self.eta
         )
 
+    def reshard(self, arena: Arena, mesh=None) -> None:
+        """Install a re-partitioned arena (and optionally a new mesh width).
+
+        Shard-count-dependent decision caches are dropped; compiled
+        executables key on shapes/static args and stay valid for whatever
+        still matches."""
+        self.arena = arena
+        if mesh is not None:
+            self.mesh = mesh
+        self._schedule_cache.clear()
+
     def execute(
         self,
         it: PulseIterator,
@@ -191,6 +202,7 @@ class PulseEngine:
         backend: str = "xla",
         schedule: str = "auto",
         fabric: str = "dense",
+        replication: routing.ReplicaContext | None = None,
     ) -> ExecResult:
         """Dispatch + execute a batch of traversals.
 
@@ -251,7 +263,13 @@ class PulseEngine:
             return ExecResult(ptr, scratch, status, np.asarray(iters), trace, False)
 
         if self.mesh is not None and self.arena.num_shards > 1:
-            schedule = self._resolve_schedule(it, schedule, fused, k_local)
+            if replication is not None:
+                # replica fan-out runs on the dispatched schedule; results
+                # are schedule-invariant, so degraded/spread rounds just use
+                # the host loop instead of the overlap model's pick
+                schedule = "dispatched"
+            else:
+                schedule = self._resolve_schedule(it, schedule, fused, k_local)
             rec, stats = routing.distributed_execute(
                 it, self.arena, ptr0, scratch0,
                 mesh=self.mesh, axis_name=self.axis_name,
@@ -260,6 +278,7 @@ class PulseEngine:
                 schedule=schedule, fabric=fabric,
                 local_backend="kernel" if backend == "kernel" else "xla",
                 fault_injector=self.fault_injector,
+                replication=replication,
             )
             return ExecResult(
                 ptr=rec[:, routing.F_PTR],

@@ -17,8 +17,12 @@ failures:
     superstep counts grow.  The seeded mask is a pure function of
     (drop_seed, shard, superstep), so drop runs replay bit-identically.
   * **delay** -- shard ``delay_shard`` sleeps ``delay_s`` before each
-    superstep of the dispatched (host-loop) schedule, modeling a straggler
-    memory node.
+    superstep of the dispatched (host-loop) schedule **in which it serves
+    work** (an ACTIVE record points into its range), modeling a straggler
+    memory node.  Attribution matters: a per-shard watchdog probe to the
+    straggler is slow while probes elsewhere are not, so the serving
+    layer's heartbeat can name the suspect; and once reads fan out to the
+    shard's replica the straggler stops costing anyone anything.
 
 The injector is threaded through ``routing.distributed_execute``,
 ``commit.sequential_commit_execute`` and ``PulseEngine`` as an optional
@@ -46,7 +50,7 @@ class FaultPlan:
     drop_prob: float = 0.0  # per-record fabric loss probability
     drop_seed: int = 0  # PRNG seed for the loss mask
     delay_shard: int | None = None  # straggler shard (dispatched path only)
-    delay_s: float = 0.0  # per-superstep straggler delay
+    delay_s: float = 0.0  # straggler delay per superstep it serves work in
 
 
 class ShardFailure(RuntimeError):

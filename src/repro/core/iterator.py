@@ -115,6 +115,12 @@ def step_batch(
     local_hi: jax.Array | int | None = None,
     perm_ok: jax.Array | bool = True,
     logic_fn=None,
+    rep_data: jax.Array | None = None,
+    rep_lo: jax.Array | int = 0,
+    rep_hi: jax.Array | int = 0,
+    rep_base: jax.Array | int = 0,
+    rep_on: jax.Array | bool = False,
+    rep_perm_ok: jax.Array | bool = True,
 ):
     """Advance every ACTIVE request by one iteration (vectorized).
 
@@ -127,20 +133,42 @@ def step_batch(
     (``kernels.pulse_chase.ops.iterator_logic``) for the per-lane vmap --
     the same compiled iterator the accelerator kernel runs, with identical
     done-gating, so results are bit-identical.
+
+    ``rep_data``/``rep_lo``/``rep_hi`` declare a *second* servable address
+    range: the replica rows this executor holds for another shard (hot-shard
+    replication, read fan-out).  When ``rep_on`` is true a record whose
+    pointer lands in ``[rep_lo, rep_hi)`` is chased from ``rep_data`` at
+    offset ``ptr - rep_lo + rep_base`` -- bit-identical to the primary by
+    construction, so results never depend on which copy served the read.
     """
     if local_hi is None:
         local_hi = arena_data.shape[0]
-    local = (ptr >= local_lo) & (ptr < local_hi)
+    own = (ptr >= local_lo) & (ptr < local_hi)
+    if rep_data is not None:
+        rep = jnp.asarray(rep_on) & (ptr >= rep_lo) & (ptr < rep_hi)
+    else:
+        rep = jnp.zeros_like(own)
+    local = own | rep
     null = ptr == NULL
     active = status == STATUS_ACTIVE
 
     # Faults: NULL or non-translatable-anywhere pointers are the router's
     # business; here a *local* request with a protection failure faults.
-    fault = active & local & ~jnp.asarray(perm_ok) & ~null
+    # Replica-served records check the *primary's* permission grant.
+    grant = jnp.where(rep, jnp.asarray(rep_perm_ok), jnp.asarray(perm_ok))
+    fault = active & local & ~grant & ~null
     runnable = active & local & ~fault & ~null
 
     offset = jnp.asarray(ptr, jnp.int32) - jnp.asarray(local_lo, jnp.int32)
-    node = load_node(arena_data, jnp.where(runnable, offset, 0))
+    node = load_node(arena_data, jnp.where(runnable & own, offset, 0))
+    if rep_data is not None:
+        rep_off = (
+            jnp.asarray(ptr, jnp.int32)
+            - jnp.asarray(rep_lo, jnp.int32)
+            + jnp.asarray(rep_base, jnp.int32)
+        )
+        rep_node = load_node(rep_data, jnp.where(runnable & rep, rep_off, 0))
+        node = jnp.where(rep[:, None], rep_node, node)
     if logic_fn is not None:
         done, nptr, nscr = logic_fn(node, ptr, scratch)
         # the kernel's logic pipeline leaves done-gating of the pointer to

@@ -73,6 +73,106 @@ def record_width(scratch_words: int, mut_words: int = 0) -> int:
     return F_SCRATCH + scratch_words + mut_words
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaPlan:
+    """Static hot-shard replication wiring (R=2) for the READ path.
+
+    ``primary_map[r]`` names the primary shard whose rows replica-holder
+    ``r`` mirrors (-1: r holds no replica); ``replica_map[p]`` is the
+    inverse (-1: p is unreplicated).  Both are tuples so the plan is
+    hashable and can key the compiled-superstep caches.
+
+    ``policy`` is the read fan-out rule the switch applies per record:
+
+      * ``"primary"``  -- never redirect (replicas are cold standbys);
+      * ``"failover"`` -- redirect a read to the replica only while the
+        primary is marked dead in the traced ``dead_mask``;
+      * ``"spread"``   -- load-balance: odd request ids read from the
+        replica, even ids from the primary (dead primaries always
+        redirect).  Replicas are bit-identical by construction, so the
+        copy that serves a read never changes its result.
+    """
+
+    primary_map: tuple
+    replica_map: tuple
+    policy: str = "failover"
+
+    def __post_init__(self):
+        if self.policy not in ("primary", "failover", "spread"):
+            raise ValueError(f"unknown replica policy {self.policy!r}")
+        if len(self.primary_map) != len(self.replica_map):
+            raise ValueError("primary_map / replica_map length mismatch")
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.primary_map)
+
+    @property
+    def replicated(self) -> tuple:
+        """Primaries that have a live replica."""
+        return tuple(p for p, r in enumerate(self.replica_map) if r >= 0)
+
+
+def make_replica_plan(
+    num_shards: int, primaries=None, *, policy: str = "failover"
+) -> ReplicaPlan:
+    """Build an R=2 plan: primary ``p``'s rows are mirrored on shard
+    ``(p + num_shards // 2) % num_shards`` (the antipode -- a correlated
+    rack failure of neighbours never takes both copies).  ``primaries``
+    defaults to every shard; each holder mirrors at most one primary."""
+    if primaries is None:
+        primaries = range(num_shards)
+    primary_map = [-1] * num_shards
+    replica_map = [-1] * num_shards
+    for p in primaries:
+        r = (p + max(1, num_shards // 2)) % num_shards
+        if primary_map[r] != -1:
+            raise ValueError(
+                f"replica holder {r} already mirrors shard {primary_map[r]}"
+            )
+        primary_map[r] = int(p)
+        replica_map[p] = int(r)
+    return ReplicaPlan(tuple(primary_map), tuple(replica_map), policy)
+
+
+@dataclasses.dataclass
+class ReplicaContext:
+    """Per-call replication operands for ``distributed_execute``.
+
+    ``rep_rows`` mirrors the arena-data layout ``(capacity, node_words)``
+    sharded over the mesh axis: replica-holder ``r``'s slice is a copy of
+    ``primary_map[r]``'s rows (zeros when r holds none) -- each shard
+    stores at most one extra shard's rows, the R=2 memory budget.
+    ``dead_mask`` is the traced per-call failure-detector verdict, so the
+    same compiled superstep serves healthy and degraded rounds.
+    """
+
+    plan: ReplicaPlan
+    rep_rows: object  # (capacity, node_words) int32, holder-sharded
+    dead_mask: object  # (P,) bool
+
+
+def _serve_shard(owner, rec_id, rep_ctx):
+    """The switch's serve map: which shard answers a read at ``owner``'s
+    range under the fan-out policy.  Identity when replication is off."""
+    if rep_ctx is None:
+        return owner
+    replica_arr, dead_mask, policy = rep_ctx
+    num = replica_arr.shape[0]
+    safe = jnp.clip(owner, 0, num - 1)
+    alt = replica_arr[safe]
+    # a dead replica holder is no fallback: its copy died with it
+    has_alt = (alt >= 0) & (owner >= 0) & ~dead_mask[jnp.clip(alt, 0, num - 1)]
+    dead = dead_mask[safe]
+    if policy == "spread":
+        redirect = has_alt & (dead | ((rec_id % 2) == 1))
+    elif policy == "failover":
+        redirect = has_alt & dead
+    else:  # "primary"
+        redirect = jnp.zeros_like(has_alt)
+    return jnp.where(redirect, alt, owner).astype(jnp.int32)
+
+
 def pack_requests(ids, home, ptr, scratch, mut_words: int = 0) -> jnp.ndarray:
     B, S = scratch.shape
     rec = jnp.zeros((B, record_width(S, mut_words)), jnp.int32)
@@ -196,6 +296,7 @@ def _local_superstep(
     max_iters: int,
     adaptive: bool = False,
     logic_fn=None,
+    rep=None,
 ):
     """Run up to ``k_local`` iterations for locally-owned ACTIVE requests.
 
@@ -204,11 +305,36 @@ def _local_superstep(
     identities, so results are bit-identical while remote-heavy supersteps
     stop paying for dead chase work.  ``logic_fn`` substitutes the
     pulse_chase kernel's vectorized iterator body for the per-lane vmap.
+
+    ``rep = (rep_rows, primary_arr, dead_mask, policy)`` enables hot-shard
+    replica serving: this shard additionally chases records whose pointer
+    lands in its mirrored primary's range (always under ``"spread"``, only
+    while the primary is dead under ``"failover"``), reading from its
+    replica rows.  A shard marked dead in ``dead_mask`` refuses service on
+    its *own* range -- its arena is the one that failed.
     """
     S = it.scratch_words
     lo = bounds[my_shard]
     hi = bounds[my_shard + 1]
     perm_ok = translation.check_access(perms, my_shard, PERM_READ)
+    rep_kwargs = {}
+    if rep is not None:
+        rep_rows, primary_arr, dead_mask, policy = rep
+        num = primary_arr.shape[0]
+        prim = primary_arr[my_shard]
+        prim_safe = jnp.clip(prim, 0, num - 1)
+        holds = (prim >= 0) & ~dead_mask[my_shard]
+        rep_on = holds if policy == "spread" else (holds & dead_mask[prim_safe])
+        rep_kwargs = dict(
+            rep_data=rep_rows,
+            rep_lo=bounds[prim_safe],
+            rep_hi=bounds[prim_safe + 1],
+            rep_base=jnp.int32(0),
+            rep_on=rep_on,
+            rep_perm_ok=translation.check_access(perms, prim_safe, PERM_READ),
+        )
+        # a dead shard's own arena is gone: collapse its servable range
+        hi = jnp.where(dead_mask[my_shard], lo, hi)
 
     def step(st):
         ptr, scratch, status, iters = st
@@ -224,6 +350,7 @@ def _local_superstep(
             local_hi=hi,
             perm_ok=perm_ok,
             logic_fn=logic_fn,
+            **rep_kwargs,
         )
 
     ptr = pool[:, F_PTR]
@@ -492,9 +619,16 @@ def _route_decide(
     drain_done: bool = False,
     mut_base: int | None = None,
     drop_mask: jnp.ndarray | None = None,
+    rep_ctx=None,
 ):
     """Switch decision + leaver extraction: the collective-free half of a
     routed superstep.
+
+    ``rep_ctx = (replica_arr, dead_mask, policy)`` applies the replica
+    serve map (``_serve_shard``) to ACTIVE reads: a record bound for a
+    dead (or spread-balanced) primary is delivered to the shard holding
+    its replica instead.  Faults are still judged on the raw owner -- an
+    unmappable pointer is a switch fault regardless of replication.
 
     Computes each record's next shard, marks switch-level faults, packs the
     records that fit under the per-link capacity into a ``(P, Cp, R)`` send
@@ -543,6 +677,7 @@ def _route_decide(
     pool = pool.at[:, F_STATUS].set(status)
     active = status == STATUS_ACTIVE
 
+    serve = _serve_shard(owner, pool[:, F_ID], rep_ctx)
     if return_to_cpu:
         # PULSE-ACC (Fig. 9): a traversal leaving this node must return to its
         # home (CPU) node, which re-issues it -- route non-local actives home.
@@ -553,9 +688,9 @@ def _route_decide(
         at_home = active & (pool[:, F_HOME] == my_shard) & (owner != my_shard)
         dest = jnp.where(at_home, owner, dest)
     elif drain_done:
-        dest = jnp.where(active, owner, my_shard)
+        dest = jnp.where(active, serve, my_shard)
     else:
-        dest = jnp.where(active, owner, pool[:, F_HOME])
+        dest = jnp.where(active, serve, pool[:, F_HOME])
     if mut_base is not None:
         # staged mutations route to their commit shard (ALLOC -> home)
         cdest = jnp.where(is_alloc, pool[:, F_HOME], towner)
@@ -672,6 +807,7 @@ def _route(
     fabric: str = "dense",
     mut_base: int | None = None,
     drop_mask: jnp.ndarray | None = None,
+    rep_ctx=None,
 ):
     """Switch routing: deliver records to their next shard in one superstep.
 
@@ -700,6 +836,7 @@ def _route(
         drain_done=drain_done,
         mut_base=mut_base,
         drop_mask=drop_mask,
+        rep_ctx=rep_ctx,
     )
     arrivals = _exchange(
         send, axis_name, num_shards, fabric=fabric, my_shard=my_shard
@@ -708,12 +845,14 @@ def _route(
     return merged, n_routed, n_dropped_valid
 
 
-def _remote_active(pool, bounds, my_shard, mut_base: int | None = None):
+def _remote_active(pool, bounds, my_shard, mut_base: int | None = None, rep_ctx=None):
     """Active records this shard cannot serve (owner elsewhere / invalid).
 
     A write-pending record's effective destination is its commit shard
     (ALLOC -> home), so a staged remote write keeps the fabric scheduled
-    even when every cur_ptr is local."""
+    even when every cur_ptr is local.  Under replication the serve map
+    decides remoteness, so a record bound for a dead primary's replica
+    keeps the fabric scheduled too."""
     active = pool[:, F_STATUS] == STATUS_ACTIVE
     owner = translation.owner_of(bounds, pool[:, F_PTR])
     if mut_base is not None:
@@ -725,6 +864,8 @@ def _remote_active(pool, bounds, my_shard, mut_base: int | None = None):
             translation.owner_of(bounds, pool[:, mut_base + 1]),
         )
         owner = jnp.where(pendm, towner, owner)
+    else:
+        owner = _serve_shard(owner, pool[:, F_ID], rep_ctx)
     return (active & (owner != my_shard)).sum()
 
 
@@ -744,8 +885,13 @@ def make_superstep(
     mutate: bool = False,
     drop_prob: float = 0.0,
     drop_seed: int = 0,
+    replication: ReplicaPlan | None = None,
 ):
     """Builds the jittable per-shard superstep: local run -> switch route.
+
+    ``replication`` (read path only) adds two operands after ``perms`` --
+    the holder-sharded replica rows and the traced ``dead_mask`` -- and
+    applies the plan's serve map to chase and route decisions.
 
     ``do_route=False`` builds the compacted *local-only* superstep: when every
     surviving traversal is already at its owning shard, the fabric has nothing
@@ -768,6 +914,11 @@ def make_superstep(
     logic_fn = _kernel_logic(it) if local_backend == "kernel" else None
     mut_base = F_SCRATCH + it.scratch_words if mutate else None
     inject_drop = drop_prob > 0.0 and do_route
+    if replication is not None and mutate:
+        raise ValueError("replication is a read-path feature (writes park)")
+    if replication is not None:
+        primary_arr = jnp.asarray(replication.primary_map, jnp.int32)
+        replica_arr = jnp.asarray(replication.replica_map, jnp.int32)
 
     def _mask(pool, my_shard, fault_args):
         if not inject_drop:
@@ -776,12 +927,19 @@ def make_superstep(
             pool.shape[0], drop_prob, drop_seed, my_shard, fault_args[0]
         )
 
-    def superstep(pool, arena_rows, bounds, perms, *fault_args):
+    def superstep(pool, arena_rows, bounds, perms, *extra):
         CACHE_STATS.traces += 1  # trace-time side effect: counts recompiles
         my_shard = jax.lax.axis_index(axis_name).astype(jnp.int32)
+        if replication is not None:
+            rep_rows, dead_mask, *fault_args = extra
+            rep = (rep_rows, primary_arr, dead_mask, replication.policy)
+            rep_ctx = (replica_arr, dead_mask, replication.policy)
+        else:
+            fault_args = extra
+            rep = rep_ctx = None
         pool = _local_superstep(
             it, pool, arena_rows, bounds, perms, my_shard,
-            k_local=k_local, max_iters=max_iters, logic_fn=logic_fn,
+            k_local=k_local, max_iters=max_iters, logic_fn=logic_fn, rep=rep,
         )
         if do_route:
             pool, n_routed, n_drop = _route(
@@ -791,12 +949,13 @@ def make_superstep(
                 drain_done=drain_done,
                 fabric=fabric,
                 drop_mask=_mask(pool, my_shard, fault_args),
+                rep_ctx=rep_ctx,
             )
         else:
             n_routed = jnp.int32(0)
             n_drop = jnp.int32(0)
         n_active = (pool[:, F_STATUS] == STATUS_ACTIVE).sum()
-        n_remote = _remote_active(pool, bounds, my_shard)
+        n_remote = _remote_active(pool, bounds, my_shard, rep_ctx=rep_ctx)
         n_active = jax.lax.psum(n_active, axis_name)
         n_routed = jax.lax.psum(n_routed, axis_name)
         n_drop = jax.lax.psum(n_drop, axis_name)
@@ -1578,8 +1737,19 @@ def distributed_execute(
     fabric: str = "dense",
     local_backend: str = "xla",
     fault_injector=None,
+    replication: ReplicaContext | None = None,
 ):
     """Run a batch of traversals over a range-partitioned arena on a mesh.
+
+    ``replication`` (read path, dispatched schedule) threads a
+    ``ReplicaContext`` through every superstep: the serve map redirects
+    reads bound for dead (or spread-balanced) primaries to their replica
+    holders, which chase them from their mirrored rows -- replicas are
+    bit-identical by construction, so final ``(ptr, scratch, status,
+    iters)`` match the failure-free run exactly; only ``hops`` and
+    superstep counts may differ (the redirect changes *where* records are
+    served, never their state trajectory).  A dead shard with no replica
+    simply cannot serve its range -- callers must not route reads there.
 
     ``schedule`` selects the superstep engine (``fused`` is the boolean
     shorthand kept for callers predating the pipelined schedule):
@@ -1646,6 +1816,7 @@ def distributed_execute(
     """
     kill_at = None
     delay_s = 0.0
+    delay_shard = None
     drop_prob = 0.0
     drop_seed = 0
     if fault_injector is not None:
@@ -1655,6 +1826,7 @@ def distributed_execute(
         drop_prob, drop_seed = float(plan.drop_prob), int(plan.drop_seed)
         if plan.delay_shard is not None:
             delay_s = float(plan.delay_s)
+            delay_shard = int(plan.delay_shard)
     if schedule is None:
         schedule = "fused" if fused else "dispatched"
     if schedule not in ("dispatched", "fused", "pipelined"):
@@ -1675,6 +1847,21 @@ def distributed_execute(
             "mutating iterators are not supported on the pulse_chase kernel "
             "local backend yet; use local_backend='xla'"
         )
+    if replication is not None:
+        if mutate:
+            raise ValueError(
+                "replication serves the READ path only: writes to a dead "
+                "shard park under backoff until recovery rebuilds it"
+            )
+        if return_to_cpu:
+            raise ValueError(
+                "replication is incompatible with the return_to_cpu ablation"
+            )
+        if schedule in ("fused", "pipelined"):
+            raise ValueError(
+                "replication runs on the dispatched schedule (results are "
+                "schedule-invariant, so degraded rounds fall back to it)"
+            )
     fused = schedule in ("fused", "pipelined")
     num_shards = arena.num_shards
     P_axis = mesh.shape[axis_name]
@@ -1816,6 +2003,8 @@ def distributed_execute(
             return out[0], out[1], new_arena
         return out
 
+    rep_plan = replication.plan if replication is not None else None
+
     def get_step(capacity: int | None, do_route: bool):
         # cached across calls: the serving loop re-enters distributed_execute
         # every scheduling round with identical parameters, and a per-call
@@ -1823,7 +2012,7 @@ def distributed_execute(
         key = (
             it, mesh, axis_name, num_shards, k_local, max_iters,
             return_to_cpu, drain_done, capacity, do_route, fabric,
-            local_backend, mutate, drop_prob, drop_seed,
+            local_backend, mutate, drop_prob, drop_seed, rep_plan,
         )
         if key not in _STEP_CACHE:
             CACHE_STATS.misses += 1
@@ -1834,9 +2023,12 @@ def distributed_execute(
                 link_capacity=capacity, drain_done=drain_done,
                 do_route=do_route, fabric=fabric, local_backend=local_backend,
                 mutate=mutate, drop_prob=drop_prob, drop_seed=drop_seed,
+                replication=rep_plan,
             )
-            # fault-injected fabric loss adds one trailing traced step_idx
-            # operand (the drop mask is keyed on the superstep index)
+            # replication adds (holder-sharded replica rows, replicated
+            # dead mask); fault-injected fabric loss adds one trailing
+            # traced step_idx operand (the drop mask is keyed on it)
+            rep_specs = (P(axis_name), P()) if rep_plan is not None else ()
             drop_specs = (P(),) if (drop_prob > 0.0 and do_route) else ()
             if mutate:
                 in_specs = (
@@ -1846,7 +2038,9 @@ def distributed_execute(
                     P(axis_name), P(axis_name), P(axis_name), P(), P(), P(), P(),
                 )
             else:
-                in_specs = (P(axis_name), P(axis_name), P(), P()) + drop_specs
+                in_specs = (
+                    (P(axis_name), P(axis_name), P(), P()) + rep_specs + drop_specs
+                )
                 out_specs = (P(axis_name), P(), P(), P(), P())
             _STEP_CACHE[key] = jax.jit(
                 shard_map(
@@ -1856,6 +2050,22 @@ def distributed_execute(
         else:
             CACHE_STATS.hits += 1
         return _STEP_CACHE[key]
+
+    if replication is not None:
+        rep_rows_dev = jax.device_put(
+            jnp.asarray(replication.rep_rows, jnp.int32),
+            NamedSharding(mesh, P(axis_name, None)),
+        )
+        dead_mask_dev = jax.device_put(
+            jnp.asarray(replication.dead_mask, bool), NamedSharding(mesh, P())
+        )
+        rep_args = (rep_rows_dev, dead_mask_dev)
+    else:
+        rep_args = ()
+
+    if delay_s > 0.0:
+        _bnp = np.asarray(arena.bounds)
+        _dlo, _dhi = int(_bnp[delay_shard]), int(_bnp[delay_shard + 1])
 
     routed_per_step = []
     active_per_step = []
@@ -1872,9 +2082,24 @@ def distributed_execute(
         if kill_at is not None and steps + 1 >= kill_at:
             fault_injector.fire(steps + 1)
         if delay_s > 0.0:
-            # straggler shard: the BSP barrier makes one slow memory node
-            # delay every superstep, which is exactly a host-loop sleep
-            time.sleep(delay_s)
+            # attributable straggler: the slow memory node extends the BSP
+            # barrier only on supersteps where it actually serves work (an
+            # ACTIVE record pointing into its range).  Reads fanned out to
+            # its replica cost it nothing -- which is what makes a per-shard
+            # watchdog probe attributable: the probe to the straggler is
+            # slow, probes elsewhere are not.
+            serving = True
+            if replication is not None and int(
+                replication.plan.replica_map[delay_shard]
+            ) >= 0:
+                serving = not bool(np.asarray(replication.dead_mask)[delay_shard])
+            if serving:
+                pg = np.asarray(pool_global)
+                act = pg[:, F_STATUS] == STATUS_ACTIVE
+                ptrs = pg[:, F_PTR]
+                serving = bool(np.any(act & (ptrs >= _dlo) & (ptrs < _dhi)))
+            if serving:
+                time.sleep(delay_s)
         if compact:
             # power-of-two envelope of the per-link demand; the ladder keeps
             # the number of distinct compiled supersteps at O(log L)
@@ -1899,7 +2124,7 @@ def distributed_execute(
         else:
             pool_global, n_active, n_routed, n_drop, n_remote = get_step(
                 step_capacity, do_route
-            )(pool_global, arena_data, bounds, perms, *drop_args)
+            )(pool_global, arena_data, bounds, perms, *rep_args, *drop_args)
         steps += 1
         routed_per_step.append(int(n_routed))
         active_per_step.append(int(n_active))

@@ -37,12 +37,17 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core import routing
 from repro.core.arena import H_EPOCH, Arena
 from repro.distributed.checkpoint import CheckpointManager
 
 
 class RecoveryError(RuntimeError):
     """Snapshot/log state is unusable or replay diverged from the log."""
+
+
+class ReplicationError(RuntimeError):
+    """A replica diverged from its primary (the bit-identity invariant)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +120,44 @@ class CommitLog:
                 ) from None
         return out
 
+    def quanta(self) -> list[dict]:
+        """Entries that describe write quanta (truncation markers dropped)."""
+        return [e for e in self.entries() if "kind" not in e]
+
+    def truncate_through(self, seq: int) -> int:
+        """Compact: drop every entry with seq <= ``seq`` (they are folded
+        into a durable snapshot).  Returns the number of entries dropped.
+
+        Atomic by construction: survivors (headed by a ``kind: truncated``
+        marker that preserves the seq high-water mark across reopen) are
+        written to a ``.tmp`` sibling, fsynced, then ``os.replace``d over
+        the log and the directory entry fsynced.  A crash before the
+        replace leaves the old log plus a stray ``.tmp`` (ignored -- the
+        log path itself is all that is ever read); a crash after leaves
+        the compacted log.  Either way the snapshot + log pair replays to
+        the same arena.
+        """
+        keep = [e for e in self.entries() if int(e.get("seq", 0)) > seq]
+        dropped = len(self.entries()) - len(keep)
+        if dropped <= 0:
+            return 0
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            f.write(json.dumps({"seq": int(seq), "kind": "truncated"}) + "\n")
+            for e in keep:
+                f.write(json.dumps(e) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self._f.close()
+        os.replace(tmp, self.path)
+        dfd = os.open(self.path.parent, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+        self._f = open(self.path, "a", encoding="utf-8")
+        return dropped
+
     def close(self) -> None:
         if not self._f.closed:
             self._f.close()
@@ -176,9 +219,16 @@ class ArenaStore:
 
     # ---------------------------- snapshots -------------------------------
 
-    def snapshot(self, arena: Arena, log_seq: int | None = None) -> int:
+    def snapshot(
+        self, arena: Arena, log_seq: int | None = None, *, compact_log: bool = True
+    ) -> int:
         """Atomically persist the full arena at ``log_seq`` (default: the
-        log's current durable seq).  Returns the snapshot's log_seq."""
+        log's current durable seq).  Returns the snapshot's log_seq.
+
+        After the LATEST pointer flips (the snapshot is durable), the
+        commit log is compacted: entries with ``seq <= log_seq`` are folded
+        into the snapshot and replay never needs them again.  Pass
+        ``compact_log=False`` to keep the full history (debugging)."""
         seq = self.log.seq if log_seq is None else int(log_seq)
         heap = np.asarray(arena.heap)
         self.mgr._atomic_save(
@@ -199,6 +249,8 @@ class ArenaStore:
             },
         )
         self.snapshots_taken += 1
+        if compact_log:
+            self.log.truncate_through(seq)
         return seq
 
     def ensure_baseline(self, arena: Arena) -> None:
@@ -241,7 +293,7 @@ class ArenaStore:
         arena = snap.arena
         replayed = commits = 0
         last_seq = snap.log_seq
-        for e in self.log.entries():
+        for e in self.log.quanta():
             if int(e["seq"]) <= snap.log_seq:
                 continue
             it = self._iterators.get(e["it"])
@@ -277,6 +329,101 @@ class ArenaStore:
         self.log.close()
 
 
+# ------------------------------ replication ----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationConfig:
+    """Hot-shard replication knobs (R=2, log-shipping).
+
+    ``primaries`` names the shards to replicate (None = every shard gets a
+    mirror on its antipode holder, ``routing.make_replica_plan``).
+    ``policy`` is the read fan-out: "primary" (replica is a cold standby),
+    "failover" (replica serves only while the primary is suspected dead),
+    "spread" (odd record ids always read from the replica -- load
+    balancing).  ``verify_every_quantum`` asserts replica == primary rows
+    after each applied write quantum (the bit-identity invariant); cheap at
+    test scale, turn off for big arenas.
+    """
+
+    policy: str = "failover"
+    primaries: tuple[int, ...] | None = None
+    verify_every_quantum: bool = True
+
+
+class ReplicaSet:
+    """Log-shipping hot standby: a shadow arena kept bit-identical to the
+    primary by replaying every acknowledged write quantum through the
+    sequential-commit oracle.
+
+    The commit stream is already serialized in the canonical (class, slot,
+    id) order and every schedule is bit-identical to the oracle, so replica
+    = primary holds *by construction* -- there is no quorum or
+    anti-entropy; ``verify`` just asserts the invariant.  ``rep_rows``
+    materializes the device read-fan-out operand: holder shard r's slice
+    carries its primary's rows at local offset 0 (each holder mirrors at
+    most one shard, the honest R=2 memory budget).
+    """
+
+    def __init__(self, plan: routing.ReplicaPlan, arena: Arena):
+        self.plan = plan
+        self.shadow = arena  # frozen pytree: sharing the seed arena is safe
+        self.quanta_applied = 0
+
+    def apply_quantum(
+        self, it, ptr0, scratch0, *, max_iters: int, k_local: int, compact: bool
+    ) -> None:
+        """Ship one acknowledged write quantum to the standby."""
+        from repro.core.commit import sequential_commit_execute
+
+        _, _, self.shadow = sequential_commit_execute(
+            it, self.shadow, ptr0, scratch0,
+            max_iters=max_iters, k_local=k_local, compact=compact,
+        )
+        self.quanta_applied += 1
+
+    def verify(self, primary: Arena) -> None:
+        """Assert replica rows == primary rows for every replicated shard."""
+        b = np.asarray(primary.bounds)
+        pd = np.asarray(primary.data)
+        sd = np.asarray(self.shadow.data)
+        for holder, p in enumerate(self.plan.primary_map):
+            if p < 0:
+                continue
+            lo, hi = int(b[p]), int(b[p + 1])
+            if not np.array_equal(pd[lo:hi], sd[lo:hi]):
+                raise ReplicationError(
+                    f"replica of shard {p} (held by {holder}) diverged "
+                    f"from the primary after {self.quanta_applied} quanta"
+                )
+
+    def rep_rows(self) -> np.ndarray:
+        """(capacity, node_words) device operand for ``ReplicaContext``:
+        holder r's slice holds primary_map[r]'s rows at local offsets."""
+        sd = np.asarray(self.shadow.data)
+        b = np.asarray(self.shadow.bounds)
+        out = np.zeros_like(sd)
+        for holder, p in enumerate(self.plan.primary_map):
+            if p < 0:
+                continue
+            n = int(b[p + 1] - b[p])
+            cap = int(b[holder + 1] - b[holder])
+            if n > cap:
+                raise ReplicationError(
+                    f"holder {holder} range ({cap} rows) cannot mirror "
+                    f"shard {p} ({n} rows)"
+                )
+            out[int(b[holder]) : int(b[holder]) + n] = sd[int(b[p]) : int(b[p + 1])]
+        return out
+
+    def reset(self, arena: Arena, plan: routing.ReplicaPlan | None = None) -> None:
+        """Re-anchor the standby (post-recovery or post-reshard)."""
+        if plan is not None:
+            self.plan = plan
+        self.shadow = arena
+        self.quanta_applied = 0
+
+
 @dataclasses.dataclass
 class FaultToleranceConfig:
     """Serving-layer fault-tolerance knobs (PulseService ``fault_tolerance=``).
@@ -289,6 +436,15 @@ class FaultToleranceConfig:
     (0 = revive immediately), modeling the re-provisioning window.
     ``retry_budget`` bounds per-request retries; exhaustion retires the
     request with STATUS_RETRY.
+
+    ``replication`` turns on hot-shard replicas (see ReplicationConfig):
+    read quanta fan out to replicas per the policy, and a suspected-dead
+    primary keeps serving reads from its replica with zero retries charged
+    while recovery rebuilds it.  ``watchdog_timeout_s`` > 0 arms the
+    per-round shard watchdog: the service probes every shard with a
+    1-record traversal, feeds per-shard latencies to ``HeartbeatMonitor``,
+    and escalates shards whose probe exceeds the timeout to suspected-dead
+    -- catching delay-faulted stragglers that never raise ``ShardFailure``.
     """
 
     store: ArenaStore
@@ -299,3 +455,5 @@ class FaultToleranceConfig:
     backoff_jitter: float = 0.5
     dead_rounds: int = 0
     seed: int = 0
+    replication: ReplicationConfig | None = None
+    watchdog_timeout_s: float = 0.0  # 0 disables the shard watchdog

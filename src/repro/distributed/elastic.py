@@ -67,6 +67,7 @@ class ShardFailureDetector:
 
     def __init__(self, num_shards: int, timeout_rounds: int = 0):
         self._round = 0
+        self._suspected: set[int] = set()
         self.monitor = HeartbeatMonitor(
             num_shards, timeout_s=timeout_rounds, clock=lambda: self._round
         )
@@ -75,20 +76,32 @@ class ShardFailureDetector:
         """All shards healthy through round ``rnd`` (normal round end)."""
         self._round = rnd
         for h in self.monitor.hosts.values():
-            if h.healthy:
+            if h.healthy and h.host_id not in self._suspected:
                 self.monitor.beat(h.host_id)
 
     def suspect(self, shard: int, rnd: int):
         """A failure signal implicates ``shard``: freeze its beat so the
-        next sweep (at any later round) declares it dead."""
+        next sweep (at any later round) declares it dead.  The signal is
+        *targeted* -- every other healthy, unsuspected shard is beaten at
+        the (possibly advanced) clock first, so a mid-round sweep never
+        takes collateral victims whose round-end ``beat_all`` simply hasn't
+        happened yet, and one suspicion never erases another."""
         self._round = max(self._round, rnd)
-        self.monitor.hosts[shard].last_beat = self._round - self.monitor.timeout - 1
+        self._suspected.add(shard)
+        for h in self.monitor.hosts.values():
+            if h.healthy and h.host_id not in self._suspected:
+                self.monitor.beat(h.host_id)
+        for s in self._suspected:
+            self.monitor.hosts[s].last_beat = self._round - self.monitor.timeout - 1
 
     def sweep(self) -> list[int]:
-        return self.monitor.sweep()
+        dead = self.monitor.sweep()
+        self._suspected.difference_update(dead)
+        return dead
 
     def revive(self, shard: int):
         """Recovery finished: the shard serves again."""
+        self._suspected.discard(shard)
         self.monitor.beat(shard)
 
     def dead_shards(self) -> list[int]:
@@ -124,6 +137,94 @@ def plan_mesh_shape(
     if pods > 1:
         return (pods, data, model_parallel), ("pod", "data", "model"), used
     return (data, model_parallel), ("data", "model"), used
+
+
+@dataclasses.dataclass
+class ReshardEvent:
+    """One completed live reshard (feeds ServiceMetrics / benches)."""
+
+    requested_round: int
+    cutover_round: int
+    old_shards: int
+    new_shards: int
+    owner_epoch: int  # forwarding epoch installed at cutover
+    drain_rounds: int  # rounds spent waiting on the write barrier
+    wall_s: float
+
+
+class ReshardPlanner:
+    """State machine for an online 2x shard-count change.
+
+    The protocol (PULSE's range partition makes it pointer-rewrite-free):
+
+      1. ``request`` pins the target shard count (exact 2x grow or shrink);
+      2. **drain**: the serving loop stops launching new quanta for the
+         affected structures and waits for every in-flight quantum to
+         retire -- the same barrier the write path already uses, so no
+         record is ever in flight across the partition change;
+      3. **cutover**: the arena is re-partitioned (``arena.remap_shards``,
+         bounds/allocator-register surgery only), the mesh is rebuilt at
+         the new width, per-shard serving state forwards through a new
+         ``VersionedOwnerMap`` epoch, and a marker + snapshot land in the
+         commit log so recovery never straddles two partitions;
+      4. ``complete`` resumes admission.
+
+    The planner owns phases and accounting; ``PulseService.step`` drives it
+    (``should_cutover`` per round until the barrier clears).  The result is
+    bit-identical to a cold rebuild at the new shard count because the
+    remap itself is deterministic and nothing routes during the swap.
+    """
+
+    def __init__(self):
+        self.phase = "idle"  # idle | draining | cutover
+        self.target: int | None = None
+        self._requested_round = 0
+        self._drain_rounds = 0
+        self._t0 = 0.0
+        self.events: list[ReshardEvent] = []
+
+    def request(self, new_num_shards: int, *, current: int, rnd: int) -> None:
+        if self.phase != "idle":
+            raise RuntimeError(f"reshard already in progress ({self.phase})")
+        new_num_shards = int(new_num_shards)
+        if new_num_shards != 2 * current and current != 2 * new_num_shards:
+            raise ValueError(
+                f"live reshard supports exact 2x changes, {current} -> "
+                f"{new_num_shards}"
+            )
+        self.phase = "draining"
+        self.target = new_num_shards
+        self._requested_round = rnd
+        self._drain_rounds = 0
+        self._t0 = time.perf_counter()
+
+    def should_cutover(self, in_flight: int) -> bool:
+        """Called once per scheduling round while draining; True exactly
+        once, when the write barrier has cleared."""
+        if self.phase != "draining":
+            return False
+        if in_flight > 0:
+            self._drain_rounds += 1
+            return False
+        self.phase = "cutover"
+        return True
+
+    def complete(self, *, rnd: int, old_shards: int, owner_epoch: int) -> ReshardEvent:
+        if self.phase != "cutover":
+            raise RuntimeError(f"complete() in phase {self.phase}")
+        ev = ReshardEvent(
+            requested_round=self._requested_round,
+            cutover_round=rnd,
+            old_shards=old_shards,
+            new_shards=self.target,
+            owner_epoch=owner_epoch,
+            drain_rounds=self._drain_rounds,
+            wall_s=time.perf_counter() - self._t0,
+        )
+        self.events.append(ev)
+        self.phase = "idle"
+        self.target = None
+        return ev
 
 
 @dataclasses.dataclass

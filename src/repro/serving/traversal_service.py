@@ -44,9 +44,12 @@ from collections import deque
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
-from repro.core.arena import NULL
+from repro.core import routing
+from repro.core.arena import NULL, remap_shards
 from repro.core.engine import PulseEngine
 from repro.core.faults import ShardFailure
 from repro.core.iterator import (
@@ -137,6 +140,15 @@ class ServiceMetrics:
     retries: int = 0
     retry_exhausted: int = 0  # requests retired STATUS_RETRY (budget spent)
     recovery_ms_total: float = 0.0
+    # replication + elasticity: read quanta that fanned out to a replica
+    # while a primary was dead, write quanta shipped to the hot standby,
+    # watchdog probe accounting, and completed live reshards
+    failover_quanta: int = 0
+    replica_quanta: int = 0
+    watchdog_probes: int = 0
+    watchdog_suspects: int = 0
+    reshards: int = 0
+    reshard_drain_rounds: int = 0
 
     def _pct(self, p: float) -> float:
         if not self.latencies_ms:
@@ -183,6 +195,28 @@ class ServiceMetrics:
             f"throughput={self.throughput_rps:.0f} req/s "
             f"util={self.utilization:.0%} shed={self.shed}"
         )
+
+
+def _make_probe_iterator() -> PulseIterator:
+    """One-touch read iterator for the shard watchdog: loads a single node
+    from a chosen shard's range and finishes.  It runs through the same
+    dispatched superstep path as real traffic, so a delay-faulted straggler
+    stalls the probe for its full injected latency -- exactly the signal the
+    watchdog escalates to suspected-dead (a straggler never raises
+    ``ShardFailure`` on its own; this closes that blind spot)."""
+
+    def end_fn(node, ptr, scr):
+        return jnp.bool_(True), scr.at[0].set(node[0])
+
+    def next_fn(node, ptr, scr):
+        return jnp.int32(NULL), scr
+
+    return PulseIterator(
+        scratch_words=1, next_fn=next_fn, end_fn=end_fn, name="shard_probe"
+    )
+
+
+_PROBE_IT = _make_probe_iterator()
 
 
 class _SlotGroup:
@@ -301,8 +335,20 @@ class PulseService:
         self._dead_until: dict[int, int] = {}  # shard -> revive round
         self._ft_rng = None
         self._writes_since_snapshot = 0
+        # hot-shard replication (arena_ft.ReplicationConfig): a log-shipped
+        # standby mirrors designated shards; reads fan out to it when a
+        # primary dies (or always, under policy="spread")
+        self._replicas = None
+        # per-quantum shard watchdog (ft.watchdog_timeout_s > 0): probes on
+        # a logical round clock catch stragglers that never raise
+        self._watchdog = None
+        self._wd_round = -1
         if self.ft is not None:
-            from repro.distributed.elastic import ShardFailureDetector
+            from repro.distributed.arena_ft import ReplicaSet
+            from repro.distributed.elastic import (
+                HeartbeatMonitor,
+                ShardFailureDetector,
+            )
 
             for name, spec in structures.items():
                 if spec.writes:
@@ -311,10 +357,46 @@ class PulseService:
             self.ft.store.ensure_baseline(engine.arena)
             self._detector = ShardFailureDetector(engine.arena.num_shards)
             self._ft_rng = random.Random(self.ft.seed)
+            rep = getattr(self.ft, "replication", None)
+            if rep is not None:
+                if engine.mesh is None or engine.arena.num_shards < 2:
+                    raise ValueError(
+                        "replication needs a distributed engine (mesh) with "
+                        ">= 2 shards"
+                    )
+                plan = routing.make_replica_plan(
+                    engine.arena.num_shards, rep.primaries, policy=rep.policy
+                )
+                self._replicas = ReplicaSet(plan, engine.arena)
+            if getattr(self.ft, "watchdog_timeout_s", 0.0) > 0:
+                if engine.mesh is None or engine.arena.num_shards < 2:
+                    raise ValueError(
+                        "the shard watchdog needs a distributed engine (mesh)"
+                    )
+                # timeout of one round on the logical clock = a shard is
+                # suspected only after TWO consecutive slow probes -- one
+                # transient scheduling hiccup on a loaded host never
+                # degrades a healthy shard
+                self._watchdog = HeartbeatMonitor(
+                    engine.arena.num_shards,
+                    timeout_s=1,
+                    clock=lambda: self._wd_round,
+                )
+        # live resharding: owner-function epochs + the drain/cutover planner
+        from repro.distributed.elastic import ReshardPlanner
+        from repro.distributed.sharding import VersionedOwnerMap
+
+        self._owner_map = VersionedOwnerMap(np.asarray(engine.arena.bounds))
+        self._reshard = ReshardPlanner()
         self._pending_arrivals: list[TraversalRequest] = []
         # retirement events (writes?, request) pushed by whichever thread
         # retires; accounting drains them on the main thread
         self._emit: deque = deque()
+        if self._watchdog is not None:
+            # compile + warm the probe path so the first timed watchdog
+            # round does not read XLA compile time as a stall
+            for s in range(engine.arena.num_shards):
+                self._probe_shard(s, warm=True)
 
     # ------------------------------ intake -----------------------------------
 
@@ -526,11 +608,13 @@ class PulseService:
         # so a fixed-width batch costs one compiled shape per group.
         occ = g.occupied()
         log_writes = self.ft is not None and g.spec.writes
+        rep = self._replicas
 
         def run():
             t0 = time.perf_counter()
             p0 = g.ptr.copy()
             s0 = g.scratch.copy()
+            rep_ctx = None if g.spec.writes else self._replica_ctx()
             res = self.engine.execute(
                 g.spec.iterator,
                 p0.copy(),
@@ -541,7 +625,12 @@ class PulseService:
                 fused=self.fused,
                 schedule=self.schedule,
                 fabric=self.fabric,
+                replication=rep_ctx,
             )
+            fanned_out = rep_ctx is not None and bool(
+                np.asarray(rep_ctx.dead_mask).any()
+            )
+            shipped = False
             if log_writes:
                 # durability point: the quantum is acknowledged once its
                 # *inputs* are in the fsynced log (replaying them through
@@ -559,10 +648,23 @@ class PulseService:
                 if self._writes_since_snapshot >= self.ft.snapshot_every:
                     store.snapshot(res.arena, seq)
                     self._writes_since_snapshot = 0
-            return res, time.perf_counter() - t0
+                if rep is not None:
+                    # ship the quantum's *inputs* to the hot standby: both
+                    # copies apply the same serialized commit stream, so the
+                    # replica is bit-identical to the primary by construction
+                    rep.apply_quantum(
+                        g.spec.iterator, p0, s0,
+                        max_iters=quantum, k_local=4, compact=self.compact,
+                    )
+                    if self.ft.replication.verify_every_quantum:
+                        rep.verify(res.arena)
+                    shipped = True
+            return res, time.perf_counter() - t0, fanned_out, shipped
 
         def apply(out):
-            res, dt_s = out
+            res, dt_s, fanned_out, shipped = out
+            self.metrics.failover_quanta += int(fanned_out)
+            self.metrics.replica_quanta += int(shipped)
             self._apply_result(g, occ, res, dt_s, rnd)
 
         return QuantumWork(label=g.name, run=run, apply=apply)
@@ -621,13 +723,211 @@ class PulseService:
         m.recovery_ms_total += (time.perf_counter() - t0) * 1e3
         self._dead_until[e.shard] = rnd + 1 + self.ft.dead_rounds
         g = self.groups.get(e.label) if e.label else None
-        if g is not None:
-            self._register_retry(g, rnd)
+        if g is None:
+            return
+        if not g.spec.writes and self._has_live_replica(e.shard):
+            # hot-standby fan-out: the failed call mutated nothing, so the
+            # group's slot state is intact and simply re-runs next round --
+            # now redirected to the replica.  Read-only tenants ride through
+            # the death with zero STATUS_RETRY and zero backoff while the
+            # snapshot+log recovery above rebuilds the primary.
+            return
+        self._register_retry(g, rnd)
+
+    def _has_live_replica(self, shard: int) -> bool:
+        """True when ``shard``'s range can be served from a replica holder
+        that is itself alive (policy "primary" never redirects)."""
+        if self._replicas is None or self._replicas.plan.policy == "primary":
+            return False
+        rm = self._replicas.plan.replica_map
+        if not 0 <= shard < len(rm):
+            return False
+        holder = int(rm[shard])
+        return holder >= 0 and holder not in self._detector.dead_shards()
+
+    def _replica_ctx(self) -> routing.ReplicaContext | None:
+        """Read fan-out operands for this quantum.  None when replication is
+        off or nothing would redirect -- failover policy with every primary
+        alive keeps the fast compiled schedule; "spread" always fans out."""
+        if self._replicas is None:
+            return None
+        P = self.engine.arena.num_shards
+        rm = self._replicas.plan.replica_map
+        down = {s for s in self._detector.dead_shards() if 0 <= s < P}
+        dead = np.zeros(P, bool)
+        for s in down:
+            # only fan out ranges whose holder is itself alive: marking a
+            # primary dead with a dead holder leaves its range unservable
+            # and the routed records would bounce forever.  A suspected
+            # (slow) shard with a slow holder keeps serving its own range.
+            holder = int(rm[s]) if s < len(rm) else -1
+            if holder >= 0 and holder not in down:
+                dead[s] = True
+        if not dead.any() and self._replicas.plan.policy != "spread":
+            return None
+        return routing.ReplicaContext(
+            plan=self._replicas.plan,
+            rep_rows=self._replicas.rep_rows(),
+            dead_mask=dead,
+        )
+
+    def _probe_shard(self, shard: int, *, warm: bool = False) -> float:
+        """Time one single-record read against ``shard`` through the real
+        dispatched superstep path.  ``warm=True`` compiles/warms only (no
+        fault injection, no failure handling), so service init does not eat
+        injected delays.  Live probes share the engine's fault-injector call
+        stream: ``kill_call`` indices count probe calls too."""
+        bounds = np.asarray(self.engine.arena.bounds)
+        if bounds[shard + 1] - bounds[shard] <= 0:
+            return 0.0  # empty range: nothing to probe
+        ptr0 = np.array([int(bounds[shard])], np.int32)
+        scr0 = np.zeros((1, 1), np.int32)
+        t0 = time.perf_counter()
+        try:
+            routing.distributed_execute(
+                _PROBE_IT, self.engine.arena, ptr0, scr0,
+                mesh=self.engine.mesh, axis_name=self.engine.axis_name,
+                max_iters=2, k_local=1, compact=True, schedule="dispatched",
+                fault_injector=None if warm else self.engine.fault_injector,
+            )
+        except ShardFailure as e:
+            if e.label is None:
+                e.label = "watchdog"
+            self._on_shard_failure(e, max(self._wd_round, 0))
+            return float("inf")
+        return time.perf_counter() - t0
+
+    def _run_watchdog(self, rnd: int) -> None:
+        """Per-round shard watchdog: probe every live shard, beat the ones
+        that answered within ``ft.watchdog_timeout_s``, and escalate missed
+        beats to suspected-dead.  This catches *stragglers* (delay faults)
+        that stall supersteps without ever raising ShardFailure: the next
+        round's reads fan out to the replica instead of waiting."""
+        m = self.metrics
+        if self._wd_round < 0:
+            # first round (or just resharded): baseline every shard as if
+            # beaten last round, so the two-consecutive-misses confirmation
+            # window starts counting from here
+            self._wd_round = rnd - 1
+            for s in self._watchdog.hosts:
+                self._watchdog.beat(s)
+        self._wd_round = rnd
+        dead_now = set(self._detector.dead_shards())
+        for s in range(self.engine.arena.num_shards):
+            if s in dead_now:
+                continue  # already degraded; do not stall on a dead shard
+            dt = self._probe_shard(s)
+            m.watchdog_probes += 1
+            if dt <= self.ft.watchdog_timeout_s:
+                self._watchdog.beat(s)
+        for s in self._watchdog.sweep():
+            if s in dead_now or s in self._detector.dead_shards():
+                continue
+            m.watchdog_suspects += 1
+            self._detector.suspect(s, rnd)
+            self._detector.sweep()
+            self._dead_until[s] = rnd + 1 + self.ft.dead_rounds
 
     def _revive_dead_shards(self, rnd: int) -> None:
         for k in [k for k, until in self._dead_until.items() if until <= rnd]:
             self._detector.revive(k)
+            if self._watchdog is not None and k in self._watchdog.hosts:
+                # re-arm the watchdog beat so a still-slow revived shard is
+                # re-suspected (sweep only reports *newly* missed beats)
+                self._watchdog.beat(k)
             del self._dead_until[k]
+
+    # ------------------------------ elasticity --------------------------------
+
+    def request_reshard(self, new_num_shards: int) -> None:
+        """Begin an online 2x shard-count change.  Admission pauses, every
+        in-flight quantum drains through the existing write-barrier
+        machinery, then the arena cuts over (``arena.remap_shards`` +
+        owner-epoch forwarding + mesh rebuild) and admission resumes.  The
+        result is bit-identical to a cold rebuild at the new shard count:
+        the remap is deterministic and nothing routes during the swap."""
+        self._reshard.request(
+            int(new_num_shards),
+            current=self.engine.arena.num_shards,
+            rnd=self.metrics.rounds,
+        )
+
+    def _in_flight(self) -> int:
+        return sum(int(g.occupied().sum()) for g in self.groups.values())
+
+    def _cutover(self, rnd: int) -> None:
+        m = self.metrics
+        old_p = self.engine.arena.num_shards
+        target = self._reshard.target
+        new_arena = remap_shards(self.engine.arena, target)
+        new_mesh = None
+        if self.engine.mesh is not None:
+            devs = jax.devices()
+            if len(devs) < target:
+                raise RuntimeError(
+                    f"reshard to {target} shards needs {target} devices, "
+                    f"have {len(devs)}"
+                )
+            new_mesh = Mesh(np.array(devs[:target]), (self.engine.axis_name,))
+        ep = self._owner_map.advance(np.asarray(new_arena.bounds))
+        old_epoch = ep.epoch - 1
+
+        def fwd(s: int) -> tuple[int, ...]:
+            return self._owner_map.forward_shard(
+                s, from_epoch=old_epoch, to_epoch=ep.epoch
+            )
+
+        # stale per-shard serving state (minted under the old owner
+        # function) forwards through the new epoch: a shard index never
+        # survives a reshard raw, only via range translation
+        self._dead_until = {
+            d: until for s, until in self._dead_until.items() for d in fwd(s)
+        }
+        if self._detector is not None:
+            from repro.distributed.elastic import ShardFailureDetector
+
+            old_dead = self._detector.dead_shards()
+            self._detector = ShardFailureDetector(target)
+            for s in old_dead:
+                for d in fwd(s):
+                    self._detector.suspect(d, rnd)
+            self._detector.sweep()
+        self.engine.reshard(new_arena, new_mesh)
+        if self._replicas is not None:
+            repc = self.ft.replication
+            prim = repc.primaries
+            if prim is not None:
+                prim = tuple(sorted({d for p in prim for d in fwd(p)}))
+            plan = routing.make_replica_plan(target, prim, policy=repc.policy)
+            # the standby reshards through the same deterministic remap, so
+            # primary and replica stay bit-identical across the cutover
+            self._replicas.reset(
+                remap_shards(self._replicas.shadow, target), plan
+            )
+        if self._watchdog is not None:
+            from repro.distributed.elastic import HeartbeatMonitor
+
+            self._watchdog = HeartbeatMonitor(
+                target, timeout_s=1, clock=lambda: self._wd_round
+            )
+            self._wd_round = -1  # re-arm the confirmation baseline
+        if self.ft is not None:
+            # a marker + snapshot land in the log so recovery replay never
+            # straddles two partitions
+            store = self.ft.store
+            seq = store.log.append(
+                {
+                    "kind": "reshard",
+                    "old_shards": old_p,
+                    "new_shards": target,
+                    "owner_epoch": ep.epoch,
+                }
+            )
+            store.snapshot(self.engine.arena, seq)
+            self._writes_since_snapshot = 0
+        ev = self._reshard.complete(rnd=rnd, old_shards=old_p, owner_epoch=ep.epoch)
+        m.reshards += 1
+        m.reshard_drain_rounds += ev.drain_rounds
 
     def _quantum_for_round(self, now_s: float) -> int:
         """SLO-aware quantum sizing.  With the bounds pinned (the default)
@@ -668,6 +968,7 @@ class PulseService:
             bool(self._pending_arrivals)
             or self.admission.pending() > 0
             or any(g.occupied().any() for g in self.groups.values())
+            or self._reshard.phase != "idle"
         )
 
     def step(self, rnd: int | None = None) -> None:
@@ -685,7 +986,15 @@ class PulseService:
         now = time.perf_counter()
         if self._detector is not None:
             self._revive_dead_shards(rnd)
-        self._admit(now, rnd)
+        if self._reshard.phase == "draining":
+            # reshard barrier: arrivals keep queueing, nothing admits, and
+            # the cutover fires the round the last in-flight quantum retires
+            self._intake(now, rnd)
+            if self._reshard.should_cutover(self._in_flight()):
+                self._cutover(rnd)
+                self._admit(now, rnd)
+        else:
+            self._admit(now, rnd)
         quantum = self._quantum_for_round(now)
         if m.quantum_min_used == 0 or quantum < m.quantum_min_used:
             m.quantum_min_used = quantum
@@ -720,6 +1029,8 @@ class PulseService:
                     raise
                 self._on_shard_failure(e, rnd)
         self._drain_emit()
+        if self._watchdog is not None:
+            self._run_watchdog(rnd)
         if self._detector is not None:
             self._detector.beat_all(rnd)
         m.rounds += 1

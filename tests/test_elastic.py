@@ -1,0 +1,328 @@
+"""Elastic arenas: live resharding, owner-map forwarding, hot-shard
+replication plumbing, commit-log compaction, and failure detection.
+
+Fast in-process tests cover the pure machinery (``remap_shards`` surgery,
+``VersionedOwnerMap`` forwarding, the ``ReshardPlanner`` state machine, the
+targeted-suspect detector semantics, and commit-log truncation incl. a
+crash mid-compaction).  The service-level matrix -- replication failover,
+read fan-out with zero retries, watchdog escalation of delay-only
+stragglers, and the live 4 -> 8 reshard vs a cold 8-shard run -- needs a
+real 8-shard mesh and runs in a subprocess with its own device count
+(tests/helpers/elastic_checks.py), like the other distributed suites.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import commit
+from repro.core.arena import (
+    H_BUMP,
+    H_COMMITS,
+    H_EPOCH,
+    H_FREE,
+    NULL,
+    ArenaBuilder,
+    remap_shards,
+)
+from repro.core.routing import F_ID, F_ITERS, F_PTR, F_SCRATCH, F_STATUS
+from repro.core.structures import linked_list
+from repro.distributed.arena_ft import ArenaStore, CommitLog
+from repro.distributed.elastic import ReshardPlanner, ShardFailureDetector
+from repro.distributed.sharding import VersionedOwnerMap
+
+ROOT = Path(__file__).resolve().parents[1]
+P = 4
+KEYS = np.arange(100, 124, dtype=np.int32)
+
+
+def _build(num_shards=P):
+    b = ArenaBuilder(256, 4, num_shards=num_shards, policy="interleaved")
+    head = linked_list.build_into(b, KEYS, KEYS * 2)
+    return b.finish(), head
+
+
+def _delete(arena, head, keys):
+    it = linked_list.delete_iterator()
+    p0, s0 = it.init(jnp.asarray(np.asarray(keys, np.int32)), head)
+    _, _, ar = commit.sequential_commit_execute(it, arena, p0, s0, max_iters=4096)
+    return ar
+
+
+def _find(arena, head, keys):
+    """Payload columns only: F_HOME/F_HOPS are partition metadata and
+    legitimately change with the shard count."""
+    it = linked_list.find_iterator()
+    p0, s0 = it.init(jnp.asarray(np.asarray(keys, np.int32)), head)
+    final, _ = commit.sequential_commit_execute(it, arena, p0, s0, max_iters=4096)
+    rec = np.asarray(final)
+    return rec[:, [F_ID, F_PTR, F_STATUS, F_ITERS] + list(range(F_SCRATCH, rec.shape[1]))]
+
+
+def _free_chain(arena, shard):
+    data = np.asarray(arena.data)
+    out, p = [], int(np.asarray(arena.heap)[shard, H_FREE])
+    while p != NULL:
+        out.append(p)
+        p = int(data[p, 0])
+    return out
+
+
+# ------------------------------ remap_shards ---------------------------------
+
+
+def test_remap_grow_preserves_traversals_and_free_chains():
+    arena, head = _build()
+    arena = _delete(arena, head, KEYS[3:15:2])  # carve free slots
+    grown = remap_shards(arena, 2 * P)
+    assert grown.num_shards == 2 * P
+    # pointers are global: every traversal answers identically
+    np.testing.assert_array_equal(
+        _find(grown, head, KEYS), _find(arena, head, KEYS)
+    )
+    b_old = np.asarray(arena.bounds)
+    b_new = np.asarray(grown.bounds)
+    for s in range(P):
+        lo, hi = int(b_old[s]), int(b_old[s + 1])
+        mid = (lo + hi) // 2
+        assert int(b_new[2 * s]) == lo and int(b_new[2 * s + 1]) == mid
+        # the parent's free chain is partitioned by the midpoint, pop
+        # order preserved within each child
+        parent = _free_chain(arena, s)
+        left, right = _free_chain(grown, 2 * s), _free_chain(grown, 2 * s + 1)
+        assert left == [p for p in parent if p < mid]
+        assert right == [p for p in parent if p >= mid]
+
+
+def test_remap_grow_shrink_roundtrip_bit_identical():
+    arena, head = _build()
+    arena = _delete(arena, head, KEYS[2:10])
+    back = remap_shards(remap_shards(arena, 2 * P), P)
+    for f in ("data", "bounds", "perms", "heap"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(back, f)), np.asarray(getattr(arena, f)), f
+        )
+
+
+def test_remap_splits_and_merges_allocator_registers():
+    arena, _ = _build()
+    h_old = np.asarray(arena.heap)
+    grown = remap_shards(arena, 2 * P)
+    h_new = np.asarray(grown.heap)
+    for s in range(P):
+        # epoch/commit bookkeeping duplicates on split...
+        assert h_new[2 * s, H_EPOCH] == h_new[2 * s + 1, H_EPOCH] == h_old[s, H_EPOCH]
+        assert (
+            h_new[2 * s, H_COMMITS]
+            == h_new[2 * s + 1, H_COMMITS]
+            == h_old[s, H_COMMITS]
+        )
+        # ...and exactly one child inherits the parent's bump frontier
+        mid = (
+            int(np.asarray(arena.bounds)[s]) + int(np.asarray(arena.bounds)[s + 1])
+        ) // 2
+        bump = int(h_old[s, H_BUMP])
+        if bump <= mid:
+            assert int(h_new[2 * s, H_BUMP]) == bump
+        else:
+            assert int(h_new[2 * s + 1, H_BUMP]) == bump
+
+
+def test_remap_rejects_non_2x():
+    arena, _ = _build()
+    assert remap_shards(arena, P) is arena
+    for bad in (3, 16, 0):
+        with pytest.raises(ValueError):
+            remap_shards(arena, bad)
+
+
+# ---------------------------- owner-map epochs -------------------------------
+
+
+def test_owner_map_forwarding():
+    m = VersionedOwnerMap([0, 64, 128, 192, 256])
+    assert m.epoch == 0
+    assert m.current.owner_of(70) == 1
+    ep = m.advance([0, 32, 64, 96, 128, 160, 192, 224, 256])
+    assert ep.epoch == m.epoch == 1
+    # each old shard forwards to exactly its two children
+    for s in range(4):
+        assert m.forward_shard(s, from_epoch=0) == (2 * s, 2 * s + 1)
+    # shrink direction: both children map back to the one parent
+    for s in range(8):
+        assert m.forward_shard(s, from_epoch=1, to_epoch=0) == (s // 2,)
+    mask = m.forward_mask([False, True, False, True], from_epoch=0)
+    np.testing.assert_array_equal(
+        mask, [False, False, True, True, False, False, True, True]
+    )
+
+
+def test_owner_map_validates():
+    m = VersionedOwnerMap([0, 64, 128])
+    with pytest.raises(ValueError):
+        m.advance([0, 32, 64, 96, 120])  # shrinks the address space
+    with pytest.raises(KeyError):
+        m.at(7)
+    with pytest.raises(ValueError):
+        m.forward_shard(2, from_epoch=0)
+    with pytest.raises(ValueError):
+        m.forward_mask([True], from_epoch=0)
+
+
+# --------------------------- reshard state machine ---------------------------
+
+
+def test_reshard_planner_lifecycle():
+    pl = ReshardPlanner()
+    assert pl.phase == "idle"
+    with pytest.raises(ValueError):
+        pl.request(6, current=4, rnd=0)  # not an exact 2x change
+    pl.request(8, current=4, rnd=3)
+    assert pl.phase == "draining"
+    with pytest.raises(RuntimeError):
+        pl.request(16, current=8, rnd=4)  # one at a time
+    with pytest.raises(RuntimeError):
+        pl.complete(rnd=4, old_shards=4, owner_epoch=1)  # barrier not cleared
+    assert not pl.should_cutover(in_flight=2)
+    assert not pl.should_cutover(in_flight=1)
+    assert pl.should_cutover(in_flight=0)
+    assert pl.phase == "cutover"
+    ev = pl.complete(rnd=7, old_shards=4, owner_epoch=1)
+    assert pl.phase == "idle" and pl.target is None
+    assert (ev.old_shards, ev.new_shards) == (4, 8)
+    assert ev.drain_rounds == 2 and ev.requested_round == 3
+    assert pl.events == [ev]
+    # shrink is also a legal 2x request
+    pl.request(2, current=4, rnd=9)
+    assert pl.target == 2
+
+
+# ---------------------------- failure detection ------------------------------
+
+
+def test_detector_suspect_is_targeted():
+    """Regression: a mid-round suspect() advances the logical clock; the
+    other shards' beats must advance with it or the next sweep takes
+    every shard as a collateral victim (timeout_rounds=0)."""
+    det = ShardFailureDetector(8)
+    det.beat_all(5)
+    det.suspect(3, rnd=6)  # failure signal lands before round 6's beat_all
+    assert det.sweep() == [3]
+    assert det.dead_shards() == [3]
+    det.beat_all(7)
+    assert det.sweep() == [] and det.dead_shards() == [3]
+    det.revive(3)
+    assert det.dead_shards() == []
+    # multiple suspects accumulate without collateral
+    det.suspect(1, rnd=8)
+    det.suspect(6, rnd=8)
+    assert sorted(det.sweep()) == [1, 6]
+    assert sorted(det.dead_shards()) == [1, 6]
+
+
+# --------------------------- commit-log compaction ---------------------------
+
+
+def _logged_writes(tmp, n_quanta=3):
+    """Serve ``n_quanta`` single-insert write quanta through the oracle,
+    logging each, from a fresh baseline snapshot."""
+    arena, head = _build()
+    store = ArenaStore(tmp)
+    it = linked_list.insert_iterator()
+    store.register_iterator("list_ins", it)
+    store.ensure_baseline(arena)
+    for i in range(n_quanta):
+        k = np.asarray([900 + i], np.int32)
+        p0, s0 = it.init(jnp.asarray(k), jnp.asarray(k * 2), head)
+        _, stats, arena = commit.sequential_commit_execute(
+            it, arena, p0, s0, max_iters=4096
+        )
+        store.log_quantum(
+            "list_ins", p0, s0, max_iters=4096, k_local=4, compact=True,
+            commits=stats.commits, epochs=stats.epochs,
+        )
+    return store, arena, head, it
+
+
+def test_snapshot_compacts_log_and_seq_survives(tmp_path):
+    store, arena, head, it = _logged_writes(tmp_path)
+    assert len(store.log.quanta()) == 3 and store.log.seq == 3
+    store.snapshot(arena)  # compact_log=True by default
+    # replay prefix folded into the snapshot; only the marker remains
+    assert store.log.quanta() == []
+    entries = store.log.entries()
+    assert entries == [{"seq": 3, "kind": "truncated"}]
+    # the high-water mark survives compaction AND reopen
+    assert store.log.seq == 3
+    rec, info = store.recover()
+    assert info.replayed_quanta == 0
+    np.testing.assert_array_equal(np.asarray(rec.data), np.asarray(arena.data))
+    store.close()
+    store2 = ArenaStore(tmp_path)
+    assert store2.log.seq == 3
+    seq = store2.log.append({"kind": "noop"})
+    assert seq == 4  # numbering continues, no reuse of folded seqs
+    store2.close()
+
+
+def test_crash_mid_truncate_keeps_old_log(tmp_path):
+    """A crash before ``os.replace`` leaves the full log plus a stray
+    ``.tmp``; reopen ignores the tmp and recovery still replays."""
+    store, arena, head, it = _logged_writes(tmp_path)
+    log_path = store.log.path
+    # crash simulation: the compacted survivor file exists but was never
+    # swapped in (truncate_through died before os.replace)
+    tmp = log_path.with_name(log_path.name + ".tmp")
+    tmp.write_text('{"seq": 3, "kind": "truncated"}\n')
+    store.close()
+
+    reopened = CommitLog(log_path)
+    assert len(reopened.quanta()) == 3 and reopened.seq == 3
+    reopened.close()
+    store2 = ArenaStore(tmp_path)
+    store2.register_iterator("list_ins", it)
+    rec, info = store2.recover()
+    assert info.replayed_quanta == 3
+    np.testing.assert_array_equal(np.asarray(rec.data), np.asarray(arena.data))
+    np.testing.assert_array_equal(np.asarray(rec.heap), np.asarray(arena.heap))
+    # a real truncate from the recovered position still works afterwards
+    store2.snapshot(rec)
+    assert store2.log.quanta() == [] and store2.log.seq == 3
+    store2.close()
+
+
+def test_truncate_noop_below_watermark(tmp_path):
+    store, arena, _, _ = _logged_writes(tmp_path)
+    assert store.log.truncate_through(0) == 0  # nothing <= 0: no rewrite
+    assert len(store.log.quanta()) == 3
+    assert store.log.truncate_through(2) == 2
+    assert [e["seq"] for e in store.log.quanta()] == [3]
+    assert store.log.seq == 3
+    store.close()
+
+
+# ------------------------ distributed elasticity matrix ----------------------
+
+
+@pytest.mark.slow
+def test_elasticity_distributed_subprocess():
+    """8-shard service matrix: replication failover, zero-retry read
+    fan-out, watchdog delay escalation, live 4 -> 8 reshard (sync+async)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "helpers" / "elastic_checks.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL ELASTICITY CHECKS PASSED" in proc.stdout
