@@ -40,9 +40,9 @@ def bench_kernels():
     logic = chase_ops.iterator_logic(it)
     for mode, use_pallas in (("interp", True), ("ref", False)):
         us = _time(
-            lambda: chase_ops.pulse_chase(
+            lambda up=use_pallas: chase_ops.pulse_chase(
                 ar.data, ptr0, scr0, st0, logic_fn=logic, num_steps=height,
-                use_pallas=use_pallas, interpret=True,
+                use_pallas=up, interpret=True,
             )
         )
         rows.append(dict(name=f"kernel/pulse_chase/{mode}", us_per_call=round(us, 1),
@@ -73,7 +73,7 @@ def bench_kernels():
     for mode, use_pallas in (("interp", True), ("ref", False)):
         rows.append(dict(
             name=f"kernel/paged_attention/{mode}",
-            us_per_call=round(_time(lambda: paged_attention(qd, kp, vp, pt, ln, interpret=True, use_pallas=use_pallas)), 1),
+            us_per_call=round(_time(lambda up=use_pallas: paged_attention(qd, kp, vp, pt, ln, interpret=True, use_pallas=up)), 1),
             derived="B4 H8 P8x16",
         ))
 
@@ -88,7 +88,7 @@ def bench_kernels():
     for mode, use_pallas in (("interp", True), ("ref", False)):
         rows.append(dict(
             name=f"kernel/ssd_scan/{mode}",
-            us_per_call=round(_time(lambda: ssd_scan(x, dt, A, B, C, chunk=128, interpret=True, use_pallas=use_pallas)), 1),
+            us_per_call=round(_time(lambda up=use_pallas: ssd_scan(x, dt, A, B, C, chunk=128, interpret=True, use_pallas=up)), 1),
             derived="B2 L512 H4 N64",
         ))
     return rows

@@ -257,7 +257,11 @@ def appendix_traversal_length():
         ar, head = ll.build(keys, values)
         it = ll.sum_iterator()
         ptr0, scr0 = it.init(jnp.asarray([head] * 64, jnp.int32))
-        run = jax.jit(lambda p, s: execute_batched(it, ar, p, s, max_iters=n + 2))
+        run = jax.jit(
+            lambda p, s, it=it, ar=ar, n=n: execute_batched(
+                it, ar, p, s, max_iters=n + 2
+            )
+        )
         run(ptr0, scr0)[0].block_until_ready()
         t0 = time.perf_counter()
         reps = 3

@@ -38,6 +38,11 @@ from repro.core.iterator import (
     execute_batched,
 )
 
+# Re-exported: the specialization predicate lives with the distributed
+# executor but is part of the engine's public surface (callers asking "will
+# this run probe-free?" shouldn't need to know which layer owns the proof).
+can_elide_access_check = routing.can_elide_access_check
+
 
 @dataclasses.dataclass
 class CpuNodeTrace:
@@ -298,13 +303,18 @@ class PulseEngine:
         # The iteration budget is a traced operand (not part of the key), so
         # SLO-aware quantum sizing in the serving layer re-enters the same
         # compiled executable with a different budget every round.
+        # Re-derive the access-check elision per call (perms can change
+        # between calls) and key the cache on it: a revocation flips the key
+        # back to the unspecialized executable instead of silently running
+        # the probe-free one.
+        elide = routing.can_elide_access_check(it, self.arena)
         ptr0 = jnp.array(ptr0, jnp.int32)
-        key = (it, int(ptr0.shape[0]))
+        key = (it, int(ptr0.shape[0]), elide)
         fn = self._local_jit.get(key)
         if fn is None:
             fn = jax.jit(
                 lambda arena, p, s, budget: execute_batched(
-                    it, arena, p, s, max_iters=budget
+                    it, arena, p, s, max_iters=budget, elide_access_check=elide
                 ),
                 donate_argnums=(1, 2),
             )

@@ -79,12 +79,40 @@ class Program:
     node_words: int
     name: str = "isa_program"
 
+    def __post_init__(self):
+        # structural validation only (shape/dtype/nonempty): semantic checks
+        # are the verifier's job (core.verify), and tests deliberately build
+        # semantically-corrupt Programs to exercise its rejections
+        code = np.asarray(self.code)
+        if code.ndim != 2 or code.shape[1] != 4:
+            raise ValueError(
+                f"program code must be (T, 4) [op, a, b, imm] rows, "
+                f"got shape {code.shape}"
+            )
+        if code.shape[0] == 0:
+            raise ValueError("empty program")
+        if not np.issubdtype(code.dtype, np.integer):
+            raise ValueError(f"program code must be integer, got {code.dtype}")
+        if self.scratch_words < 0 or self.node_words < 1:
+            raise ValueError(
+                f"need scratch_words >= 0 and node_words >= 1, got "
+                f"{self.scratch_words}/{self.node_words}"
+            )
+        object.__setattr__(self, "code", code.astype(np.int32, copy=False))
+
     def __len__(self) -> int:
         return self.code.shape[0]
 
     @property
     def mutates(self) -> bool:
-        """True iff the program uses any store-class opcode."""
+        """True iff the program CONTAINS any store-class opcode.
+
+        Whole-array opcode scan: the conservative fallback for unverified
+        programs.  A store-class op in dead code still returns True here;
+        ``verify.ProgramFacts.mutates`` is the reachability-based answer
+        (what ``as_pulse_iterator`` uses), so only programs that can
+        actually stage a mutation pay for the write path's record lanes.
+        """
         return bool(np.isin(self.code[:, 0], _MUTATORS).any())
 
     def disasm(self) -> str:
@@ -164,6 +192,12 @@ class Asm:
 
     # control flow -- forward only, via labels resolved at finish()
     def label(self, name: str):
+        if name in self._labels:
+            raise ValueError(
+                f"duplicate label {name!r} (first defined at pc "
+                f"{self._labels[name]}): a silent redefinition would "
+                f"retarget every earlier jump"
+            )
         self._labels[name] = len(self.rows)
 
     def _jump(self, op, a, b, target: str):
@@ -233,6 +267,11 @@ def validate(code: np.ndarray, scratch_words: int, node_words: int) -> None:
         for r in (int(a), int(b)):
             if op != HALT and not (0 <= r < NUM_REGS):
                 raise ValueError(f"register {r} out of range at pc={i}")
+        # three-register ALU forms read rs2 from the imm column: it is a
+        # register index and must be bounds-checked like a/b (the VM clips
+        # at runtime, which would silently read the wrong register)
+        if op in (ADD, SUB, MUL, DIV, AND, OR) and not (0 <= int(imm) < NUM_REGS):
+            raise ValueError(f"register {int(imm)} out of range at pc={i}")
     # every straight-line path must hit a terminal: cheap sufficient check --
     # the last instruction must be a terminal or an unconditional jump target
     # chain ending in one.  (Forward-only control flow makes this decidable;
@@ -392,20 +431,44 @@ def run_iteration_mut(prog_code: jnp.ndarray, node, ptr, scratch):
 # NOTE on ALU encoding: rows are [op, rd, rs1, rs2-as-imm-field]; the
 # three-register ALU forms read rs2 from the imm column (register index).
 # The assembler emits them accordingly (see Asm.add/sub/...), and validate()
-# bounds-checks the imm column for ALU ops via the register check on a/b and
-# the LOADN/LOADS checks; ALU imm indexes are clipped at runtime.
+# bounds-checks the imm column for ALU ops like any other register index.
 
 
-def as_pulse_iterator(prog: Program) -> PulseIterator:
+def as_pulse_iterator(
+    prog: Program,
+    *,
+    verify: bool = True,
+    node_ptr_slots=None,
+    scratch_ptr_slots=None,
+) -> PulseIterator:
     """Wrap an encoded program as a PulseIterator (the accelerator path).
+
+    With ``verify=True`` (the default) the program is admitted through
+    pulse-verify (``core.verify``): unsafe programs raise ``VerifyError``
+    with instruction-level diagnostics, and accepted ones carry their
+    ``ProgramFacts`` certificate on the returned iterator -- the
+    reachability-based ``facts.mutates`` decides the read-vs-write path, so
+    dead store-class code no longer forces a program onto the mutating
+    record format.  ``verify=False`` skips admission and falls back to the
+    conservative opcode scan (``Program.mutates``).
 
     Read-only programs supply the fused ``step_fn`` -- one VM pass yields
     (done, new_ptr, scratch), matching the hardware where a single
     logic-pipeline activation ends in either NEXT_ITER or RETURN.  Programs
-    using the store class supply ``mut_fn`` instead, so the executors route
-    them through the commit machinery (a mutating program on the read path
-    would silently drop its stores).
+    that can reach the store class supply ``mut_fn`` instead, so the
+    executors route them through the commit machinery (a mutating program
+    on the read path would silently drop its stores).
     """
+    facts = None
+    if verify:
+        from repro.core import verify as verify_mod  # isa<->verify cycle
+
+        facts = verify_mod.verify_program(
+            prog,
+            node_ptr_slots=node_ptr_slots,
+            scratch_ptr_slots=scratch_ptr_slots,
+        )
+    mutates = facts.mutates if facts is not None else prog.mutates
     code = jnp.asarray(prog.code)
 
     def next_fn(node, ptr, scratch):
@@ -416,7 +479,7 @@ def as_pulse_iterator(prog: Program) -> PulseIterator:
         done, new_ptr, scr = run_iteration(code, node, ptr, scratch)
         return done, scr
 
-    if prog.mutates:
+    if mutates:
         def mut_fn(node, ptr, scratch):
             return run_iteration_mut(code, node, ptr, scratch)
 
@@ -427,6 +490,7 @@ def as_pulse_iterator(prog: Program) -> PulseIterator:
             end_fn=end_fn,
             mut_fn=mut_fn,
             name=prog.name,
+            facts=facts,
         )
 
     def step_fn(node, ptr, scratch):
@@ -441,4 +505,5 @@ def as_pulse_iterator(prog: Program) -> PulseIterator:
         end_fn=end_fn,
         step_fn=step_fn,
         name=prog.name,
+        facts=facts,
     )

@@ -69,6 +69,12 @@ class PulseIterator:
                 while a mutation is staged, so programs terminate only on a
                 clean (no-write) iteration after observing their commit.
       name:     for dispatch-engine reports.
+      facts:    optional ``verify.ProgramFacts`` certificate (ISA programs
+                admitted through pulse-verify).  Excluded from eq/hash so
+                executable caches keyed on the iterator are unaffected; the
+                engine/routing layers read it to specialize hot paths
+                (mutation-lane skip, access-check elision) -- absent facts
+                mean "unverified": every conservative runtime check stays.
     """
 
     scratch_words: int
@@ -78,6 +84,7 @@ class PulseIterator:
     step_fn: Callable | None = None
     mut_fn: Callable | None = None
     name: str = "iterator"
+    facts: object | None = dataclasses.field(default=None, compare=False)
 
     @property
     def mutates(self) -> bool:
@@ -283,11 +290,20 @@ def execute_batched(
     *,
     max_iters: int,
     unroll: int = 1,
+    elide_access_check: bool = False,
 ):
     """Run a batch of traversals to completion on a single (unsharded) arena.
 
     This is the single-memory-node executor and the pure-JAX oracle the
     distributed engine (core.routing) is tested against.
+
+    ``elide_access_check=True`` drops the per-step owner-lookup +
+    access-table probe entirely.  Callers may set it only when the check is
+    statically constant-true: the iterator's pulse-verify certificate proves
+    PERM_READ suffices AND every shard of ``arena.perms`` grants PERM_READ
+    (see ``engine.can_elide_access_check``) -- then ``perm_ok=True`` is the
+    value the probe would have computed for every reachable pointer, so
+    results are bit-identical.
 
     Returns ``(ptr, scratch, status, iters)``.
     """
@@ -306,7 +322,9 @@ def execute_batched(
     # The per-shard grant table is loop-invariant: hoist it once instead of
     # re-deriving the permission bitmask from ``arena.perms`` on every unroll
     # step (only the owner lookup depends on the moving pointer).
-    readable = translation.access_table(arena.perms, PERM_READ)
+    readable = None if elide_access_check else translation.access_table(
+        arena.perms, PERM_READ
+    )
 
     def cond(state):
         _, _, status, _ = state
@@ -315,9 +333,12 @@ def execute_batched(
     def body(state):
         ptr, scratch, status, iters = state
         for _ in range(unroll):
-            perm = translation.check_access_table(
-                readable, translation.owner_of(arena.bounds, ptr)
-            )
+            if readable is None:
+                perm = True
+            else:
+                perm = translation.check_access_table(
+                    readable, translation.owner_of(arena.bounds, ptr)
+                )
             ptr, scratch, status, iters = step_batch(
                 it,
                 arena.data,

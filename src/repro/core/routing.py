@@ -180,8 +180,7 @@ def pack_requests(ids, home, ptr, scratch, mut_words: int = 0) -> jnp.ndarray:
     rec = rec.at[:, F_HOME].set(home)
     rec = rec.at[:, F_PTR].set(ptr)
     rec = rec.at[:, F_STATUS].set(STATUS_ACTIVE)
-    rec = rec.at[:, F_SCRATCH : F_SCRATCH + S].set(scratch)
-    return rec
+    return rec.at[:, F_SCRATCH : F_SCRATCH + S].set(scratch)
 
 
 def empty_records(n: int, scratch_words: int) -> jnp.ndarray:
@@ -275,6 +274,14 @@ CACHE_STATS = ExecutableCacheStats()
 _KERNEL_LOGIC: dict = {}
 
 
+def _is_vm_backed(it: PulseIterator) -> bool:
+    """True for iterators whose step/mut function is the ISA VM (carries the
+    ``__wrapped_program__`` marker the dispatch cost model also keys on)."""
+    return any(
+        hasattr(fn, "__wrapped_program__") for fn in (it.step_fn, it.mut_fn)
+    )
+
+
 def _kernel_logic(it: PulseIterator):
     fn = _KERNEL_LOGIC.get(it)
     if fn is None:
@@ -297,6 +304,7 @@ def _local_superstep(
     adaptive: bool = False,
     logic_fn=None,
     rep=None,
+    elide_access_check: bool = False,
 ):
     """Run up to ``k_local`` iterations for locally-owned ACTIVE requests.
 
@@ -312,11 +320,20 @@ def _local_superstep(
     while the primary is dead under ``"failover"``), reading from its
     replica rows.  A shard marked dead in ``dead_mask`` refuses service on
     its *own* range -- its arena is the one that failed.
+
+    ``elide_access_check=True`` replaces the per-shard PERM_READ probe with
+    constant True.  Only ``distributed_execute`` sets it, and only when the
+    iterator's pulse-verify certificate proves the traversal read-only AND
+    the host has checked every shard grants PERM_READ -- then the probe is
+    constant-true by construction and eliding it is bit-identical.
     """
     S = it.scratch_words
     lo = bounds[my_shard]
     hi = bounds[my_shard + 1]
-    perm_ok = translation.check_access(perms, my_shard, PERM_READ)
+    if elide_access_check:
+        perm_ok = True
+    else:
+        perm_ok = translation.check_access(perms, my_shard, PERM_READ)
     rep_kwargs = {}
     if rep is not None:
         rep_rows, primary_arr, dead_mask, policy = rep
@@ -384,8 +401,7 @@ def _local_superstep(
     pool = pool.at[:, F_PTR].set(ptr)
     pool = pool.at[:, F_SCRATCH:].set(scratch)
     pool = pool.at[:, F_STATUS].set(status)
-    pool = pool.at[:, F_ITERS].set(iters)
-    return pool
+    return pool.at[:, F_ITERS].set(iters)
 
 
 def _commit_phase(pool, rows, heap_row, lo, hi, my_shard, perm_w, *, S, W):
@@ -886,6 +902,7 @@ def make_superstep(
     drop_prob: float = 0.0,
     drop_seed: int = 0,
     replication: ReplicaPlan | None = None,
+    elide_access_check: bool = False,
 ):
     """Builds the jittable per-shard superstep: local run -> switch route.
 
@@ -940,6 +957,7 @@ def make_superstep(
         pool = _local_superstep(
             it, pool, arena_rows, bounds, perms, my_shard,
             k_local=k_local, max_iters=max_iters, logic_fn=logic_fn, rep=rep,
+            elide_access_check=elide_access_check,
         )
         if do_route:
             pool, n_routed, n_drop = _route(
@@ -1080,6 +1098,7 @@ def make_fused_loop(
     mutate: bool = False,
     drop_prob: float = 0.0,
     drop_seed: int = 0,
+    elide_access_check: bool = False,
 ):
     """Builds the whole-traversal device-resident loop (one shard's view).
 
@@ -1225,6 +1244,7 @@ def make_fused_loop(
             pool = _local_superstep(
                 it, pool, arena_rows, bounds, perms, my_shard,
                 k_local=k_local, max_iters=iter_budget, logic_fn=logic_fn,
+                elide_access_check=elide_access_check,
             )
             # the host loop's ladder on stale-by-one counts (shared with the
             # pipelined schedule -- see _ladder_traced)
@@ -1313,6 +1333,7 @@ def make_pipelined_loop(
     mutate: bool = False,
     drop_prob: float = 0.0,
     drop_seed: int = 0,
+    elide_access_check: bool = False,
 ):
     """Wavefront-pipelined whole-traversal loop (one shard's view).
 
@@ -1512,6 +1533,7 @@ def make_pipelined_loop(
                 it, p, arena_rows, bounds, perms, my_shard,
                 k_local=k_local, max_iters=iter_budget,
                 adaptive=True, logic_fn=logic_fn,
+                elide_access_check=elide_access_check,
             )
 
         def cond(carry):
@@ -1643,6 +1665,7 @@ def get_fused_runner(
     mutate: bool = False,
     drop_prob: float = 0.0,
     drop_seed: int = 0,
+    elide_access_check: bool = False,
 ):
     """Cached, jitted, donated whole-traversal executable (fused or
     wavefront-pipelined schedule).
@@ -1667,7 +1690,7 @@ def get_fused_runner(
         it, mesh, axis_name, num_shards, pool_rows, scratch_words, k_local,
         max_supersteps, base_capacity, min_link_capacity,
         return_to_cpu, compact, schedule, fabric, local_backend, mutate,
-        drop_prob, drop_seed,
+        drop_prob, drop_seed, elide_access_check,
     )
     fn = _FUSED_CACHE.get(key)
     if fn is None:
@@ -1682,6 +1705,7 @@ def get_fused_runner(
                 return_to_cpu=return_to_cpu, compact=compact,
                 fabric=fabric, local_backend=local_backend, mutate=mutate,
                 drop_prob=drop_prob, drop_seed=drop_seed,
+                elide_access_check=elide_access_check,
             )
         else:
             loop = make_fused_loop(
@@ -1693,6 +1717,7 @@ def get_fused_runner(
                 return_to_cpu=return_to_cpu, compact=compact,
                 fabric=fabric, local_backend=local_backend, mutate=mutate,
                 drop_prob=drop_prob, drop_seed=drop_seed,
+                elide_access_check=elide_access_check,
             )
         # trailing P() pair: the traced iter_budget and halt scalars
         if mutate:
@@ -1718,6 +1743,27 @@ def get_fused_runner(
     return fn
 
 
+def can_elide_access_check(it: PulseIterator, arena: Arena) -> bool:
+    """True when the per-hop PERM_READ probe is statically constant-true.
+
+    Two proofs combine: the iterator's pulse-verify certificate
+    (``it.facts``) shows the traversal only ever reads (``facts.read_only``
+    -- no store-class op on any reachable path, so PERM_READ is the entire
+    required mask), and a host-side scan shows every shard of
+    ``arena.perms`` grants PERM_READ.  Under both, ``check_access`` would
+    return True for every pointer the traversal can present -- local,
+    remote, or faulting-on-NULL alike -- so replacing the probe with the
+    constant is bit-identical.  Unverified iterators (``facts is None``)
+    never qualify: absence of a certificate means every conservative
+    runtime check stays.
+    """
+    facts = it.facts
+    if facts is None or not getattr(facts, "read_only", False) or it.mutates:
+        return False
+    perms = np.asarray(arena.perms)
+    return bool(np.all((perms & PERM_READ) == PERM_READ))
+
+
 def distributed_execute(
     it: PulseIterator,
     arena: Arena,
@@ -1738,6 +1784,7 @@ def distributed_execute(
     local_backend: str = "xla",
     fault_injector=None,
     replication: ReplicaContext | None = None,
+    elide_access_check: bool | None = None,
 ):
     """Run a batch of traversals over a range-partitioned arena on a mesh.
 
@@ -1813,6 +1860,15 @@ def distributed_execute(
     stays at the pre-call state -- the recovery anchor), fabric loss parks
     and retransmits records under a seeded mask, and a straggler delay
     sleeps the dispatched host loop per superstep.
+
+    ``elide_access_check=None`` (default) auto-specializes: when the
+    iterator carries a pulse-verify certificate proving it read-only and
+    every shard grants PERM_READ (``can_elide_access_check``), the per-hop
+    protection probe compiles away -- bit-identical by construction, since
+    the probe would have been constant True.  ``False`` forces the
+    unspecialized path (the oracle for the bit-identity gate); ``True``
+    asserts the caller's own proof and raises if the iterator mutates or
+    replication is active.
     """
     kill_at = None
     delay_s = 0.0
@@ -1861,6 +1917,21 @@ def distributed_execute(
             raise ValueError(
                 "replication runs on the dispatched schedule (results are "
                 "schedule-invariant, so degraded rounds fall back to it)"
+            )
+    if elide_access_check is None:
+        # analysis-driven specialization: drop the per-hop PERM_READ probe
+        # when the pulse-verify certificate + a host-side perms scan prove it
+        # constant-true.  Replication rounds keep the probe: the replica path
+        # carries its own primary-grant check and degraded-mode perms may
+        # change between rounds.
+        elide_access_check = replication is None and can_elide_access_check(
+            it, arena
+        )
+    elif elide_access_check:
+        if mutate or replication is not None:
+            raise ValueError(
+                "elide_access_check=True is only sound for verified "
+                "read-only traversals without replication"
             )
     fused = schedule in ("fused", "pipelined")
     num_shards = arena.num_shards
@@ -1934,6 +2005,7 @@ def distributed_execute(
             return_to_cpu=return_to_cpu, compact=compact,
             schedule=schedule, fabric=fabric, local_backend=local_backend,
             mutate=mutate, drop_prob=drop_prob, drop_seed=drop_seed,
+            elide_access_check=elide_access_check,
         )
         # the quantum rides in as a traced operand: every budget value is a
         # cache hit on the same executable (int32 is safe -- callers cap
@@ -2013,6 +2085,7 @@ def distributed_execute(
             it, mesh, axis_name, num_shards, k_local, max_iters,
             return_to_cpu, drain_done, capacity, do_route, fabric,
             local_backend, mutate, drop_prob, drop_seed, rep_plan,
+            elide_access_check,
         )
         if key not in _STEP_CACHE:
             CACHE_STATS.misses += 1
@@ -2024,6 +2097,7 @@ def distributed_execute(
                 do_route=do_route, fabric=fabric, local_backend=local_backend,
                 mutate=mutate, drop_prob=drop_prob, drop_seed=drop_seed,
                 replication=rep_plan,
+                elide_access_check=elide_access_check,
             )
             # replication adds (holder-sharded replica rows, replicated
             # dead mask); fault-injected fabric loss adds one trailing
@@ -2042,10 +2116,14 @@ def distributed_execute(
                     (P(axis_name), P(axis_name), P(), P()) + rep_specs + drop_specs
                 )
                 out_specs = (P(axis_name), P(), P(), P(), P())
+            # ISA-VM iterators run a lax.while_loop per step (the bounded
+            # bytecode interpreter), which shard_map's replication checker
+            # cannot analyze -- use the unchecked shim for those, exactly as
+            # the fused/pipelined loops always do; traced iterators keep the
+            # checked wrapper as a free structural safety net.
+            sm = shard_map_unchecked if _is_vm_backed(it) else shard_map
             _STEP_CACHE[key] = jax.jit(
-                shard_map(
-                    superstep, mesh=mesh, in_specs=in_specs, out_specs=out_specs
-                )
+                sm(superstep, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
             )
         else:
             CACHE_STATS.hits += 1

@@ -51,8 +51,7 @@ def tokens_for(cfg: DataConfig, step: int) -> np.ndarray:
     h = _hash_u32(grid)
     # unigram skew: square the uniform draw -> Zipf-ish head
     u = h.astype(np.float64) / 2**32
-    toks = (u * u * (cfg.vocab - 2)).astype(np.int32) + 1
-    return toks
+    return (u * u * (cfg.vocab - 2)).astype(np.int32) + 1
 
 
 def pack_documents(doc_lengths: np.ndarray, seq_len: int):

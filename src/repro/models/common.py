@@ -27,7 +27,7 @@ def stack_scan(body, carry, xs, use_scan: bool = True):
     n = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(n):
-        x_i = jax.tree.map(lambda a: a[i], xs)
+        x_i = jax.tree.map(lambda a, i=i: a[i], xs)
         carry, y = body(carry, x_i)
         ys.append(y)
     if ys and jax.tree.leaves(ys[0]):
@@ -108,8 +108,7 @@ def sinusoidal_positions(length: int, dim: int):
     div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim))
     pe = jnp.zeros((length, dim), jnp.float32)
     pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
-    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
-    return pe
+    return pe.at[:, 1::2].set(jnp.cos(pos * div))
 
 
 def swiglu_init(key, d_model, d_ff, dtype, stack=None):

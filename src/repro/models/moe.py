@@ -115,8 +115,7 @@ def _moe_local(p, cfg, x_flat, my_rank, ep, compute_dtype):
     y_copies = yb_pad[y_copy_slot] * jnp.where(fits, copies_w, 0.0)[:, None].astype(
         yb.dtype
     )
-    y = jnp.zeros((T, D), yb.dtype).at[copies_t].add(y_copies)
-    return y
+    return jnp.zeros((T, D), yb.dtype).at[copies_t].add(y_copies)
 
 
 def moe_apply(p, cfg, x, *, mesh=None, compute_dtype=None):

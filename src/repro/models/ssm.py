@@ -41,7 +41,7 @@ def ssm_init(key, cfg, *, stack=None):
     dt_bias = jax.random.uniform(
         ks[3], shp(H), minval=math.log(1e-3), maxval=math.log(1e-1)
     )
-    p = {
+    return {
         # in_proj emits [z, x, B, C, dt]
         "in_proj": dense_init(ks[0], D, 2 * d_inner + 2 * N + H, cfg.param_dtype, stack=stack),
         "conv_w": (jax.random.normal(ks[1], shp(CONV_K, conv_dim)) * 0.1).astype(cfg.param_dtype),
@@ -54,7 +54,6 @@ def ssm_init(key, cfg, *, stack=None):
         "norm": rmsnorm_init(d_inner, cfg.param_dtype, stack=stack),
         "out_proj": dense_init(ks[4], d_inner, D, cfg.param_dtype, stack=stack),
     }
-    return p
 
 
 def _split_proj(cfg, proj):

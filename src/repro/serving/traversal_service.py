@@ -314,6 +314,16 @@ class PulseService:
         # from a full read group; the evictee requeues at its original
         # arrival order and resumes where it stopped.
         self.preempt = preempt
+        # Admission-time static verification (pulse-verify): an ISA-backed
+        # spec whose iterator carries no certificate is verified HERE --
+        # before any slot group exists, so an unsafe tenant program is
+        # rejected with instruction-level diagnostics rather than faulting
+        # mid-traversal on a remote shard.  Iterators built through
+        # ``isa.as_pulse_iterator`` arrive already certified (facts set) and
+        # skip the re-analysis; hand-written JAX iterators have no Program
+        # to analyze and stay under the conservative runtime checks.
+        for name, spec in structures.items():
+            self._verify_spec(name, spec)
         self.groups = {
             name: _SlotGroup(name, spec, slots_per_structure)
             for name, spec in structures.items()
@@ -399,6 +409,38 @@ class PulseService:
                 self._probe_shard(s, warm=True)
 
     # ------------------------------ intake -----------------------------------
+
+    @staticmethod
+    def _verify_spec(name: str, spec: StructureSpec) -> None:
+        """Reject-before-enqueue: statically verify an ISA-backed spec.
+
+        A ``PulseIterator`` built by ``isa.as_pulse_iterator`` already went
+        through pulse-verify (``facts`` is set) -- nothing to do.  One built
+        around a raw ``Program`` some other way (facts absent but a
+        ``__wrapped_program__`` attached to its step/mut function) is
+        verified now; rejection raises the verifier's ``VerifyError`` --
+        structured, instruction-pointed diagnostics under ``.diagnostics``
+        -- annotated with the structure name, and the service never
+        constructs a slot group for it.
+        """
+        it = spec.iterator
+        if it.facts is not None:
+            return
+        prog = None
+        for fn in (it.step_fn, it.mut_fn):
+            prog = getattr(fn, "__wrapped_program__", None)
+            if prog is not None:
+                break
+        if prog is None:
+            return  # hand-written JAX iterator: no Program to analyze
+        from repro.core.verify import VerifyError, verify_program
+
+        try:
+            verify_program(prog)
+        except VerifyError as e:
+            raise VerifyError(
+                f"{e.name} (registered as structure {name!r})", e.diagnostics
+            ) from None
 
     def submit(self, req: TraversalRequest) -> None:
         """Queue a request for admission (arrive_round gates logical time)."""

@@ -1,0 +1,536 @@
+"""pulse-verify: the eBPF-style static verifier for PULSE ISA programs.
+
+Covers the admission pass itself (mutant corpus with expected diagnostic
+codes, certificate facts), build-time assembler/Program validation, the
+serving layer's reject-before-enqueue, the CLI + golden disasm files, a
+random-program property test (accepted => runs to RET/budget without
+faults on a compatible arena), and the 8-shard read-only specialization
+bit-identity gate (subprocess, like the other distributed suites).
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import isa
+from repro.core.isa import (
+    FREE,
+    GETPTR,
+    JMP,
+    JNE,
+    LOADN,
+    LOADS,
+    MOVE,
+    MOVI,
+    NEXT_ITER,
+    RETURN,
+    SETPTR,
+    STOREN,
+    STORES,
+    Asm,
+    Program,
+)
+from repro.core.structures import isa_programs
+from repro.core.verify import (
+    E_BAD_OPCODE,
+    E_DOUBLE_STAGE,
+    E_FALLTHROUGH,
+    E_HALT,
+    E_JUMP_RANGE,
+    E_LOOP,
+    E_NODE_RANGE,
+    E_PROVENANCE,
+    E_REG_RANGE,
+    E_SCRATCH_RANGE,
+    E_UNDEF_READ,
+    E_UNREACHABLE,
+    ProgramFacts,
+    VerifyError,
+    analyze_program,
+    annotate_disasm,
+    verify_program,
+)
+
+ROOT = Path(__file__).resolve().parents[1]
+GOLDEN = ROOT / "tests" / "golden" / "pulse_verify"
+
+
+def _mutate(prog: Program, row: int, values, name="mutant") -> Program:
+    code = prog.code.copy()
+    code[row] = values
+    return Program(code, prog.scratch_words, prog.node_words, name=name)
+
+
+def _codes(prog: Program):
+    _, diags = analyze_program(prog)
+    return {d.code for d in diags}, diags
+
+
+# ------------------------- shipped programs verify clean ---------------------
+
+
+def test_all_shipped_programs_verify_clean():
+    for name, prog in isa_programs.all_programs().items():
+        facts = verify_program(prog)  # raises on rejection
+        assert isinstance(facts, ProgramFacts), name
+        assert facts.scratch_words_used <= prog.scratch_words
+
+
+def test_facts_read_write_split():
+    ro = verify_program(isa_programs.list_find_program())
+    rw = verify_program(isa_programs.bst_update_program())
+    assert ro.read_only and not ro.mutates
+    assert rw.mutates and not rw.read_only
+    from repro.core.arena import PERM_READ, PERM_WRITE
+
+    assert ro.perm_mask == PERM_READ
+    assert rw.perm_mask == (PERM_READ | PERM_WRITE)
+
+
+def test_facts_max_path_matches_dispatch_model():
+    from repro.core.dispatch import isa_longest_path
+
+    for prog in isa_programs.all_programs().values():
+        assert verify_program(prog).max_path_len == isa_longest_path(prog)
+
+
+# ------------------------------ mutant corpus --------------------------------
+# ~10 corrupted shipped programs; every one must be rejected with the
+# expected diagnostic code pointing at the corrupted instruction.
+
+LIST = isa_programs.list_find_program
+UPD = isa_programs.bst_update_program
+
+MUTANTS = [
+    # (name, program-builder, expected code, expected pc)
+    ("bad_opcode", lambda: _mutate(LIST(), 3, [99, 0, 0, 0]), E_BAD_OPCODE, 3),
+    (
+        "jump_past_end",
+        lambda: _mutate(LIST(), 5, [JNE, 0, 1, 99]),
+        E_JUMP_RANGE,
+        5,
+    ),
+    (
+        "register_out_of_range",
+        lambda: _mutate(LIST(), 0, [LOADS, 20, 0, 0]),
+        E_REG_RANGE,
+        0,
+    ),
+    (
+        "node_index_out_of_range",
+        lambda: _mutate(LIST(), 1, [LOADN, 1, 0, 7]),
+        E_NODE_RANGE,
+        1,
+    ),
+    (
+        "scratch_index_out_of_range",
+        lambda: _mutate(LIST(), 6, [STORES, 2, 0, 9]),
+        E_SCRATCH_RANGE,
+        6,
+    ),
+    (
+        "falls_off_end",
+        lambda: Program(LIST().code[:16], 3, 4, name="truncated"),
+        E_FALLTHROUGH,
+        14,
+    ),
+    ("halt_reachable", lambda: _mutate(LIST(), 9, [0, 0, 0, 0]), E_HALT, 9),
+    (
+        "backward_jump_loop",
+        lambda: _mutate(LIST(), 14, [JNE, 3, 4, 5]),
+        E_LOOP,
+        None,  # the whole cycle is implicated, not one pc
+    ),
+    (
+        "unreachable_code",
+        lambda: _mutate(LIST(), 5, [JMP, 0, 0, 10]),
+        E_UNREACHABLE,
+        6,
+    ),
+    (
+        "use_before_def",
+        lambda: _mutate(LIST(), 0, [MOVE, 0, 7, 0]),
+        E_UNDEF_READ,
+        0,
+    ),
+    (
+        "dead_store_after_terminal",
+        lambda: Program(
+            np.vstack([LIST().code, [[STOREN, 2, 0, 1]]]), 3, 4, name="dead"
+        ),
+        E_UNREACHABLE,
+        17,
+    ),
+    (
+        "free_while_store_staged",
+        lambda: _mutate(UPD(), 13, [FREE, 9, 0, 0]),
+        E_DOUBLE_STAGE,
+        13,
+    ),
+    (
+        "setptr_without_provenance",
+        lambda: _mutate(UPD(), 12, [SETPTR, 7, 0, 1]),
+        E_PROVENANCE,
+        12,
+    ),
+]
+
+
+@pytest.mark.parametrize("name,build,code,pc", MUTANTS, ids=[m[0] for m in MUTANTS])
+def test_mutant_rejected_with_expected_code(name, build, code, pc):
+    prog = build()
+    with pytest.raises(VerifyError) as ei:
+        verify_program(prog)
+    err = ei.value
+    assert code in err.codes, (name, err.codes)
+    if pc is not None:
+        assert any(d.pc == pc for d in err.diagnostics if d.code == code), (
+            name,
+            [(d.code, d.pc) for d in err.diagnostics],
+        )
+    # diagnostics render instruction-pointed messages
+    assert any(f"pc {d.pc}" in str(err) or f"pc={d.pc}" in str(err)
+               or str(d.pc) in str(err) for d in err.diagnostics)
+
+
+def test_mutant_corpus_is_fully_rejected():
+    """The acceptance gate: 100% of the corpus rejected."""
+    rejected = 0
+    for _, build, _, _ in MUTANTS:
+        _, diags = analyze_program(build())
+        rejected += bool(diags)
+    assert rejected == len(MUTANTS)
+
+
+def test_verify_error_is_structured():
+    with pytest.raises(VerifyError) as ei:
+        verify_program(_mutate(LIST(), 3, [99, 0, 0, 0], name="structured"))
+    e = ei.value
+    assert e.name == "structured"
+    assert isinstance(e.codes, tuple) and E_BAD_OPCODE in e.codes
+    assert isinstance(e, ValueError)  # registration sites catching ValueError
+
+
+# --------------------- build-time validation (Asm / Program) -----------------
+
+
+def test_asm_rejects_duplicate_label():
+    a = Asm(scratch_words=1, node_words=2)
+    a.label("top")
+    a.movi(0, 1)
+    with pytest.raises(ValueError, match="duplicate label"):
+        a.label("top")
+
+
+def test_asm_rejects_alu_register_out_of_range():
+    a = Asm(scratch_words=1, node_words=2)
+    a.movi(0, 1)
+    a.movi(1, 2)
+    a.add(2, 0, 20)  # rs2 rides the imm field; 20 >= NUM_REGS
+    a.ret()
+    with pytest.raises(ValueError, match="register 20 out of range"):
+        a.finish()
+
+
+@pytest.mark.parametrize(
+    "kwargs,match",
+    [
+        (dict(code=np.zeros((0, 4), np.int32)), "empty program"),
+        (dict(code=np.zeros((3, 3), np.int32)), r"\(T, 4\)"),
+        (dict(code=np.zeros((3, 4), np.float32)), "integer"),
+        (dict(code=np.zeros((3, 4), np.int32), scratch_words=-1), "scratch_words"),
+        (dict(code=np.zeros((3, 4), np.int32), node_words=0), "node_words"),
+    ],
+)
+def test_program_structural_validation(kwargs, match):
+    base = dict(code=None, scratch_words=2, node_words=4)
+    base.update(kwargs)
+    with pytest.raises(ValueError, match=match):
+        Program(base["code"], base["scratch_words"], base["node_words"])
+
+
+def test_asm_jump_past_end_fails_at_finish():
+    a = Asm(scratch_words=1, node_words=2)
+    a.movi(0, 0)
+    a.jmp("nowhere")
+    a.ret()
+    with pytest.raises(ValueError, match="undefined label"):
+        a.finish()  # unresolved label: fails at build, not mid-traversal
+
+
+# ---------------------- as_pulse_iterator admission --------------------------
+
+
+@pytest.mark.slow
+def test_as_pulse_iterator_verifies_by_default():
+    with pytest.raises(VerifyError):
+        isa.as_pulse_iterator(_mutate(LIST(), 3, [99, 0, 0, 0]))
+    vm = isa.as_pulse_iterator(isa_programs.list_find_program())
+    assert vm.facts is not None and vm.facts.read_only
+    unchecked = isa.as_pulse_iterator(
+        isa_programs.list_find_program(), verify=False
+    )
+    assert unchecked.facts is None  # conservative fallback path
+
+
+@pytest.mark.slow
+def test_dead_store_demotion_to_read_only_path():
+    """Satellite: Program.mutates over-approximates; facts.mutates decides.
+
+    The dead-store variant is rejected outright by the verifier (unreachable
+    code).  Unverified, the conservative opcode scan routes it down the
+    mutating path; the verified original supplies step_fn (read path).
+    """
+    dead = Program(
+        np.vstack([LIST().code, [[STOREN, 2, 0, 1]]]), 3, 4, name="dead"
+    )
+    assert dead.mutates  # whole-array opcode scan
+    vm_rw = isa.as_pulse_iterator(dead, verify=False)
+    assert vm_rw.mutates and vm_rw.mut_fn is not None
+    vm_ro = isa.as_pulse_iterator(isa_programs.list_find_program())
+    assert not vm_ro.mutates and vm_ro.step_fn is not None
+
+
+# ----------------------- serving: reject-before-enqueue ----------------------
+
+
+@pytest.mark.slow
+def test_service_rejects_unverified_unsafe_program_at_registration():
+    import jax.numpy as jnp
+
+    from repro.core.engine import PulseEngine
+    from repro.core.structures import linked_list
+    from repro.serving.traversal_service import PulseService, StructureSpec
+
+    keys = np.arange(32, dtype=np.int32)
+    values = np.arange(32, dtype=np.int32)
+    ar, head = linked_list.build(keys, values)
+    engine = PulseEngine(ar)
+    bad = _mutate(LIST(), 14, [JNE, 3, 4, 5], name="looping_find")
+    spec = StructureSpec(
+        iterator=isa.as_pulse_iterator(bad, verify=False),  # sneaks past build
+        init_args=(head,),
+    )
+    with pytest.raises(VerifyError, match="looping_find") as ei:
+        PulseService(engine, {"lst": spec})
+    assert "lst" in str(ei.value)  # names the structure being registered
+    assert E_LOOP in ei.value.codes
+
+    # a certified spec (facts already attached) registers without re-analysis
+    ok = StructureSpec(
+        iterator=isa.as_pulse_iterator(isa_programs.list_find_program()),
+        init_args=(head,),
+    )
+    svc = PulseService(engine, {"lst": ok})
+    assert "lst" in svc.groups
+    # hand-written JAX iterators have no Program to analyze: accepted as-is
+    svc2 = PulseService(
+        engine,
+        {"lst": StructureSpec(iterator=linked_list.find_iterator(),
+                              init_args=(head,))},
+    )
+    assert "lst" in svc2.groups
+
+
+# ------------------------------- CLI + goldens -------------------------------
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "pulse_verify.py"), *args],
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+
+
+def test_cli_verifies_all_shipped_programs():
+    proc = _run_cli("--all")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    for name in isa_programs.all_programs():
+        assert f"OK     {name}" in proc.stdout
+    assert "REJECT" not in proc.stdout
+
+
+def test_cli_golden_disasm_files_are_current():
+    proc = _run_cli("--all", "--golden", str(GOLDEN))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "DRIFT" not in proc.stdout
+
+
+def test_cli_unknown_program_is_a_usage_error():
+    proc = _run_cli("no_such_program")
+    assert proc.returncode == 2
+
+
+def test_golden_files_match_annotate_disasm():
+    for name, prog in isa_programs.all_programs().items():
+        golden = (GOLDEN / f"{name}.disasm").read_text()
+        assert golden == annotate_disasm(prog)
+        assert "verdict: OK" in golden
+
+
+# --------------------- property test: accepted => runs clean -----------------
+
+
+def _compatible_arena(capacity=48, node_words=4):
+    """Every node word is a valid in-range pointer and every shard grants
+    READ|WRITE: the only ways a traversal can fault are verifier-caught."""
+    import jax.numpy as jnp
+
+    from repro.core.arena import HEAP_WORDS, PERM_READ, PERM_WRITE, Arena
+
+    data = (
+        (np.arange(capacity)[:, None] * 7 + np.arange(node_words)[None, :] * 3)
+        % capacity
+    ).astype(np.int32)
+    return Arena(
+        data=jnp.asarray(data),
+        bounds=jnp.asarray([0, capacity], jnp.int32),
+        perms=jnp.asarray([PERM_READ | PERM_WRITE], jnp.int32),
+        heap=jnp.zeros((1, HEAP_WORDS), jnp.int32),
+    )
+
+
+def _random_program(rng: np.random.Generator) -> Program:
+    """Biased random generator: mostly-plausible read-only programs.
+
+    Store-class ops are excluded on purpose -- arbitrary masked stores would
+    corrupt the arena's every-word-is-a-pointer invariant, making runtime
+    translation faults a *data* property rather than something the verifier
+    could ever prove.  The write path's staging discipline is covered by the
+    mutant corpus above.
+    """
+    S, W = 3, 4
+    n_body = int(rng.integers(3, 10))
+    rows = []
+    defined = []
+    ptr_regs = []  # defined by LOADN/GETPTR: provenance-safe NEXT_ITER args
+
+    def reg(defined_bias=0.85):
+        if defined and rng.random() < defined_bias:
+            return int(rng.choice(defined))
+        return int(rng.integers(0, 18))  # sometimes invalid / undefined
+
+    for _ in range(n_body):
+        k = rng.random()
+        rd = int(rng.integers(0, 8))
+        if k < 0.2:
+            rows.append([MOVI, rd, 0, int(rng.integers(-4, 4))])
+        elif k < 0.4:
+            rows.append([LOADN, rd, 0, int(rng.integers(0, W + 1))])
+            ptr_regs.append(rd)
+        elif k < 0.5:
+            rows.append([LOADS, rd, 0, int(rng.integers(0, S + 1))])
+        elif k < 0.6:
+            rows.append([STORES, reg(), 0, int(rng.integers(0, S + 1))])
+            continue  # no def
+        elif k < 0.7:
+            rows.append([GETPTR, rd, 0, 0])
+            ptr_regs.append(rd)
+        elif k < 0.85:
+            op = int(rng.choice([isa.ADD, isa.SUB, isa.AND, isa.OR]))
+            rows.append([op, rd, reg(), reg()])
+        else:
+            # forward conditional jump: sometimes to the terminal, sometimes
+            # past the end of the program (the verifier's problem, not ours)
+            tgt = int(rng.integers(len(rows) + 1, n_body + 3))
+            rows.append([JNE, reg(), reg(), tgt])
+            continue
+        defined.append(rd)
+    # single reachable terminal at pc == n_body (jumps may legally target it)
+    if ptr_regs and rng.random() < 0.7:
+        rows.append([NEXT_ITER, int(rng.choice(ptr_regs)), 0, 0])
+    else:
+        rows.append([RETURN, 0, 0, 0])
+    return Program(
+        np.asarray(rows, np.int32), S, W, name=f"fuzz_{rng.integers(1 << 30)}"
+    )
+
+
+def _fuzz_accepted_programs_run_clean(rng, want_accepted, max_tries):
+    from repro.core.iterator import STATUS_FAULT, execute_batched
+
+    ar = _compatible_arena()
+    accepted = tries = 0
+    while accepted < want_accepted and tries < max_tries:
+        tries += 1
+        prog = _random_program(rng)
+        facts, diags = analyze_program(prog)
+        if diags:
+            continue
+        accepted += 1
+        assert facts is not None and not facts.mutates  # store-class excluded
+        vm = isa.as_pulse_iterator(prog)
+        ptr0 = np.asarray([0, 5, 11, 23], np.int32)
+        scr0 = np.zeros((4, prog.scratch_words), np.int32)
+        ptr, scr, status, iters = execute_batched(
+            vm, ar, ptr0, scr0, max_iters=6
+        )
+        status = np.asarray(status)
+        assert not (status == STATUS_FAULT).any(), (
+            prog.name, annotate_disasm(prog), status,
+        )
+        assert (np.asarray(iters) <= 6).all()
+    assert accepted >= min(want_accepted, 3), (
+        f"generator too strict: {accepted} accepted in {tries} tries"
+    )
+
+
+@pytest.mark.slow
+def test_fuzz_accepted_programs_run_to_ret_or_budget():
+    _fuzz_accepted_programs_run_clean(
+        np.random.default_rng(7), want_accepted=10, max_tries=600
+    )
+
+
+@pytest.mark.slow
+def test_hypothesis_accepted_programs_run_clean():
+    hyp = pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis not installed (pip install -r requirements-dev.txt)",
+    )
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def run(seed):
+        _fuzz_accepted_programs_run_clean(
+            np.random.default_rng(seed), want_accepted=2, max_tries=120
+        )
+
+    run()
+
+
+def test_fuzz_generator_rejections_are_diagnosed():
+    """Rejected random programs always carry instruction-pointed findings."""
+    rng = np.random.default_rng(11)
+    rejected = 0
+    for _ in range(200):
+        prog = _random_program(rng)
+        _, diags = analyze_program(prog)
+        if diags:
+            rejected += 1
+            for d in diags:
+                assert d.code and 0 <= d.pc < len(prog) or d.pc == -1
+    assert rejected > 0
+
+
+# --------------------- 8-shard specialization bit-identity -------------------
+
+
+@pytest.mark.slow
+def test_verify_specialization_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # the helper sets its own
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "helpers" / "verify_checks.py")],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL VERIFY SPECIALIZATION CHECKS PASSED" in proc.stdout
